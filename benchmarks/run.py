@@ -1,0 +1,268 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract), then a
+human-readable block per benchmark.
+
+  fig5_llc_missrate   — paper Fig. 5: STREAM @ {2,4,6,8}xL2, two CPU models
+  interleave_sweep    — paper §IV: DRAM:CXL page-interleave ratio sweep
+  latency_bandwidth   — paper §III-B.2/§V: idle latency breakdown + loaded
+                        latency ("banana") curves per tier
+  programming_models  — paper §IV: zNUMA vs flat vs weighted interleave
+  kv_tiering          — paper §I use-case: KV-cache spill plan + paged pool
+  kernels_micro       — Pallas kernel micro-bench (interpret mode on CPU)
+  roofline_summary    — reads experiments/roofline JSON (dry-run derived)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.core import CXLRAMSim, SimConfig
+from repro.core import cache as cache_mod
+from repro.core import numa
+from repro.core.machine import CPUModel
+from repro.core.timing import TimingConfig, latency_bandwidth_curve
+from repro.kernels import ops
+from repro.memory import plan_serving, plan_training
+from repro.memory.kvcache import PagedKVCache
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    ROWS.append(f"{name},{us:.1f},{derived}")
+
+
+def _sim(l2_kib: int = 128) -> CXLRAMSim:
+    s = CXLRAMSim(SimConfig(
+        dram_gib=16, expander_gib=(16,),
+        cache=cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                                    l2_bytes=l2_kib * 1024, l2_ways=8)))
+    s.online("znuma")
+    return s
+
+
+# ---------------------------------------------------------------------------
+def fig5_llc_missrate() -> None:
+    """Fig. 5: LLC miss rate, STREAM at k x L2, Timing(inorder) vs O3."""
+    sim = _sim()
+    print("\n== fig5_llc_missrate (paper Fig. 5) ==")
+    print(f"{'kxL2':>5} {'cpu':>8} {'llc_miss':>9} {'time_ms':>9} "
+          f"{'bw_GB/s':>8}")
+    for cpu in (CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8)):
+        t0 = time.time()
+        rows = sim.stream_suite(footprint_factors=(2, 4, 6, 8),
+                                policy=numa.ZNuma(1.0), cpu=cpu)
+        dt = (time.time() - t0) * 1e6 / len(rows)
+        for r in rows:
+            print(f"{r['footprint_x_l2']:>5} {r['cpu']:>8} "
+                  f"{r['l2_miss_rate']:>9.3f} {r['time_ns']/1e6:>9.2f} "
+                  f"{r['bw_total_gbps']:>8.2f}")
+        emit(f"fig5_{cpu.kind}", dt,
+             f"llc_miss@8x={rows[-1]['l2_miss_rate']:.3f}")
+
+
+def interleave_sweep() -> None:
+    """§IV: OS page-interleave ratio between system DRAM and CXL."""
+    sim = _sim()
+    fp = 4 * sim.config.cache.l2_bytes
+    print("\n== interleave_sweep (paper §IV) ==")
+    print(f"{'policy':>18} {'time_ms':>9} {'bw_GB/s':>8} {'bw_dram':>8} "
+          f"{'bw_cxl':>8} {'lat_cxl_ns':>10}")
+    policies = [("dram-only", numa.ZNuma(0.0)),
+                ("4:1", numa.WeightedInterleave(4, 1)),
+                ("2:1", numa.WeightedInterleave(2, 1)),
+                ("1:1", numa.WeightedInterleave(1, 1)),
+                ("1:2", numa.WeightedInterleave(1, 2)),
+                ("cxl-only", numa.ZNuma(1.0))]
+    base = None
+    for name, pol in policies:
+        t0 = time.time()
+        r = sim.run_stream("triad", fp, pol)
+        us = (time.time() - t0) * 1e6
+        base = base or r.time_ns
+        print(f"{name:>18} {r.time_ns/1e6:>9.2f} "
+              f"{r.achieved_gbps['total']:>8.2f} "
+              f"{r.achieved_gbps['dram']:>8.2f} "
+              f"{r.achieved_gbps['cxl']:>8.2f} "
+              f"{r.loaded_latency_ns['cxl']:>10.1f}")
+        emit(f"interleave_{name}", us,
+             f"slowdown={r.time_ns/base:.2f}x")
+
+
+def latency_bandwidth() -> None:
+    """§III-B.2/§V: stage breakdown + loaded-latency curves."""
+    t = TimingConfig()
+    print("\n== latency_bandwidth (paper §III-B.2, §V) ==")
+    print("CXL stage breakdown:", {k: round(v, 1) for k, v
+                                   in t.cxl.stage_breakdown().items()})
+    for kind in ("dram", "cxl"):
+        t0 = time.time()
+        curve = latency_bandwidth_curve(t, kind, n=8)
+        us = (time.time() - t0) * 1e6
+        knee = curve[np.argmax(curve[:, 2] > 2 * curve[0, 2]), 0] \
+            if (curve[:, 2] > 2 * curve[0, 2]).any() else curve[-1, 0]
+        print(f"{kind}: idle={curve[0,2]:.0f}ns "
+              f"peak={t.peak_gbps(kind):.1f}GB/s knee~{knee:.1f}GB/s")
+        emit(f"latency_curve_{kind}", us,
+             f"idle_ns={curve[0,2]:.0f};peak={t.peak_gbps(kind):.1f}")
+
+
+def programming_models() -> None:
+    """§IV: zNUMA / flat / weighted-interleave programming models."""
+    print("\n== programming_models (paper §IV) ==")
+    sim = _sim()
+    fp = 4 * sim.config.cache.l2_bytes
+    dram_pages = (fp // 2) // numa.PAGE_BYTES
+    cases = [("znuma-bind-cxl", numa.ZNuma(1.0)),
+             ("flat-first-touch", numa.FlatMode(dram_pages=dram_pages)),
+             ("weighted-1:1", numa.WeightedInterleave(1, 1))]
+    for name, pol in cases:
+        t0 = time.time()
+        r = sim.run_stream("triad", fp, pol)
+        us = (time.time() - t0) * 1e6
+        print(f"{name:>18}: bw={r.achieved_gbps['total']:.2f}GB/s "
+              f"dram/cxl split={r.achieved_gbps['dram']:.2f}/"
+              f"{r.achieved_gbps['cxl']:.2f}")
+        emit(f"progmodel_{name}", us,
+             f"bw={r.achieved_gbps['total']:.2f}")
+
+
+def kv_tiering() -> None:
+    """Paper §I use-case: KV cache spill to CXL (plan + paged pool sim)."""
+    print("\n== kv_tiering (paper §I LLM use-case) ==")
+    t0 = time.time()
+    plan = plan_serving(get_config("stablelm-12b"), batch=512,
+                        context=131072)
+    us = (time.time() - t0) * 1e6
+    print(f"stablelm-12b serve 512x131072: hbm={plan.hbm_bytes/2**30:.1f}GiB "
+          f"cxl={plan.cxl_bytes/2**30:.1f}GiB  {plan.note}")
+    emit("kv_plan_stablelm", us, f"cxl_GiB={plan.cxl_bytes/2**30:.1f}")
+
+    cfg = get_smoke("granite-3-8b")
+    kv = PagedKVCache(cfg, n_pages=64, page_size=8, max_blocks=16,
+                      hbm_page_budget=16)
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    for sid in range(8):
+        kv.allocate(sid)
+        k = rng.standard_normal((40, cfg.n_kv_heads, cfg.head_dim)) \
+            .astype(np.float32)
+        kv.append_tokens(sid, 0, k, k)
+    for _ in range(4):
+        kv.gather_args(list(range(8)))
+    us = (time.time() - t0) * 1e6
+    s = kv.stats
+    print(f"paged pool: {kv.tier_histogram()} fetches={s.cxl_fetches} "
+          f"promos={s.promotions} sim_cxl={s.sim_seconds*1e3:.2f}ms")
+    emit("kv_paged_pool", us, f"cxl_fetches={s.cxl_fetches}")
+
+    t0 = time.time()
+    tplan = plan_training(get_config("deepseek-v3-671b"))
+    us = (time.time() - t0) * 1e6
+    off = {p.name: p.tier for p in tplan.placements if p.tier != "hbm"}
+    print(f"deepseek-v3 train@256: spills={off} "
+          f"cxl_term={tplan.cxl_seconds:.2f}s/step")
+    emit("offload_plan_deepseek", us, f"cxl_s={tplan.cxl_seconds:.2f}")
+
+
+def kernels_micro() -> None:
+    """Pallas kernels in interpret mode (correct-path timing on CPU)."""
+    print("\n== kernels_micro (interpret mode) ==")
+    rng = np.random.default_rng(0)
+
+    def timeit(fn, *a, reps=3, **kw):
+        fn(*a, **kw)                      # compile/warm
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*a, **kw))
+        return (time.time() - t0) / reps * 1e6
+
+    b = jnp.asarray(rng.standard_normal((64, 512)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((64, 512)), jnp.float32)
+    us = timeit(ops.stream_triad, b, c, 3.0)
+    emit("kernel_triad", us, f"GBps={3*b.nbytes/us*1e-3:.2f}")
+    print(f"triad {us:.0f}us")
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    us = timeit(ops.flash_attention, q, k, k)
+    emit("kernel_flash", us, "shape=1x4x256x64")
+    print(f"flash {us:.0f}us")
+
+    qd = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((32, 16, 2, 64)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, 32, (4, 4)), jnp.int32)
+    cl = jnp.full((4,), 64, jnp.int32)
+    us = timeit(ops.paged_attention, qd, kp, kp, bt, cl)
+    emit("kernel_paged", us, "pool=32x16")
+    print(f"paged {us:.0f}us")
+
+    addr = jnp.asarray(rng.integers(0, 4096, 4096), jnp.int32)
+    us = timeit(ops.cache_sim, addr, n_sets=64, n_ways=4, chunk=512)
+    emit("kernel_cache_sim", us, f"Maccess/s={4096/us:.2f}")
+    print(f"cache_sim {us:.0f}us")
+
+
+def roofline_summary() -> None:
+    """Digest of the dry-run-derived roofline (experiments/roofline)."""
+    print("\n== roofline_summary (from multi-pod dry-run) ==")
+    path = pathlib.Path("experiments/roofline")
+    for name in ("optimized.json", "baseline.json"):
+        f = path / name
+        if f.exists():
+            rows = json.loads(f.read_text())
+            break
+    else:
+        print("(run the dry-run sweep + `python -m repro.roofline.report`)")
+        emit("roofline_summary", 0.0, "missing")
+        return
+    doms: Dict[str, int] = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    best = max(rows, key=lambda r: r["mfu_bound"])
+    trains = [r for r in rows if r["shape"] == "train_4k"]
+    med = sorted(r["mfu_bound"] for r in trains)[len(trains)//2] if trains \
+        else 0.0
+    print(f"[{name}] cells={len(rows)} dominant-term histogram={doms}")
+    print(f"best MFU-bound: {best['arch']} {best['shape']} "
+          f"{best['mfu_bound']:.1%}; median train MFU-bound {med:.1%}")
+    emit("roofline_summary", 0.0,
+         f"cells={len(rows)};best={best['mfu_bound']:.3f};"
+         f"median_train={med:.3f}")
+
+
+BENCHES: Dict[str, Callable[[], None]] = {
+    "fig5_llc_missrate": fig5_llc_missrate,
+    "interleave_sweep": interleave_sweep,
+    "latency_bandwidth": latency_bandwidth,
+    "programming_models": programming_models,
+    "kv_tiering": kv_tiering,
+    "kernels_micro": kernels_micro,
+    "roofline_summary": roofline_summary,
+}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(BENCHES), default=None)
+    args = ap.parse_args()
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+    print("\nname,us_per_call,derived")
+    for row in ROWS:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

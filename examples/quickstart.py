@@ -1,0 +1,32 @@
+"""Quickstart: build a CXL system, enumerate it, online the expander, and
+characterize DRAM vs CXL with STREAM — the paper's whole flow in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import CXLRAMSim, SimConfig
+from repro.core import cache as cache_mod
+from repro.core import numa
+
+# a host with 16 GiB DRAM and one 16 GiB CXL expander card on the I/O bus
+sim = CXLRAMSim(SimConfig(
+    dram_gib=16, expander_gib=(16,),
+    cache=cache_mod.CacheParams(l1_bytes=16 * 1024, l2_bytes=128 * 1024)))
+
+# CXL-CLI flow: list memdevs (mailbox IDENTIFY), online as a zNUMA node
+print("memdevs:", sim.memdevs())
+print("regions:", sim.online(mode="znuma"))
+print("numastat:", sim.numastat())
+
+# the calibration surface the paper exposes (§III-B.2)
+print("\nCXL path latency breakdown (ns):")
+for stage, ns in sim.latency_breakdown().items():
+    print(f"  {stage:>26}: {ns:.1f}")
+
+# STREAM triad at 4x the LLC, bound to DRAM vs bound to the zNUMA node
+fp = 4 * sim.config.cache.l2_bytes
+for name, policy in [("DRAM", numa.ZNuma(0.0)), ("CXL", numa.ZNuma(1.0)),
+                     ("interleave 1:1", numa.WeightedInterleave(1, 1))]:
+    r = sim.run_stream("triad", fp, policy)
+    print(f"\nSTREAM triad on {name}: {r.achieved_gbps['total']:.2f} GB/s, "
+          f"LLC miss {r.miss_rates['l2_miss_rate']:.1%}, "
+          f"loaded CXL latency {r.loaded_latency_ns['cxl']:.0f} ns")

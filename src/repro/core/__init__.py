@@ -1,0 +1,6 @@
+"""CXLRAMSim core: the paper's contribution, JAX-native.
+
+Layers (bottom-up): spec -> packet -> registers -> hdm -> topology ->
+timing -> numa -> cache -> stream -> machine -> simulator.
+"""
+from repro.core.simulator import CXLRAMSim, SimConfig  # noqa: F401

@@ -1,0 +1,259 @@
+"""Two-level set-associative MESI cache simulator (vectorized, JAX).
+
+Models the paper's Table-I host: up to N cores with private L1s and a shared
+L2/LLC under a MESI directory ("Two-level, Directory-based").  gem5 walks a
+C++ event queue per access; the TPU-native re-think keeps *trace order*
+sequential (a `lax.scan`) but makes every per-access operation — tag compare
+across ways, LRU victim select, directory sharer updates — a data-parallel
+array op.  The Pallas kernel in :mod:`repro.kernels.cache_sim` runs the same
+state machine with the tag store resident in VMEM; this module is its oracle
+(`ref`).
+
+The simulator tracks, per access, which tier (DRAM=0 / CXL=1) backs the
+line — supplied by the page-placement policy (:mod:`repro.core.numa`) — so
+misses/writebacks are priced per tier by :mod:`repro.core.machine` and the
+**cache pollution** effect of CXL traffic (CXL-destined lines evicting
+DRAM-destined ones) falls out of the LRU state, exactly the effect the paper
+highlights.
+
+State encoding (per line): tag int32 (-1 invalid), last-use int32, MESI
+state int32 {I=0,S=1,E=2,M=3}, tier int32, plus an L2 directory bitmask of
+L1 sharers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# MESI states
+I, S, E, M = 0, 1, 2, 3
+
+# ---- stats indices ---------------------------------------------------------
+L1_HIT, L1_MISS, L2_HIT, L2_MISS = 0, 1, 2, 3
+MEM_READ_DRAM, MEM_READ_CXL = 4, 5
+MEM_WRITE_DRAM, MEM_WRITE_CXL = 6, 7
+UPGRADES, INVALIDATIONS, BACK_INVALIDATIONS, WRITEBACKS_L1 = 8, 9, 10, 11
+NSTATS = 12
+STAT_NAMES = (
+    "l1_hit", "l1_miss", "l2_hit", "l2_miss",
+    "mem_read_dram", "mem_read_cxl", "mem_write_dram", "mem_write_cxl",
+    "upgrades", "invalidations", "back_invalidations", "writebacks_l1",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheParams:
+    """Geometry: sizes in bytes; sets derived (power of two enforced)."""
+    l1_bytes: int = 64 * 1024
+    l1_ways: int = 8
+    l2_bytes: int = 2 * 1024 * 1024
+    l2_ways: int = 16
+    line_bytes: int = 64
+    cores: int = 1
+
+    @property
+    def l1_sets(self) -> int:
+        s = self.l1_bytes // (self.l1_ways * self.line_bytes)
+        assert s & (s - 1) == 0 and s > 0, "L1 sets must be a power of two"
+        return s
+
+    @property
+    def l2_sets(self) -> int:
+        s = self.l2_bytes // (self.l2_ways * self.line_bytes)
+        assert s & (s - 1) == 0 and s > 0, "L2 sets must be a power of two"
+        return s
+
+
+class CacheState(NamedTuple):
+    l1_tag: Array     # (cores, l1_sets, l1_ways) int32, -1 invalid
+    l1_use: Array     # (cores, l1_sets, l1_ways) int32 last-use time
+    l1_state: Array   # (cores, l1_sets, l1_ways) int32 MESI
+    l2_tag: Array     # (l2_sets, l2_ways) int32
+    l2_use: Array     # (l2_sets, l2_ways) int32
+    l2_state: Array   # (l2_sets, l2_ways) int32 (M == dirty-in-L2)
+    l2_tier: Array    # (l2_sets, l2_ways) int32 backing tier of the line
+    l2_sharers: Array # (l2_sets, l2_ways) int32 bitmask of L1 sharers
+
+
+def init_state(p: CacheParams) -> CacheState:
+    def full(shape):
+        return jnp.full(shape, -1, jnp.int32)
+    z1 = (p.cores, p.l1_sets, p.l1_ways)
+    z2 = (p.l2_sets, p.l2_ways)
+    return CacheState(
+        l1_tag=full(z1), l1_use=jnp.zeros(z1, jnp.int32),
+        l1_state=jnp.zeros(z1, jnp.int32),
+        l2_tag=full(z2), l2_use=jnp.zeros(z2, jnp.int32),
+        l2_state=jnp.zeros(z2, jnp.int32),
+        l2_tier=jnp.zeros(z2, jnp.int32),
+        l2_sharers=jnp.zeros(z2, jnp.int32),
+    )
+
+
+def _l2_lookup(st: CacheState, addr: Array, p: CacheParams):
+    set2 = addr & (p.l2_sets - 1)
+    row = st.l2_tag[set2]                          # (ways,)
+    hits = row == addr
+    hit = hits.any()
+    way = jnp.argmax(hits)
+    victim = jnp.argmin(st.l2_use[set2])
+    return set2, hit, jnp.where(hit, way, victim).astype(jnp.int32)
+
+
+def _step(p: CacheParams, carry, x):
+    st, stats, t = carry
+    addr, is_write, core, tier = x
+    addr = addr.astype(jnp.int32)
+    core = core.astype(jnp.int32)
+    inc = lambda s, idx, amt=1: s.at[idx].add(amt)
+
+    # ---------------- L1 lookup ----------------
+    set1 = addr & (p.l1_sets - 1)
+    row_t = st.l1_tag[core, set1]                   # (l1_ways,)
+    row_s = st.l1_state[core, set1]
+    hits = (row_t == addr) & (row_s != I)
+    l1_hit = hits.any()
+    way_hit = jnp.argmax(hits).astype(jnp.int32)
+    victim1 = jnp.argmin(st.l1_use[core, set1]).astype(jnp.int32)
+    way1 = jnp.where(l1_hit, way_hit, victim1)
+
+    cur_state = row_s[way1]
+    # write-hit on S needs an upgrade: invalidate other cores' copies
+    needs_upgrade = l1_hit & is_write & (cur_state == S)
+    # find all other L1 copies of this line (directory-equivalent probe)
+    copies = (st.l1_tag[:, set1] == addr) & (st.l1_state[:, set1] != I)
+    other = copies & (jnp.arange(p.cores, dtype=jnp.int32)[:, None] != core)
+    n_other = other.sum()
+
+    stats = inc(stats, L1_HIT, l1_hit.astype(jnp.int32))
+    stats = inc(stats, L1_MISS, (~l1_hit).astype(jnp.int32))
+    stats = inc(stats, UPGRADES, (needs_upgrade).astype(jnp.int32))
+    stats = inc(stats, INVALIDATIONS,
+                jnp.where(is_write, n_other, 0).astype(jnp.int32))
+
+    # invalidate other copies on any write (upgrade or RFO fill)
+    inval_mask = other & is_write
+    new_l1_state = jnp.where(
+        inval_mask, I, st.l1_state[:, set1])        # (cores, ways)
+    st = st._replace(l1_state=st.l1_state.at[:, set1].set(new_l1_state))
+
+    # ---------------- L1 victim writeback (on miss) ----------------
+    evict_valid = (~l1_hit) & (st.l1_state[core, set1, way1] != I)
+    evict_tag = st.l1_tag[core, set1, way1]
+    evict_dirty = evict_valid & (st.l1_state[core, set1, way1] == M)
+    # inclusive L2: evicted line is present; mark M (dirty) there, drop sharer
+    eset2, ehit, eway2 = _l2_lookup(st, evict_tag, p)
+    do_wb = evict_dirty & ehit
+    st = st._replace(
+        l2_state=st.l2_state.at[eset2, eway2].set(
+            jnp.where(do_wb, M, st.l2_state[eset2, eway2])),
+        l2_sharers=st.l2_sharers.at[eset2, eway2].set(
+            jnp.where(evict_valid & ehit,
+                      st.l2_sharers[eset2, eway2] & ~(1 << core),
+                      st.l2_sharers[eset2, eway2])))
+    stats = inc(stats, WRITEBACKS_L1, evict_dirty.astype(jnp.int32))
+
+    # ---------------- L2 lookup (only meaningful on L1 miss) --------------
+    set2, l2_hit_raw, way2 = _l2_lookup(st, addr, p)
+    l2_hit = l2_hit_raw & (~l1_hit)
+    l2_miss = (~l2_hit_raw) & (~l1_hit)
+    stats = inc(stats, L2_HIT, l2_hit.astype(jnp.int32))
+    stats = inc(stats, L2_MISS, l2_miss.astype(jnp.int32))
+
+    # ---- L2 victim handling on fill: back-invalidate + writeback ----
+    v_tag = st.l2_tag[set2, way2]
+    v_state = st.l2_state[set2, way2]
+    v_tier = st.l2_tier[set2, way2]
+    v_sharers = st.l2_sharers[set2, way2]
+    v_valid = l2_miss & (v_state != I) & (v_tag != addr)
+    # back-invalidate L1 copies of the victim (inclusive hierarchy)
+    vset1 = v_tag & (p.l1_sets - 1)
+    v_copies = (st.l1_tag[:, vset1] == v_tag) & (st.l1_state[:, vset1] != I)
+    v_l1_dirty = (v_copies & (st.l1_state[:, vset1] == M)).any()
+    st = st._replace(l1_state=st.l1_state.at[:, vset1].set(
+        jnp.where(v_copies & v_valid, I, st.l1_state[:, vset1])))
+    stats = inc(stats, BACK_INVALIDATIONS,
+                jnp.where(v_valid, v_copies.sum(), 0).astype(jnp.int32))
+    v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
+    stats = inc(stats, MEM_WRITE_DRAM + v_tier, v_dirty.astype(jnp.int32))
+
+    # ---- memory read on L2 miss ----
+    stats = inc(stats, MEM_READ_DRAM + tier, l2_miss.astype(jnp.int32))
+
+    # ---- install / update line in L2 ----
+    fill2 = l2_miss
+    touch2 = l2_hit | l2_miss
+    st = st._replace(
+        l2_tag=st.l2_tag.at[set2, way2].set(
+            jnp.where(fill2, addr, st.l2_tag[set2, way2])),
+        l2_tier=st.l2_tier.at[set2, way2].set(
+            jnp.where(fill2, tier, st.l2_tier[set2, way2])),
+        l2_state=st.l2_state.at[set2, way2].set(
+            jnp.where(fill2, E, st.l2_state[set2, way2])),
+        l2_use=st.l2_use.at[set2, way2].set(
+            jnp.where(touch2, t, st.l2_use[set2, way2])),
+        l2_sharers=st.l2_sharers.at[set2, way2].set(
+            jnp.where(fill2, 1 << core,
+                      jnp.where(l2_hit,
+                                st.l2_sharers[set2, way2] | (1 << core),
+                                st.l2_sharers[set2, way2]))))
+
+    # ---------------- install / update line in L1 ----------------
+    # new state: write -> M; read fill -> E if sole sharer else S
+    sole = n_other == 0
+    fill_state = jnp.where(is_write, M, jnp.where(sole, E, S)).astype(jnp.int32)
+    hit_state = jnp.where(is_write, M, cur_state).astype(jnp.int32)
+    new_state = jnp.where(l1_hit, hit_state, fill_state)
+    st = st._replace(
+        l1_tag=st.l1_tag.at[core, set1, way1].set(addr),
+        l1_state=st.l1_state.at[core, set1, way1].set(new_state),
+        l1_use=st.l1_use.at[core, set1, way1].set(t))
+
+    return (st, stats, t + 1), None
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def simulate_trace(p: CacheParams, state: CacheState,
+                   addr: Array, is_write: Array,
+                   core: Array | None = None,
+                   tier: Array | None = None
+                   ) -> Tuple[CacheState, Array]:
+    """Run a trace through the hierarchy.
+
+    Args:
+      addr:     (N,) int32 cacheline indices (window-relative).
+      is_write: (N,) bool.
+      core:     (N,) int32 issuing core (default 0).
+      tier:     (N,) int32 backing tier per access (0=DRAM, 1=CXL; default 0).
+
+    Returns: (final_state, stats[NSTATS] int32) — see STAT_NAMES.
+    """
+    n = addr.shape[0]
+    core = jnp.zeros(n, jnp.int32) if core is None else core.astype(jnp.int32)
+    tier = jnp.zeros(n, jnp.int32) if tier is None else tier.astype(jnp.int32)
+    xs = (addr.astype(jnp.int32), is_write.astype(bool), core, tier)
+    stats0 = jnp.zeros((NSTATS,), jnp.int32)
+    (st, stats, _), _ = jax.lax.scan(
+        functools.partial(_step, p), (state, stats0, jnp.int32(1)), xs)
+    return st, stats
+
+
+def stats_dict(stats: Array) -> Dict[str, int]:
+    return {n: int(v) for n, v in zip(STAT_NAMES, stats)}
+
+
+def miss_rates(stats: Array) -> Dict[str, float]:
+    s = stats_dict(stats)
+    l1_acc = s["l1_hit"] + s["l1_miss"]
+    l2_acc = s["l2_hit"] + s["l2_miss"]
+    return {
+        "l1_miss_rate": s["l1_miss"] / max(l1_acc, 1),
+        "l2_miss_rate": s["l2_miss"] / max(l2_acc, 1),   # LLC (paper Fig. 5)
+        "llc_mpki": 1000.0 * s["l2_miss"] / max(l1_acc, 1),
+    }

@@ -1,0 +1,112 @@
+"""HDM (Host-managed Device Memory) decoder address math.
+
+An HDM decoder maps a host-physical-address (HPA) window onto `ways`
+interleaved targets at a fixed granularity:
+
+    off  = hpa - base
+    way  = (off // granularity) mod ways          -> which target device
+    dpa  = (off // (granularity*ways)) * granularity + off mod granularity
+
+This is exactly the CXL 2.0 §8.2.5.12 decode (including the non-power-of-two
+3/6/12-way modes).  Two implementations:
+
+  * pure-Python ints (arbitrary precision) for topology/enumeration — used by
+    :class:`repro.core.topology.SystemMap` on full 64-bit addresses;
+  * vectorized JAX int32 on *trace-relative* line indices for the simulator's
+    hot path (millions of addresses at once) — the gem5 per-packet decoder
+    re-thought as an array program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import CACHELINE_BYTES
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class InterleaveProgram:
+    """Static decode program of one committed HDM decoder."""
+    base: int                 # bytes, host physical
+    size: int                 # bytes
+    ways: int
+    granularity: int          # bytes per contiguous chunk on one target
+    targets: Tuple[int, ...]  # global target (endpoint/region) ids
+
+    def __post_init__(self):
+        assert len(self.targets) == self.ways, "targets must match ways"
+        assert self.granularity % CACHELINE_BYTES == 0
+        assert self.size % (self.granularity * self.ways) == 0, \
+            "window must hold whole interleave sets"
+
+    # -- pure-Python (full-width addresses) --------------------------------
+    def decode(self, hpa: int) -> Tuple[int, int]:
+        """hpa -> (target_id, device-physical address)."""
+        if not (self.base <= hpa < self.base + self.size):
+            raise ValueError(f"hpa {hpa:#x} outside window")
+        off = hpa - self.base
+        way = (off // self.granularity) % self.ways
+        dpa = ((off // (self.granularity * self.ways)) * self.granularity
+               + off % self.granularity)
+        return self.targets[way], dpa
+
+    def encode(self, target_id: int, dpa: int) -> int:
+        """(target, dpa) -> hpa. Inverse of :meth:`decode`."""
+        way = self.targets.index(target_id)
+        chunk, rem = divmod(dpa, self.granularity)
+        off = (chunk * self.ways + way) * self.granularity + rem
+        hpa = self.base + off
+        if not (self.base <= hpa < self.base + self.size):
+            raise ValueError("dpa outside device share of window")
+        return hpa
+
+    # -- vectorized (trace-relative line indices) ---------------------------
+    def decode_lines(self, line_idx: Array) -> Tuple[Array, Array]:
+        """Vectorized decode over window-relative cacheline indices.
+
+        Args:
+          line_idx: (N,) int32 cacheline indices relative to `base`
+                    (i.e. (hpa - base) >> 6).
+        Returns:
+          (way, dpa_line): each (N,) int32. `way` indexes `self.targets`;
+          `dpa_line` is the device-local cacheline index.
+        """
+        g_lines = self.granularity // CACHELINE_BYTES
+        line_idx = jnp.asarray(line_idx, jnp.int32)
+        chunk = line_idx // g_lines
+        way = chunk % self.ways
+        dpa_line = (chunk // self.ways) * g_lines + line_idx % g_lines
+        return way.astype(jnp.int32), dpa_line.astype(jnp.int32)
+
+    def encode_lines(self, way: Array, dpa_line: Array) -> Array:
+        """Vectorized inverse of :meth:`decode_lines`."""
+        g_lines = self.granularity // CACHELINE_BYTES
+        chunk, rem = dpa_line // g_lines, dpa_line % g_lines
+        return ((chunk * self.ways + way) * g_lines + rem).astype(jnp.int32)
+
+
+def traffic_split(program: InterleaveProgram, line_idx: Array) -> Array:
+    """Per-target request counts for a trace — the interleave balance
+    statistic the paper's §IV sweep reports."""
+    way, _ = program.decode_lines(line_idx)
+    return jnp.bincount(way, length=program.ways)
+
+
+def weighted_page_policy(page_idx: Array, dram_weight: int,
+                         cxl_weight: int) -> Array:
+    """OS weighted page interleaving (DRAM:CXL = dram_weight:cxl_weight).
+
+    Models Linux `numactl --weighted-interleave` page placement: pages are
+    dealt round-robin in runs of `dram_weight` to node 0 (DRAM) then
+    `cxl_weight` to node 1 (CXL).
+
+    Returns (N,) int32 of {0: DRAM, 1: CXL} per page index.
+    """
+    period = dram_weight + cxl_weight
+    pos = jnp.asarray(page_idx, jnp.int32) % period
+    return (pos >= dram_weight).astype(jnp.int32)

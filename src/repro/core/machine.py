@@ -1,0 +1,134 @@
+"""Full-system machine model: CPU issue models -> caches -> tiered memory.
+
+gem5 gives the paper two CPU models ("Timing"/in-order and O3).  The JAX
+adaptation (DESIGN.md §2) replaces the cycle-accurate pipelines with two
+analytic issue models layered on the *exact* cache/tier state from
+:mod:`repro.core.cache`:
+
+  * ``inorder`` — one outstanding miss (MLP=1): every L2 miss stalls for the
+    full loaded memory latency.
+  * ``o3``      — memory-level parallelism up to `mlp` outstanding misses
+    (MSHR-bound), so miss stalls overlap; bandwidth-bound when the overlapped
+    demand exceeds the tier's payload bandwidth.
+
+Timing closes a fixed point: loaded latency depends on achieved bandwidth,
+which depends on runtime, which depends on loaded latency.  A few Picard
+iterations converge (monotone curve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_sim
+from repro.core import numa as numa_mod
+from repro.core.spec import CACHELINE_BYTES
+from repro.core.timing import TimingConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CPUModel:
+    kind: str = "o3"             # 'inorder' | 'o3'
+    freq_ghz: float = 3.0
+    ipc_core: float = 2.0        # non-memory IPC
+    l1_hit_ns: float = 1.3       # 4 cycles @3GHz
+    l2_hit_ns: float = 12.0
+    mlp: int = 8                 # max outstanding L2 misses (MSHRs)
+
+    @property
+    def effective_mlp(self) -> int:
+        return 1 if self.kind == "inorder" else self.mlp
+
+
+@dataclasses.dataclass
+class RunResult:
+    stats: Dict[str, int]
+    miss_rates: Dict[str, float]
+    time_ns: float
+    achieved_gbps: Dict[str, float]      # per tier + total
+    loaded_latency_ns: Dict[str, float]
+    cpu: str
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "time_ns": self.time_ns,
+            "bw_total_gbps": self.achieved_gbps["total"],
+            "bw_dram_gbps": self.achieved_gbps["dram"],
+            "bw_cxl_gbps": self.achieved_gbps["cxl"],
+            "l2_miss_rate": self.miss_rates["l2_miss_rate"],
+            "lat_dram_ns": self.loaded_latency_ns["dram"],
+            "lat_cxl_ns": self.loaded_latency_ns["cxl"],
+        }
+
+
+class Machine:
+    """Cache hierarchy + tiered memory + CPU issue model."""
+
+    def __init__(self, cache_params: cache_sim.CacheParams,
+                 timing: TimingConfig, cpu: CPUModel):
+        self.cache_params = cache_params
+        self.timing = timing
+        self.cpu = cpu
+
+    # -- cache simulation (exact) -----------------------------------------
+    def simulate(self, addr, is_write, tier, core=None
+                 ) -> Dict[str, int]:
+        state = cache_sim.init_state(self.cache_params)
+        _, stats = cache_sim.simulate_trace(
+            self.cache_params, state, jnp.asarray(addr),
+            jnp.asarray(is_write), core=core, tier=jnp.asarray(tier))
+        return cache_sim.stats_dict(stats), cache_sim.miss_rates(stats)
+
+    # -- timing fixed point -------------------------------------------------
+    def _time(self, stats: Dict[str, int]) -> RunResult:
+        cpu = self.cpu
+        n_acc = stats["l1_hit"] + stats["l1_miss"]
+        reads = {"dram": stats["mem_read_dram"], "cxl": stats["mem_read_cxl"]}
+        writes = {"dram": stats["mem_write_dram"], "cxl": stats["mem_write_cxl"]}
+        lines = {k: reads[k] + writes[k] for k in ("dram", "cxl")}
+        bytes_ = {k: v * CACHELINE_BYTES for k, v in lines.items()}
+
+        base_ns = (n_acc / (cpu.ipc_core * cpu.freq_ghz)        # issue
+                   + stats["l1_hit"] * 0.0                      # hidden
+                   + stats["l2_hit"] * cpu.l2_hit_ns / cpu.effective_mlp)
+        t = max(base_ns, 1.0)
+        lat = {"dram": self.timing.idle_latency_ns("dram"),
+               "cxl": self.timing.idle_latency_ns("cxl")}
+        for _ in range(8):  # Picard iteration on the loaded-latency curve
+            stall = 0.0
+            for k in ("dram", "cxl"):
+                if lines[k] == 0:
+                    continue
+                offered = bytes_[k] / max(t, 1.0)                # B/ns == GB/s
+                rf = reads[k] / max(lines[k], 1)
+                lat[k] = float(np.asarray(
+                    self.timing.loaded_latency_ns(k, offered, rf)
+                    if k == "cxl" else self.timing.loaded_latency_ns(k, offered)))
+                # MLP-overlapped stalls, floored by the bandwidth bound
+                t_lat = lines[k] * lat[k] / cpu.effective_mlp
+                t_bw = bytes_[k] / self.timing.peak_gbps(k, rf)
+                stall += max(t_lat, t_bw)
+            t_new = base_ns + stall
+            if abs(t_new - t) / max(t, 1.0) < 1e-6:
+                t = t_new
+                break
+            t = t_new
+
+        ach = {k: bytes_[k] / t for k in ("dram", "cxl")}
+        ach["total"] = sum(ach.values())
+        mr = {"l1_miss_rate": stats["l1_miss"] / max(n_acc, 1),
+              "l2_miss_rate": stats["l2_miss"] /
+              max(stats["l2_hit"] + stats["l2_miss"], 1),
+              "llc_mpki": 1000.0 * stats["l2_miss"] / max(n_acc, 1)}
+        return RunResult(stats=stats, miss_rates=mr, time_ns=t,
+                         achieved_gbps=ach, loaded_latency_ns=lat,
+                         cpu=cpu.kind)
+
+    def run_trace(self, addr, is_write, policy: numa_mod.Policy,
+                  n_pages: int, core=None) -> RunResult:
+        tier = numa_mod.tier_of_lines(policy, jnp.asarray(addr), n_pages)
+        stats, _ = self.simulate(addr, is_write, tier, core=core)
+        return self._time(stats)

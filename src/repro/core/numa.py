@@ -1,0 +1,87 @@
+"""Page-placement policies: zNUMA, Flat-mode first-touch, weighted interleave.
+
+These are the "prominent programming models" the paper validates (§IV):
+
+  * **zNUMA** — CXL region onlined as a CPU-less NUMA node; allocations are
+    explicitly bound (`numactl --membind`) to DRAM or the zNUMA node.
+  * **Flat mode** — CXL capacity merged into the same node as system DRAM;
+    the OS sees one contiguous pool and fills DRAM first (first-touch), then
+    spills to CXL.
+  * **Weighted interleave** — pages dealt DRAM:CXL in a configured ratio
+    (SMDK / HMSDK / `numactl --weighted-interleave` style), the knob the
+    paper sweeps ("we vary the OS managed page interleaving ratios").
+
+Each policy maps *page index -> tier* (0=DRAM, 1=CXL) as a vectorized JAX
+function; :func:`tier_of_lines` turns that into per-access tiers for the
+cache simulator.  The same policies drive framework-object placement in
+:mod:`repro.memory.tiering`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdm import weighted_page_policy
+from repro.core.spec import CACHELINE_BYTES
+
+Array = jax.Array
+PAGE_BYTES = 4096
+LINES_PER_PAGE = PAGE_BYTES // CACHELINE_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class ZNuma:
+    """Explicit binding: `cxl_fraction` of the footprint's pages bound to the
+    zNUMA (CXL) node, the rest to DRAM — contiguous split, as membind gives.
+    """
+    cxl_fraction: float = 1.0
+
+    def tiers(self, n_pages: int) -> Array:
+        n_dram = int(round(n_pages * (1.0 - self.cxl_fraction)))
+        return (jnp.arange(n_pages, dtype=jnp.int32) >= n_dram).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatMode:
+    """First-touch over one big node: DRAM fills first, then CXL spills.
+
+    `dram_pages` is the DRAM capacity available to this footprint (the OS
+    would have other tenants; callers set it from the SystemMap).
+    """
+    dram_pages: int
+
+    def tiers(self, n_pages: int) -> Array:
+        return (jnp.arange(n_pages, dtype=jnp.int32)
+                >= self.dram_pages).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedInterleave:
+    """DRAM:CXL = dram_weight:cxl_weight page-round-robin."""
+    dram_weight: int = 1
+    cxl_weight: int = 1
+
+    def tiers(self, n_pages: int) -> Array:
+        return weighted_page_policy(jnp.arange(n_pages, dtype=jnp.int32),
+                                    self.dram_weight, self.cxl_weight)
+
+
+Policy = Union[ZNuma, FlatMode, WeightedInterleave]
+
+
+def tier_of_lines(policy: Policy, line_addr: Array, n_pages: int) -> Array:
+    """Per-access tier for a line-granular address trace."""
+    page_tiers = policy.tiers(n_pages)
+    page = jnp.asarray(line_addr, jnp.int32) // LINES_PER_PAGE
+    return page_tiers[jnp.clip(page, 0, n_pages - 1)]
+
+
+def describe(policy: Policy) -> str:
+    if isinstance(policy, ZNuma):
+        return f"znuma(cxl={policy.cxl_fraction:.0%})"
+    if isinstance(policy, FlatMode):
+        return f"flat(dram_pages={policy.dram_pages})"
+    return f"interleave({policy.dram_weight}:{policy.cxl_weight})"

@@ -1,0 +1,266 @@
+"""CXL.mem transaction-layer packetization / de-packetization (JAX-traceable).
+
+The paper (Fig. 4) implements the CXL.mem transaction layer with
+*packetization at the Root Complex* and *de-packetization at the CXL
+endpoint*, carrying opcodes in packet headers over four channels:
+
+    M2S Req   — memory reads (CPU loads)            -> S2M DRS (MemData)
+    M2S RwD   — memory writes (CPU stores, +64B)    -> S2M NDR (Cmp)
+
+We reproduce that structure as **vectorized array codecs**: a batch of N
+requests packs into an ``(N, n_words) uint32`` header array via a generic
+bit-field codec driven by :data:`repro.core.spec.M2S_FIELDS` /
+:data:`~repro.core.spec.S2M_FIELDS`.  This is the TPU-native re-think of
+gem5's per-packet C++ objects — a million-packet trace is one array program.
+
+Address convention: the 46-bit ``address`` slot carries a *cacheline index*
+(host physical address >> 6).  Vectorized traces use trace-relative int32
+line indices (windows up to 2^31 lines = 128 GiB, ample for the paper's
+few-GiB footprints); full 64-bit host addresses live in pure-Python ints in
+:mod:`repro.core.topology` / :mod:`repro.core.hdm`.
+
+Wire accounting follows the 68-byte CXL 2.0 flit: 4 x 16B slots + 4B
+framing/CRC.  A header message occupies one slot; a 64B data payload
+occupies four.  In a saturated stream, slots from different messages share
+flits, so wire bytes = slots x 17.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spec
+
+Array = jax.Array
+
+_WORD_BITS = 32
+_MASK32 = jnp.uint32(0xFFFFFFFF)
+
+
+def _mask(width: int) -> jnp.uint32:
+    """Bit mask of `width` low bits (width <= 32)."""
+    if width >= 32:
+        return _MASK32
+    return jnp.uint32((1 << width) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldCodec:
+    """Generic little-endian bit-field codec over uint32 words.
+
+    Fields wider than 32 bits occupy multiple word-spanning bit ranges, but
+    the *values* supplied for them must fit in uint32 (see module docstring —
+    the 46-bit address slot carries <=31-bit line indices).
+    """
+
+    fields: Tuple[Tuple[str, int], ...]
+
+    @property
+    def total_bits(self) -> int:
+        return sum(w for _, w in self.fields)
+
+    @property
+    def n_words(self) -> int:
+        return -(-self.total_bits // _WORD_BITS)
+
+    def offsets(self) -> Dict[str, Tuple[int, int]]:
+        """{name: (bit_offset, width)} in packing order."""
+        out, off = {}, 0
+        for name, width in self.fields:
+            out[name] = (off, width)
+            off += width
+        return out
+
+    def pack(self, values: Mapping[str, Array]) -> Array:
+        """Pack {field: (N,) int array} -> (N, n_words) uint32."""
+        names = {n for n, _ in self.fields}
+        unknown = set(values) - names
+        if unknown:
+            raise KeyError(f"unknown fields: {sorted(unknown)}")
+        n = None
+        for v in values.values():
+            n = jnp.shape(v)[0] if n is None else n
+        if n is None:
+            raise ValueError("at least one field value required")
+        words = [jnp.zeros((n,), jnp.uint32) for _ in range(self.n_words)]
+        off = 0
+        for name, width in self.fields:
+            v = values.get(name)
+            if v is None:
+                off += width
+                continue
+            v = jnp.asarray(v).astype(jnp.uint32) & _mask(min(width, 32))
+            w0, b0 = divmod(off, _WORD_BITS)
+            # low part into word w0
+            words[w0] = words[w0] | ((v << b0) & _MASK32)
+            # spill into word w0+1 if the (value-bearing) bits cross
+            if b0 + min(width, 32) > _WORD_BITS:
+                hi = v >> jnp.uint32(_WORD_BITS - b0)
+                words[w0 + 1] = words[w0 + 1] | hi
+            off += width
+        return jnp.stack(words, axis=-1)
+
+    def unpack(self, packed: Array) -> Dict[str, Array]:
+        """(N, n_words) uint32 -> {field: (N,) uint32}."""
+        packed = jnp.asarray(packed).astype(jnp.uint32)
+        out: Dict[str, Array] = {}
+        off = 0
+        for name, width in self.fields:
+            w0, b0 = divmod(off, _WORD_BITS)
+            take = min(width, 32)
+            v = packed[..., w0] >> jnp.uint32(b0)
+            if b0 + take > _WORD_BITS:
+                hi = packed[..., w0 + 1] << jnp.uint32(_WORD_BITS - b0)
+                v = v | hi
+            out[name] = v & _mask(take)
+            off += width
+        return out
+
+
+M2S_CODEC = FieldCodec(spec.M2S_FIELDS)
+S2M_CODEC = FieldCodec(spec.S2M_FIELDS)
+
+# Channel encodings used in the `channel` field.
+CH_M2S_REQ = 0
+CH_M2S_RWD = 1
+CH_S2M_NDR = 0
+CH_S2M_DRS = 1
+
+# Wire accounting (slots; 1 slot = 17 wire bytes in a saturated stream).
+SLOT_WIRE_BYTES = spec.FLIT_BYTES_CXL2 // 4  # 17
+SLOTS_HEADER = 1
+SLOTS_DATA = 4
+
+
+# ---------------------------------------------------------------------------
+# Root-complex side (the "master"): packetize CPU requests into M2S flits.
+# ---------------------------------------------------------------------------
+def rc_packetize(line_addr: Array, is_write: Array,
+                 tags: Array | None = None,
+                 ld_id: int | Array = 0) -> Dict[str, Array]:
+    """Packetize a batch of CPU memory requests into M2S headers.
+
+    Args:
+      line_addr: (N,) int32 cacheline indices.
+      is_write:  (N,) bool — True => M2S RwD MemWr, False => M2S Req MemRd.
+      tags:      (N,) request tags; defaults to arange (matching completion).
+      ld_id:     logical-device id (for MLDs; SLD => 0).
+
+    Returns dict with:
+      headers:     (N, W) uint32 packed M2S headers.
+      slots:       (N,) int32 wire slots per message (1 read / 5 write).
+      wire_bytes:  () int32 total M2S wire bytes (slots x 17).
+    """
+    line_addr = jnp.asarray(line_addr)
+    is_write = jnp.asarray(is_write).astype(bool)
+    n = line_addr.shape[0]
+    if tags is None:
+        tags = jnp.arange(n, dtype=jnp.uint32) & jnp.uint32(0xFFFF)
+    channel = jnp.where(is_write, CH_M2S_RWD, CH_M2S_REQ).astype(jnp.uint32)
+    opcode = jnp.where(is_write,
+                       jnp.uint32(int(spec.M2SRwD.MEM_WR)),
+                       jnp.uint32(int(spec.M2SReq.MEM_RD)))
+    headers = M2S_CODEC.pack({
+        "valid": jnp.ones((n,), jnp.uint32),
+        "channel": channel,
+        "opcode": opcode,
+        "meta_field": jnp.full((n,), int(spec.MetaField.ANY), jnp.uint32),
+        "meta_value": jnp.zeros((n,), jnp.uint32),
+        "snp_type": jnp.full((n,), int(spec.SnpType.NO_OP), jnp.uint32),
+        "tag": jnp.asarray(tags),
+        "address": line_addr,
+        "ld_id": jnp.full((n,), ld_id, jnp.uint32) if jnp.ndim(ld_id) == 0
+                 else jnp.asarray(ld_id),
+        "tc": jnp.zeros((n,), jnp.uint32),
+    })
+    slots = jnp.where(is_write, SLOTS_HEADER + SLOTS_DATA, SLOTS_HEADER)
+    return {
+        "headers": headers,
+        "slots": slots.astype(jnp.int32),
+        "wire_bytes": (slots.sum() * SLOT_WIRE_BYTES).astype(jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Endpoint side (the "subordinate"): de-packetize M2S, emit S2M responses.
+# ---------------------------------------------------------------------------
+def ep_depacketize(headers: Array) -> Dict[str, Array]:
+    """De-packetize M2S headers at the endpoint.
+
+    Returns the decoded fields plus:
+      is_write: (N,) bool
+      legal:    (N,) bool — opcode legal for its channel per spec tables.
+    """
+    f = M2S_CODEC.unpack(headers)
+    is_rwd = f["channel"] == CH_M2S_RWD
+    req_legal = jnp.isin(f["opcode"],
+                         jnp.asarray([int(o) for o in spec.M2SReq],
+                                     jnp.uint32))
+    rwd_legal = jnp.isin(f["opcode"],
+                         jnp.asarray([int(o) for o in spec.M2SRwD],
+                                     jnp.uint32))
+    legal = (f["valid"] == 1) & jnp.where(is_rwd, rwd_legal, req_legal)
+    return {**f, "is_write": is_rwd, "legal": legal}
+
+
+def ep_respond(headers: Array, *,
+               dev_load: int | Array = int(spec.DevLoad.LIGHT),
+               nxm: Array | None = None) -> Dict[str, Array]:
+    """Generate S2M responses for a batch of decoded M2S requests.
+
+    Writes  -> S2M NDR  Cmp        (1 slot)
+    Reads   -> S2M DRS  MemData    (1 + 4 slots)   [MemDataNXM if `nxm`]
+    """
+    req = ep_depacketize(headers)
+    n = req["tag"].shape[0]
+    if nxm is None:
+        nxm = jnp.zeros((n,), bool)
+    channel = jnp.where(req["is_write"], CH_S2M_NDR, CH_S2M_DRS)
+    opcode = jnp.where(
+        req["is_write"],
+        jnp.uint32(int(spec.S2MNDR.CMP)),
+        jnp.where(nxm, jnp.uint32(int(spec.S2MDRS.MEM_DATA_NXM)),
+                  jnp.uint32(int(spec.S2MDRS.MEM_DATA))))
+    resp = S2M_CODEC.pack({
+        "valid": req["valid"],
+        "channel": channel.astype(jnp.uint32),
+        "opcode": opcode,
+        "meta_field": req["meta_field"],
+        "meta_value": req["meta_value"],
+        "tag": req["tag"],
+        "ld_id": req["ld_id"],
+        "dev_load": (jnp.full((n,), dev_load, jnp.uint32)
+                     if jnp.ndim(dev_load) == 0 else jnp.asarray(dev_load)),
+        "poison": nxm.astype(jnp.uint32),
+    })
+    slots = jnp.where(req["is_write"], SLOTS_HEADER, SLOTS_HEADER + SLOTS_DATA)
+    return {
+        "headers": resp,
+        "slots": slots.astype(jnp.int32),
+        "wire_bytes": (slots.sum() * SLOT_WIRE_BYTES).astype(jnp.int32),
+    }
+
+
+def rc_complete(s2m_headers: Array) -> Dict[str, Array]:
+    """De-packetize S2M responses at the root complex (host completion)."""
+    f = S2M_CODEC.unpack(s2m_headers)
+    is_drs = f["channel"] == CH_S2M_DRS
+    ndr_legal = jnp.isin(f["opcode"],
+                         jnp.asarray([int(o) for o in spec.S2MNDR],
+                                     jnp.uint32))
+    drs_legal = jnp.isin(f["opcode"],
+                         jnp.asarray([int(o) for o in spec.S2MDRS],
+                                     jnp.uint32))
+    legal = (f["valid"] == 1) & jnp.where(is_drs, drs_legal, ndr_legal)
+    return {**f, "is_read_data": is_drs, "legal": legal}
+
+
+def roundtrip_wire_bytes(n_reads: int, n_writes: int) -> Tuple[int, int]:
+    """Closed-form wire bytes (m2s, s2m) for a read/write mix — used by the
+    timing model to price CXL.mem traffic without materializing packets."""
+    m2s = (n_reads * SLOTS_HEADER + n_writes * (SLOTS_HEADER + SLOTS_DATA))
+    s2m = (n_reads * (SLOTS_HEADER + SLOTS_DATA) + n_writes * SLOTS_HEADER)
+    return m2s * SLOT_WIRE_BYTES, s2m * SLOT_WIRE_BYTES

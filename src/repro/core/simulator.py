@@ -1,0 +1,90 @@
+"""CXLRAMSim facade: build -> enumerate -> online -> characterize.
+
+One object wires the whole paper together: topology + firmware + enumeration
+(:mod:`.topology`), per-tier timing (:mod:`.timing`), the cache/tier machine
+(:mod:`.machine`), placement policies (:mod:`.numa`) and STREAM workloads
+(:mod:`.stream`).  The quickstart example and every benchmark drive this
+class; the framework's tiering planner (:mod:`repro.memory.tiering`) reuses
+its timing + map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import cache as cache_sim
+from repro.core import numa as numa_mod
+from repro.core import stream as stream_mod
+from repro.core import topology as topo
+from repro.core.machine import CPUModel, Machine, RunResult
+from repro.core.timing import TimingConfig
+
+
+@dataclasses.dataclass
+class SimConfig:
+    dram_gib: int = 16
+    expander_gib: Sequence[int] = (16,)
+    n_cores: int = 4
+    cache: cache_sim.CacheParams = dataclasses.field(
+        default_factory=cache_sim.CacheParams)
+    timing: TimingConfig = dataclasses.field(default_factory=TimingConfig)
+    cpu: CPUModel = dataclasses.field(default_factory=CPUModel)
+
+
+class CXLRAMSim:
+    """Full-system CXL memory-expander simulator (JAX-native)."""
+
+    def __init__(self, config: SimConfig | None = None):
+        self.config = config or SimConfig()
+        self.system, self.map, self.cli = topo.build_default_system(
+            dram_gib=self.config.dram_gib,
+            expander_gib=tuple(self.config.expander_gib),
+            n_cores=self.config.n_cores)
+        self.machine = Machine(self.config.cache, self.config.timing,
+                               self.config.cpu)
+        self._onlined = False
+
+    # ---- lifecycle (CXL-CLI flow) ----------------------------------------
+    def online(self, mode: str = "znuma") -> List[Dict]:
+        """Online every region (the `cxl create-region` + ndctl flow)."""
+        for r in list(self.map.regions):
+            self.cli.online_memory(r.name, mode=mode)
+        self._onlined = True
+        return self.cli.list_regions()
+
+    def memdevs(self) -> List[Dict]:
+        return self.cli.list_memdevs()
+
+    def numastat(self) -> Dict[int, Dict]:
+        return self.cli.numastat()
+
+    # ---- characterization -------------------------------------------------
+    def run_stream(self, kernel: str, footprint_bytes: int,
+                   policy: numa_mod.Policy,
+                   cpu: Optional[CPUModel] = None) -> RunResult:
+        """One STREAM kernel pass through the cache/tier machine."""
+        if not self._onlined and not isinstance(policy, numa_mod.ZNuma):
+            raise RuntimeError("online() the CXL region first")
+        layout = stream_mod.layout_for_footprint(footprint_bytes)
+        addr, is_write = stream_mod.stream_trace(kernel, layout)
+        machine = self.machine if cpu is None else Machine(
+            self.config.cache, self.config.timing, cpu)
+        return machine.run_trace(addr, is_write, policy, layout.n_pages)
+
+    def stream_suite(self, footprint_factors: Sequence[int] = (2, 4, 6, 8),
+                     policy: Optional[numa_mod.Policy] = None,
+                     kernel: str = "triad",
+                     cpu: Optional[CPUModel] = None) -> List[Dict]:
+        """The paper's §IV sweep: STREAM at k x L2 footprints."""
+        policy = policy or numa_mod.ZNuma(cxl_fraction=1.0)
+        rows = []
+        for k in footprint_factors:
+            fp = k * self.config.cache.l2_bytes
+            r = self.run_stream(kernel, fp, policy, cpu=cpu)
+            rows.append({"footprint_x_l2": k, "kernel": kernel,
+                         "policy": numa_mod.describe(policy),
+                         "cpu": r.cpu, **r.row()})
+        return rows
+
+    def latency_breakdown(self) -> Dict[str, float]:
+        return self.config.timing.cxl.stage_breakdown()

@@ -1,0 +1,80 @@
+"""CXL switch modeling (the paper's v2.0 roadmap, implemented here).
+
+A CXL 2.0 switch sits between a host-bridge root port and multiple
+endpoints: one **upstream switch port (USP)** shares its link bandwidth
+among N **downstream switch ports (DSPs)**.  Two effects matter at system
+level and are modeled:
+
+  * **latency**: each switch hop adds a store-and-forward + arbitration
+    delay on both the request and response path (~2 x hop_ns);
+  * **bandwidth contention**: the upstream link is the shared bottleneck —
+    aggregate payload across all endpoints below the switch saturates at
+    the USP's payload bandwidth, and the loaded-latency queue forms at the
+    USP, not at each device.
+
+:func:`fanout_timing` derives the effective per-endpoint
+:class:`~repro.core.timing.CXLTiming` seen through a switch, so everything
+downstream (machine model, tiering planner, roofline `cxl` term) works
+unchanged — pass the derived timing instead of the direct-attach one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.timing import CXLTiming, QueueModel
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchConfig:
+    """One-level CXL 2.0 switch below a root port."""
+    n_downstream: int = 4          # endpoints below the switch
+    hop_ns: float = 35.0           # per-traversal store&forward + arbitration
+    usp_lanes: int = 16            # upstream link width
+    usp_pcie_gen: int = 5
+    service_ns: float = 40.0       # USP arbitration service quantum
+
+
+def fanout_timing(base: CXLTiming, sw: SwitchConfig) -> CXLTiming:
+    """Effective endpoint timing when attached through the switch.
+
+    Latency: +2 hops (request + response traverse the switch).
+    Bandwidth: min(device path, USP share). The share is the *fair* share
+    at full contention (USP payload / N); burst access to an idle switch
+    still reaches the device's own bandwidth — the queue model covers the
+    region in between.
+    """
+    usp = CXLTiming(lanes=sw.usp_lanes, pcie_gen=sw.usp_pcie_gen,
+                    backend_gbps=1e9)     # wire-only reference
+    usp_payload = usp.payload_read_gbps
+    share = usp_payload / max(sw.n_downstream, 1)
+    return dataclasses.replace(
+        base,
+        link_prop_ns=base.link_prop_ns + 2 * sw.hop_ns,
+        backend_gbps=min(base.backend_gbps, share),
+        service_ns=base.service_ns + sw.service_ns,
+    )
+
+
+def usp_loaded_latency_ns(base: CXLTiming, sw: SwitchConfig,
+                          per_endpoint_gbps: List[float]) -> np.ndarray:
+    """Loaded latency per endpoint when all of them offer load at once.
+
+    The shared USP queue sees the *aggregate*; each endpoint's latency is
+    the switched idle path plus the shared-queue delay at total utilization
+    — the head-of-line coupling that makes switched pools slower than the
+    per-device curves suggest.
+    """
+    eff = fanout_timing(base, sw)
+    usp = CXLTiming(lanes=sw.usp_lanes, pcie_gen=sw.usp_pcie_gen,
+                    backend_gbps=1e9)
+    total = float(np.sum(per_endpoint_gbps))
+    rho = total / usp.payload_read_gbps
+    q = QueueModel(idle_ns=eff.idle_ns, service_ns=eff.service_ns)
+    return np.asarray([float(q.latency_ns(rho))] * len(per_endpoint_gbps))
+
+
+def pooled_capacity_per_node(capacities: List[int]) -> int:
+    return int(np.sum(capacities))

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, batch_at_step, iterate  # noqa: F401

@@ -1,0 +1,77 @@
+"""Deterministic synthetic data pipeline (sharded, resumable).
+
+Tokens are a pure function of (seed, step, shard) — threefry-hashed — so:
+  * every data-parallel shard draws disjoint streams with no coordination;
+  * restarting from a checkpoint at step k reproduces the exact stream
+    (the pipeline state IS the step counter — deliverable for the
+    fault-tolerance story);
+  * the stream has LM-learnable structure (a small induction-head-friendly
+    Markov chain) so example trainings show loss going down, not just noise.
+
+Frontends for the stubbed modalities: musicgen gets (B, C, S) codebook ids,
+qwen2-vl gets patch embeddings + M-RoPE positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.rope import text_mrope_positions
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    batch_per_shard: int = 8
+    seq_len: int = 256
+    n_shards: int = 1
+    shard_id: int = 0
+
+
+def _markov_tokens(rng: np.random.Generator, b: int, s: int, vocab: int
+                   ) -> np.ndarray:
+    """Order-1 Markov stream: token_{t+1} = (a*token_t + noise) mod vocab.
+
+    Gives a model something learnable (the affine map) while staying O(1)
+    to generate and fully deterministic."""
+    a = 31
+    x = np.empty((b, s), np.int64)
+    x[:, 0] = rng.integers(0, vocab, b)
+    noise = rng.integers(0, max(vocab // 64, 2), (b, s))
+    for t in range(1, s):
+        x[:, t] = (a * x[:, t - 1] + noise[:, t]) % vocab
+    return x.astype(np.int32)
+
+
+def batch_at_step(cfg: ModelConfig, dc: DataConfig, step: int
+                  ) -> Dict[str, jax.Array]:
+    """The batch for (step, shard) — pure function, O(1) state."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([dc.seed, step, dc.shard_id]))
+    b, s = dc.batch_per_shard, dc.seq_len
+    if cfg.n_codebooks > 1:
+        toks = np.stack([_markov_tokens(rng, b, s, cfg.vocab_size)
+                         for _ in range(cfg.n_codebooks)], axis=1)
+    else:
+        toks = _markov_tokens(rng, b, s, cfg.vocab_size)
+    out: Dict[str, jax.Array] = {"tokens": jnp.asarray(toks)}
+    if cfg.rope == "mrope":
+        out["positions"] = text_mrope_positions(b, s)
+    if cfg.vision_tokens:
+        out["vision"] = jnp.asarray(
+            rng.standard_normal((b, cfg.vision_tokens, cfg.vision_dim),
+                                np.float32), jnp.bfloat16)
+    return out
+
+
+def iterate(cfg: ModelConfig, dc: DataConfig, start_step: int = 0
+            ) -> Iterator[Dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        yield batch_at_step(cfg, dc, step)
+        step += 1

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for CXLRAMSim-JAX's compute hot-spots.
+
+cache_sim       — set-associative LRU tag-match over traces (simulator core)
+stream_triad    — STREAM bandwidth probe
+flash_attention — blockwise causal/windowed attention (training)
+paged_attention — tiered paged-KV decode attention (serving / CXL KV spill)
+
+Use :mod:`repro.kernels.ops` (auto interpret-mode off-TPU); oracles live in
+:mod:`repro.kernels.ref`.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: set-associative LRU cache simulation over a trace.
+
+This is the compute hot-spot of CXLRAMSim's vectorized re-think of gem5
+(DESIGN.md §2): simulating a cache over a multi-million-access trace.  The
+TPU-native design:
+
+  * the **tag store and LRU timestamps live in VMEM scratch** — (sets, ways)
+    int32 arrays, <=1 MiB for realistic geometries, persistent across the
+    sequential TPU grid;
+  * the **trace streams HBM -> VMEM in chunks** via the BlockSpec index_map,
+    one grid step per chunk (double-buffered by the Pallas pipeline);
+  * within a chunk the state machine is a `fori_loop` (trace order is a true
+    dependency), but each iteration's tag compare / LRU victim select is a
+    vectorized op across `ways` lanes.
+
+Semantics match :func:`repro.kernels.ref.cache_sim` exactly (tested across
+shape sweeps in interpret mode; `interpret=False` is the TPU target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _cache_sim_kernel(addr_ref, hits_ref, tags_ref, use_ref,
+                      tag_scratch, use_scratch, *, chunk: int,
+                      n_sets: int, n_ways: int, n_chunks: int):
+    step = pl.program_id(0)
+
+    # initialize persistent VMEM state on the first grid step
+    @pl.when(step == 0)
+    def _init():
+        tag_scratch[...] = jnp.full((n_sets, n_ways), -1, jnp.int32)
+        use_scratch[...] = jnp.zeros((n_sets, n_ways), jnp.int32)
+
+    base_t = step * chunk + 1
+
+    def body(i, carry):
+        a = addr_ref[i]
+        s = a & (n_sets - 1)
+        row = tag_scratch[s, :]                        # (ways,) lanes
+        hit_mask = row == a
+        hit = jnp.any(hit_mask)
+        way = jnp.where(hit, jnp.argmax(hit_mask),
+                        jnp.argmin(use_scratch[s, :])).astype(jnp.int32)
+        tag_scratch[s, way] = a
+        use_scratch[s, way] = base_t + i
+        hits_ref[i] = hit.astype(jnp.int32)
+        return carry
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+    # publish final state on the last grid step
+    @pl.when(step == n_chunks - 1)
+    def _out():
+        tags_ref[...] = tag_scratch[...]
+        use_ref[...] = use_scratch[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_sets", "n_ways", "chunk", "interpret"))
+def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
+              chunk: int = 512, interpret: bool = True):
+    """Run the cache-simulation kernel.
+
+    Args:
+      addr: (N,) int32 cacheline-index trace; N must be a multiple of
+        `chunk` (callers pad with a sentinel the stats layer strips).
+      n_sets, n_ways: cache geometry (n_sets a power of two).
+      chunk: trace elements per grid step (VMEM tile of the trace).
+      interpret: run the kernel body in Python (CPU validation mode).
+
+    Returns: (hits (N,) int32, tags (n_sets, n_ways) int32, use int32).
+    """
+    n = addr.shape[0]
+    assert n % chunk == 0, "pad trace to a multiple of `chunk`"
+    assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
+    n_chunks = n // chunk
+
+    kernel = functools.partial(_cache_sim_kernel, chunk=chunk,
+                               n_sets=n_sets, n_ways=n_ways,
+                               n_chunks=n_chunks)
+    hits, tags, use = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((chunk,), lambda i: (i,)),
+            pl.BlockSpec((n_sets, n_ways), lambda i: (0, 0)),
+            pl.BlockSpec((n_sets, n_ways), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_sets, n_ways), jnp.int32),
+            pltpu.VMEM((n_sets, n_ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )(addr.astype(jnp.int32))
+    return hits, tags, use

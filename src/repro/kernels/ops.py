@@ -1,0 +1,61 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Each op auto-selects `interpret` mode: compiled kernels on TPU backends,
+Python-interpreted bodies elsewhere (this container is CPU-only; TPU v5e is
+the target).  Model code calls these; pure-JAX fallbacks (`*_jnp`) are what
+the multi-pod dry-run lowers, since Pallas TPU kernels cannot lower on the
+CPU host platform.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cache_sim import cache_sim as _cache_sim_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.paged_attention import paged_attention as _paged_kernel
+from repro.kernels.stream_triad import stream_triad as _triad_kernel
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cache_sim(addr: Array, *, n_sets: int, n_ways: int, chunk: int = 512):
+    n = addr.shape[0]
+    pad = (-n) % chunk
+    if pad:
+        # sentinel addresses that can never hit (distinct huge lines)
+        sentinel = jnp.arange(pad, dtype=jnp.int32) + jnp.int32(2**30)
+        addr = jnp.concatenate([addr.astype(jnp.int32), sentinel])
+    hits, tags, use = _cache_sim_kernel(addr, n_sets=n_sets, n_ways=n_ways,
+                                        chunk=chunk, interpret=_interpret())
+    return hits[:n], tags, use
+
+
+def stream_triad(b: Array, c: Array, s) -> Array:
+    return _triad_kernel(b, c, s, interpret=_interpret())
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[int] = None) -> Array:
+    return _flash_kernel(q, k, v, causal=causal, window=window,
+                         interpret=_interpret())
+
+
+def paged_attention(q: Array, k_pages: Array, v_pages: Array,
+                    block_table: Array, context_lens: Array) -> Array:
+    return _paged_kernel(q, k_pages, v_pages, block_table, context_lens,
+                         interpret=_interpret())
+
+
+# Pure-jnp fallbacks (what pjit lowers in the dry-run / on CPU hosts).
+cache_sim_jnp = ref.cache_sim
+stream_triad_jnp = ref.stream_triad
+flash_attention_jnp = ref.flash_attention
+paged_attention_jnp = ref.paged_attention

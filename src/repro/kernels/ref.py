@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(`tests/test_kernels.py` sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# cache_sim: single-level set-associative LRU cache over an address trace
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def cache_sim(addr: Array, n_sets: int, n_ways: int
+              ) -> Tuple[Array, Array, Array]:
+    """Simulate an LRU set-associative cache (allocate-on-miss, reads and
+    writes identical) over a cacheline-index trace.
+
+    Args:
+      addr: (N,) int32 line indices.
+    Returns:
+      hits: (N,) int32 {0,1}
+      tags: (n_sets, n_ways) int32 final tag state (-1 invalid)
+      use:  (n_sets, n_ways) int32 final LRU timestamps
+    """
+    def step(carry, a):
+        tags, use, t = carry
+        s = a & (n_sets - 1)
+        row = tags[s]
+        hit_mask = row == a
+        hit = hit_mask.any()
+        way = jnp.where(hit, jnp.argmax(hit_mask), jnp.argmin(use[s]))
+        tags = tags.at[s, way].set(a)
+        use = use.at[s, way].set(t)
+        return (tags, use, t + 1), hit.astype(jnp.int32)
+
+    tags0 = jnp.full((n_sets, n_ways), -1, jnp.int32)
+    use0 = jnp.zeros((n_sets, n_ways), jnp.int32)
+    (tags, use, _), hits = jax.lax.scan(
+        step, (tags0, use0, jnp.int32(1)), addr.astype(jnp.int32))
+    return hits, tags, use
+
+
+# ---------------------------------------------------------------------------
+# stream_triad: a = b + s * c
+# ---------------------------------------------------------------------------
+def stream_triad(b: Array, c: Array, s) -> Array:
+    return b + jnp.asarray(s, b.dtype) * c
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: causal (optionally windowed) softmax attention
+# ---------------------------------------------------------------------------
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None) -> Array:
+    """Reference attention.
+
+    Shapes: q (B, H, Sq, D); k, v (B, H, Sk, D). GQA is handled by callers
+    (heads pre-broadcast). Returns (B, H, Sq, D), computed in f32.
+    """
+    *_, sq, d = q.shape
+    sk = k.shape[-2]
+    scale = (d ** -0.5) if scale is None else scale
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)   # align ends (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention: single-token decode over a paged (tiered) KV cache
+# ---------------------------------------------------------------------------
+def paged_attention(q: Array, k_pages: Array, v_pages: Array,
+                    block_table: Array, context_lens: Array,
+                    *, scale: Optional[float] = None) -> Array:
+    """Decode attention where KV lives in pages indexed by a block table —
+    the memory layout used by the CXL-tiered KV cache (pages may physically
+    reside in HBM or the CXL pool; the table is tier-agnostic).
+
+    Shapes:
+      q:            (B, H, D)       one new token per sequence
+      k_pages:      (P, page, K, D) global page pool (K kv heads)
+      v_pages:      (P, page, K, D)
+      block_table:  (B, nblk) int32 page ids per sequence (padded arbitrary)
+      context_lens: (B,) int32 valid tokens per sequence
+    Returns (B, H, D).
+    """
+    b, h, d = q.shape
+    p, page, kh, _ = k_pages.shape
+    nblk = block_table.shape[1]
+    groups = h // kh
+    scale = (d ** -0.5) if scale is None else scale
+
+    k = k_pages[block_table]                      # (B, nblk, page, K, D)
+    v = v_pages[block_table]
+    k = k.reshape(b, nblk * page, kh, d)
+    v = v.reshape(b, nblk * page, kh, d)
+    qf = q.reshape(b, kh, groups, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(nblk * page)[None, None, None, :]
+    mask = pos < context_lens[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: STREAM triad (a = b + s*c) — the bandwidth probe.
+
+STREAM plays two roles in the paper: the characterization workload (§IV)
+and the yardstick for memory bandwidth.  On the TPU side this kernel is the
+HBM-bandwidth probe used by the benchmark harness: a purely memory-bound
+elementwise op, tiled so each grid step moves one VMEM-resident block
+(8 x 1024 lanes by default — sublane/lane aligned for the VPU) while the
+Pallas pipeline double-buffers the HBM streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _triad_kernel(s_ref, b_ref, c_ref, a_ref):
+    a_ref[...] = b_ref[...] + s_ref[0] * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stream_triad(b: Array, c: Array, s, *, block_rows: int = 8,
+                 interpret: bool = True) -> Array:
+    """a = b + s*c over (R, L) arrays, tiled (block_rows, L) per grid step.
+
+    L should be a multiple of 128 (TPU lanes); R a multiple of block_rows.
+    """
+    assert b.shape == c.shape and b.ndim == 2
+    rows, lanes = b.shape
+    assert rows % block_rows == 0, "pad rows to block multiple"
+    s_arr = jnp.asarray([s], b.dtype)
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),               # scalar s
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), b.dtype),
+        interpret=interpret,
+    )(s_arr, b, c)

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware (deliverable e): for each architecture and input shape we build
+ShapeDtypeStruct stand-ins, shard them over the production mesh, and
+`.lower().compile()` the step function.  `compiled.memory_analysis()`
+proves the footprint; `compiled.cost_analysis()` + the post-SPMD HLO text
+feed the roofline (deliverable g).
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch import mesh as mesh_mod
+from repro.models import model as M
+from repro.models import sharding as sh
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+
+def _tensor_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[16,256,128]'."""
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the optimized HLO.
+
+    Uses the *output* shape on the lhs of each collective instruction (for
+    all-reduce in == out; for all-gather it's the gathered size, the wire
+    cost upper bound; reduce-scatter uses operand side).
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs, _, rhs = line.partition("=")
+        if kind == "reduce-scatter":
+            bytes_ = _tensor_bytes(rhs.split("reduce-scatter")[-1])
+        else:
+            bytes_ = _tensor_bytes(lhs)
+        out[kind] = out.get(kind, 0) + bytes_
+    return out
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                      # ok | skipped | failed
+    note: str = ""
+    compile_s: float = 0.0
+    flops: float = 0.0
+    hlo_bytes: float = 0.0
+    bytes_per_device: int = 0
+    peak_memory_per_device: int = 0
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    collectives: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def row(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool,
+               accum_steps: int = 1, overrides: Optional[dict] = None,
+               strategy: str = "auto", fsdp_pods: bool = False):
+    """Returns (jitted_fn, example_args_structs) for one cell, under mesh ctx."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = M.SHAPES[shape]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    if strategy == "auto":
+        strategy = getattr(cfg, "strategy", "tp")
+    if cell.kind == "decode":
+        strategy = "tp"      # decode caches need the context-parallel axis
+    n_mesh = 1
+    for v in mesh.shape.values():
+        n_mesh *= v
+    if strategy == "dp" and cell.global_batch % n_mesh != 0:
+        strategy = "tp"      # pure DP needs batch % (all chips) == 0
+    if strategy == "dp":
+        # pure DP + ZeRO-3: batch over every mesh axis, no TP constraints
+        baxes = mesh_mod.batch_axes(mesh) + ("model",)
+        model_axes = ()
+    else:
+        baxes = mesh_mod.batch_axes(mesh)
+        model_axes = ("model",)
+    n_batch_shards = 1
+    for a in baxes:
+        n_batch_shards *= mesh.shape[a]
+
+    params_struct = tf.param_shapes(cfg)
+    # hierarchical vs global ZeRO: by default the fsdp axis is intra-pod
+    # ('data'); --fsdp-pods extends it over ('pod','data') on the multi-pod
+    # mesh (halves optimizer bytes/device at the cost of cross-pod gathers)
+    fsdp_ax = (("pod", "data") if (fsdp_pods and multi_pod) else "data")
+    p_specs = M.param_pspecs(cfg, batch_axes=mesh_mod.batch_axes(mesh),
+                             fsdp_axes=fsdp_ax, shard_mode=strategy
+                             if strategy == "dp" else "tp")
+    p_sh = mesh_mod.to_named(p_specs, params_struct, mesh)
+
+    b_specs = M.batch_pspecs(cfg, cell, batch_axes=baxes,
+                             n_batch_shards=n_batch_shards)
+    inputs = M.input_specs(cfg, cell)
+    b_sh = mesh_mod.to_named(b_specs, inputs, mesh)
+
+    ctx = sh.mesh_context(mesh, baxes, model_axes)
+
+    if cell.kind == "train":
+        opt_struct = jax.eval_shape(adamw.init, params_struct)
+        o_specs = adamw.OptState(step=P(), m=p_specs, v=p_specs)
+        o_sh = jax.tree.map(
+            lambda spec, sds: NamedSharding(
+                mesh, mesh_mod.sanitize_spec(spec, sds.shape, mesh)),
+            o_specs, opt_struct,
+            is_leaf=lambda x: isinstance(x, P))
+        step = M.make_train_step(cfg, adamw.AdamWConfig(),
+                                 accum_steps=accum_steps)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        args = (params_struct, opt_struct, inputs)
+    elif cell.kind == "prefill":
+        fn = jax.jit(lambda p, b: M.prefill_step(p, cfg, b),
+                     in_shardings=(p_sh, b_sh))
+        args = (params_struct, inputs)
+    else:  # decode
+        fn = jax.jit(lambda p, tok, caches, ctx_len:
+                     M.serve_step(p, cfg, tok, caches, ctx_len),
+                     in_shardings=(p_sh, b_sh["token"], b_sh["caches"],
+                                   b_sh["ctx_len"]),
+                     donate_argnums=(2,))
+        args = (params_struct, inputs["token"], inputs["caches"],
+                inputs["ctx_len"])
+    return fn, args, ctx, cfg, cell
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             accum_steps: int = 1, overrides: Optional[dict] = None,
+             save_hlo: Optional[pathlib.Path] = None,
+             strategy: str = "auto", fsdp_pods: bool = False) -> CellResult:
+    cfg = get_config(arch)
+    tag = _mesh_tag(multi_pod)
+    cell = M.SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return CellResult(arch, shape, tag, "skipped",
+                          note="full attention; 500k prefill is quadratic "
+                               "(spec rule, DESIGN.md §6)")
+    t0 = time.time()
+    try:
+        fn, args, ctx, cfg, cell = build_cell(arch, shape, multi_pod,
+                                              accum_steps, overrides,
+                                              strategy, fsdp_pods)
+        with ctx:
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        if save_hlo:
+            save_hlo.parent.mkdir(parents=True, exist_ok=True)
+            save_hlo.write_text(hlo)
+        coll = collective_bytes(hlo)
+        n_dev = 512 if multi_pod else 256
+        res = CellResult(
+            arch=arch, shape=shape, mesh=tag, status="ok",
+            compile_s=round(time.time() - t0, 1),
+            flops=float(cost.get("flops", 0.0)),
+            hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+            bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0)
+                                 + getattr(mem, "argument_size_in_bytes", 0)),
+            peak_memory_per_device=int(
+                getattr(mem, "peak_memory_in_bytes",
+                        getattr(mem, "temp_size_in_bytes", 0))),
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            collectives=coll,
+        )
+        return res
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        return CellResult(arch, shape, tag, "failed",
+                          note=f"{type(e).__name__}: {e}"[:400],
+                          compile_s=round(time.time() - t0, 1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(M.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--strategy", choices=("auto", "tp", "dp"),
+                    default="auto")
+    ap.add_argument("--fsdp-pods", action="store_true",
+                    help="extend ZeRO over the pod axis (multi-pod)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in M.SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = _mesh_tag(mp) + (f"_{args.tag}" if args.tag else "")
+            hlo_path = (outdir / "hlo" / f"{arch}__{shape}__{tag}.txt"
+                        if args.save_hlo else None)
+            res = run_cell(arch, shape, mp, accum_steps=args.accum_steps,
+                           save_hlo=hlo_path, strategy=args.strategy,
+                           fsdp_pods=args.fsdp_pods)
+            fn = outdir / f"{arch}__{shape}__{tag}.json"
+            fn.write_text(json.dumps(res.row(), indent=1))
+            print(f"[{res.status:7s}] {arch} {shape} {tag} "
+                  f"compile={res.compile_s}s flops={res.flops:.3e} "
+                  f"mem/dev={res.peak_memory_per_device/2**30:.2f}GiB "
+                  f"{res.note}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

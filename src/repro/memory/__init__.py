@@ -1,0 +1,3 @@
+"""CXL-tier memory management: planner, paged KV cache, offload schedules."""
+from repro.memory.tiering import (MemoryPlan, TierSpec, kv_bytes_per_token,  # noqa: F401
+                                  plan_serving, plan_training)

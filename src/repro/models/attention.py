@@ -1,0 +1,377 @@
+"""Attention variants: GQA (full / sliding-window / local), and MLA.
+
+Pure-JAX blockwise implementations (online softmax over KV chunks) are the
+paths the multi-pod dry-run lowers; on TPU runtimes the Pallas kernels in
+:mod:`repro.kernels` implement the same math (`use_pallas` flag).
+
+Sharding strategies (set per arch in configs, see DESIGN.md §4):
+  * 'heads'    — query heads sharded over the model axis (n_heads % tp == 0);
+  * 'sequence' — query-sequence sharded over the model axis (starcoder2's 24
+    and qwen2-vl's 12 heads don't divide tp=16; seq does);
+  * decode always context-parallels the KV cache: cache S is sharded over the
+    model axis and softmax stats all-reduce across it (flash-decode style).
+
+Caches:
+  GQA: {k,v: (B, S, K, hd)} (S = window for SWA, rolling).
+  MLA: {ckv: (B, S, r), krope: (B, S, p)} latent cache — 9x smaller, decode
+       uses the absorbed formulation (q pre-multiplied by W_uk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rope as rope_mod
+from repro.models.layers import dense_init, matmul, rmsnorm, rmsnorm_init
+from repro.models.sharding import BATCH, MODEL, shard
+
+Array = jax.Array
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (training / prefill) — pure JAX, GQA-aware
+# ---------------------------------------------------------------------------
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        kv_chunk: int = 1024) -> Array:
+    """Online-softmax attention. q (B,Sq,N,hd); k,v (B,Skv,K,hd) -> like q.
+
+    Peak memory O(Sq * kv_chunk) per (batch, head) instead of O(Sq * Skv);
+    with `window`, chunks wholly outside the band are still *computed* in
+    this jnp path (masked) — the Pallas kernel skips them structurally.
+    """
+    b, sq, n, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]                                     # may differ (MLA)
+    g = n // kh
+    scale = hd ** -0.5
+    kv_chunk = min(kv_chunk, skv)
+    skv_pad = -(-skv // kv_chunk) * kv_chunk
+    if skv_pad != skv:                      # pad + mask the tail chunk
+        pad = [(0, 0), (0, skv_pad - skv), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qg = jnp.moveaxis(q.reshape(b, sq, kh, g, hd), 1, 3)   # (B,K,G,Sq,hd)
+    qg = (qg.astype(F32) * scale).astype(q.dtype)
+    qpos = jnp.arange(sq, dtype=jnp.int32) + (skv - sq)
+
+    kc = k.reshape(b, skv_pad // kv_chunk, kv_chunk, kh, hd)
+    vc = v.reshape(b, skv_pad // kv_chunk, kv_chunk, kh, hd_v)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        kpos = j * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+        s = jnp.einsum("bkgqd,btkd->bkgqt", qg, kj,
+                       preferred_element_type=F32)          # (B,K,G,Sq,T)
+        mask = (kpos < skv)[None, :]                        # pad tail
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        upd = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(q.dtype), vj,
+                         preferred_element_type=F32)
+        acc_new = acc * alpha[..., None] + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, F32)
+    l0 = jnp.zeros((b, kh, g, sq), F32)
+    a0 = jnp.zeros((b, kh, g, sq, hd_v), F32)
+    n_chunks = skv_pad // kv_chunk
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks, dtype=jnp.int32)))
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / safe_l[..., None]).astype(q.dtype)         # (B,K,G,Sq,hd_v)
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, n, hd_v)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     ctx_len: Array) -> Array:
+    """One-token attention vs a (possibly context-parallel) cache.
+
+    q (B,N,hd); k/v_cache (B,S,K,hd); ctx_len () or (B,) -> (B,N,hd).
+    """
+    b, n, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = n // kh
+    scale = hd ** -0.5
+    qg = q.reshape(b, kh, g, hd).astype(F32) * scale
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k_cache.astype(F32))                # (B,K,G,S)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    valid = pos[None, :] < jnp.reshape(ctx_len, (-1, 1))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(F32))
+    return out.reshape(b, n, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig) -> Dict:
+    d, n, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    k1, k4 = jax.random.split(key, 2)
+    p = {
+        # fused QKV: one matmul, and — the real win — ONE backward dL/dx
+        # partial-sum all-reduce instead of three (EXPERIMENTS.md §Perf #2
+        # iteration 4)
+        "wqkv": dense_init(k1, (d, (n + 2 * kh) * hd), dtype=dt),
+        "wo": dense_init(k4, (n * hd, d), dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd)
+        p["knorm"] = rmsnorm_init(hd)
+    return p
+
+
+def _qkv(params: Dict, x: Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    n, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qkv = matmul(x, params["wqkv"])
+    q = qkv[..., :n * hd].reshape(b, s, n, hd)
+    k = qkv[..., n * hd:(n + kh) * hd].reshape(b, s, kh, hd)
+    v = qkv[..., (n + kh) * hd:].reshape(b, s, kh, hd)
+    return q, k, v
+
+
+def _apply_positional(x: Array, positions, cfg: ModelConfig) -> Array:
+    if cfg.rope == "rope":
+        return rope_mod.apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return rope_mod.apply_mrope(x, positions, cfg.rope_theta,
+                                    cfg.mrope_sections)
+    return x  # 'none': sinusoidal added at the embedding
+
+
+def attention(params: Dict, x: Array, cfg: ModelConfig, positions,
+              *, window: Optional[int] = None,
+              seq_shard: bool = False) -> Array:
+    """Full/SWA attention over a whole sequence (train / prefill)."""
+    b, s, d = x.shape
+    n, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    q = _apply_positional(q, positions, cfg)
+    k = _apply_positional(k, positions, cfg)
+    if seq_shard:
+        q = shard(q, BATCH, MODEL, None, None)
+    else:
+        q = shard(q, BATCH, None, MODEL, None)
+    win = window if window is not None else cfg.window
+    o = blockwise_attention(q, k, v, causal=True, window=win)
+    o = o.reshape(b, s, n * hd)
+    return shard(matmul(o, params["wo"], reduce_dtype=x.dtype if cfg.tp_reduce_bf16 else None),
+                 BATCH, None, None)
+
+
+def attention_prefill(params: Dict, x: Array, cfg: ModelConfig, positions,
+                      *, window: Optional[int] = None,
+                      seq_shard: bool = False) -> Tuple[Array, Dict]:
+    """Like :func:`attention` but also returns the decode cache.
+
+    For SWA/local attention the cache holds the last `window` tokens,
+    rolled so slot (p mod window) carries token p — the invariant
+    :func:`attention_decode` maintains."""
+    b, s, d = x.shape
+    n, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    q = _apply_positional(q, positions, cfg)
+    k = _apply_positional(k, positions, cfg)
+    if seq_shard:
+        q = shard(q, BATCH, MODEL, None, None)
+    else:
+        q = shard(q, BATCH, None, MODEL, None)
+    win = window if window is not None else cfg.window
+    o = blockwise_attention(q, k, v, causal=True, window=win,
+                            kv_chunk=cfg.kv_chunk)
+    y = shard(matmul(o.reshape(b, s, n * hd), params["wo"],
+                     reduce_dtype=x.dtype if cfg.tp_reduce_bf16 else None), BATCH, None, None)
+    if win is not None and s >= win:
+        k_c = jnp.roll(k[:, -win:], shift=s % win, axis=1)
+        v_c = jnp.roll(v[:, -win:], shift=s % win, axis=1)
+    else:
+        k_c, v_c = k, v
+    cache = {"k": shard(k_c, BATCH, MODEL, None, None),
+             "v": shard(v_c, BATCH, MODEL, None, None)}
+    return y, cache
+
+
+def mla_prefill(params: Dict, x: Array, cfg: ModelConfig, positions
+                ) -> Tuple[Array, Dict]:
+    """MLA prefill: returns output and the latent {ckv, krope} cache."""
+    m = cfg.mla
+    b, s, d = x.shape
+    n = cfg.n_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, n,
+                                    m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = jnp.einsum("bsr,rnd->bsnd", ckv, wkv_b[..., :m.qk_nope_head_dim],
+                        preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsr,rnd->bsnd", ckv, wkv_b[..., m.qk_nope_head_dim:],
+                   preferred_element_type=F32).astype(x.dtype)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, n, m.qk_rope_head_dim))], axis=-1)
+    q = shard(q, BATCH, None, MODEL, None)
+    o = blockwise_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+    y = shard(matmul(o.reshape(b, s, n * m.v_head_dim), params["wo"],
+                     reduce_dtype=x.dtype if cfg.tp_reduce_bf16 else None), BATCH, None, None)
+    cache = {"ckv": shard(ckv, BATCH, MODEL, None),
+             "krope": shard(k_rope, BATCH, MODEL, None)}
+    return y, cache
+
+
+def attention_decode(params: Dict, x: Array, cfg: ModelConfig,
+                     cache: Dict, ctx_len: Array,
+                     *, window: Optional[int] = None
+                     ) -> Tuple[Array, Dict]:
+    """One-token decode. x (B,1,D); cache {k,v: (B,S,K,hd)}; returns
+    (y (B,1,D), updated cache).  SWA caches roll modulo the window."""
+    b, _, d = x.shape
+    n, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_cache = cache["k"].shape[1]
+    q, k, v = _qkv(params, x, cfg)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    pos = jnp.reshape(ctx_len, (1, 1)).astype(jnp.int32) * jnp.ones(
+        (b, 1), jnp.int32)
+    if cfg.rope == "mrope":
+        q = rope_mod.apply_mrope(q, jnp.stack([pos] * 3), cfg.rope_theta,
+                                 cfg.mrope_sections)
+        k = rope_mod.apply_mrope(k, jnp.stack([pos] * 3), cfg.rope_theta,
+                                 cfg.mrope_sections)
+    elif cfg.rope == "rope":
+        q = rope_mod.apply_rope(q, pos, cfg.rope_theta)
+        k = rope_mod.apply_rope(k, pos, cfg.rope_theta)
+    win = window if window is not None else cfg.window
+    slot = (ctx_len % s_cache).astype(jnp.int32) if win is not None \
+        else ctx_len.astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    valid = jnp.minimum(ctx_len + 1, s_cache)
+    o = decode_attention(q[:, 0], k_cache, v_cache, valid)
+    y = matmul(o.reshape(b, n * hd), params["wo"],
+               reduce_dtype=x.dtype if cfg.tp_reduce_bf16 else None
+               ).reshape(b, 1, d)
+    return shard(y, BATCH, None, None), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg: ModelConfig) -> Dict:
+    m = cfg.mla
+    d, n = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype=dt),
+        "q_norm": rmsnorm_init(m.q_lora_rank),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, n * qk), dtype=dt),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                            dtype=dt),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    n * (m.qk_nope_head_dim + m.v_head_dim)),
+                            dtype=dt),
+        "wo": dense_init(ks[4], (n * m.v_head_dim, d), dtype=dt),
+    }
+
+
+def _mla_qkv(params, x, cfg, positions):
+    """Shared projections. Returns q_nope, q_rope, ckv(normed), k_rope."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    n = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = matmul(rmsnorm(params["q_norm"], matmul(x, params["wq_a"]),
+                       cfg.norm_eps), params["wq_b"]).reshape(b, s, n, qk)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = rope_mod.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                                 cfg.rope_theta)
+    kv = matmul(x, params["wkv_a"])
+    ckv = rmsnorm(params["kv_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope_mod.apply_rope(
+        kv[..., m.kv_lora_rank:][:, :, None, :], positions,
+        cfg.rope_theta)[:, :, 0, :]                         # shared head
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_attention(params: Dict, x: Array, cfg: ModelConfig, positions
+                  ) -> Array:
+    """Train/prefill MLA: expand latent to per-head K/V (f32-accum einsums)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    n = cfg.n_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, n,
+                                    m.qk_nope_head_dim + m.v_head_dim)
+    k_nope = jnp.einsum("bsr,rnd->bsnd", ckv, wkv_b[..., :m.qk_nope_head_dim],
+                        preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsr,rnd->bsnd", ckv, wkv_b[..., m.qk_nope_head_dim:],
+                   preferred_element_type=F32).astype(x.dtype)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, n, m.qk_rope_head_dim))], axis=-1)
+    q = shard(q, BATCH, None, MODEL, None)
+    v_pad = v
+    o = blockwise_attention(q, k, v_pad, causal=True)
+    o = o.reshape(b, s, n * m.v_head_dim)
+    return shard(matmul(o, params["wo"], reduce_dtype=x.dtype if cfg.tp_reduce_bf16 else None),
+                 BATCH, None, None)
+
+
+def mla_decode(params: Dict, x: Array, cfg: ModelConfig, cache: Dict,
+               ctx_len: Array) -> Tuple[Array, Dict]:
+    """Absorbed-decode MLA over the latent cache {ckv:(B,S,r), krope:(B,S,p)}."""
+    m = cfg.mla
+    b, _, d = x.shape
+    n = cfg.n_heads
+    pos = jnp.reshape(ctx_len, (1, 1)) * jnp.ones((b, 1), jnp.int32)
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv(params, x, cfg, pos)
+    idx = ctx_len.astype(jnp.int32)
+    ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, idx, 0))
+    krope_c = jax.lax.dynamic_update_slice(cache["krope"], krope_new,
+                                           (0, idx, 0))
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, n,
+                                    m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_head_dim]                  # (r, n, nope)
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]                  # (r, n, v)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_eff = jnp.einsum("bnd,rnd->bnr", q_nope[:, 0].astype(F32),
+                       w_uk.astype(F32))                    # (B,N,r)
+    logits = (jnp.einsum("bnr,bsr->bns", q_eff, ckv_c.astype(F32))
+              + jnp.einsum("bnp,bsp->bns", q_rope[:, 0].astype(F32),
+                           krope_c.astype(F32))) * scale
+    s_len = ckv_c.shape[1]
+    valid = jnp.arange(s_len)[None, :] < jnp.reshape(ctx_len + 1, (-1, 1))
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bns,bsr->bnr", probs, ckv_c.astype(F32))
+    o = jnp.einsum("bnr,rnv->bnv", o_lat, w_uv.astype(F32)).astype(x.dtype)
+    y = matmul(o.reshape(b, n * m.v_head_dim), params["wo"]).reshape(b, 1, d)
+    return shard(y, BATCH, None, None), {"ckv": ckv_c, "krope": krope_c}

@@ -1,0 +1,134 @@
+"""Shared layers: norms, MLPs, embeddings, init helpers.
+
+Parameters are plain nested dicts of jnp arrays (bf16 by default); every
+layer is a pure function `f(params, x, cfg) -> y`.  Matmuls accumulate in
+f32 (`preferred_element_type`), norms compute in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import BATCH, MODEL, shard
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16) -> Array:
+    """LeCun-normal fan-in init."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, F32)
+            * std).astype(dtype)
+
+
+def matmul(x: Array, w: Array, reduce_dtype=None) -> Array:
+    """x @ w, result in x.dtype.
+
+    reduce_dtype=None: f32 accumulation (default).
+    reduce_dtype=x.dtype (bf16): Megatron-style low-precision wire for
+    TP-boundary output projections — the MXU still accumulates f32 inside a
+    shard on TPU; only the cross-shard partial-sum all-reduce carries bf16
+    (EXPERIMENTS.md §Perf #2/#3: halves the dominant collective).
+    """
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=reduce_dtype or F32
+                      ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Dict:
+    return {"scale": jnp.ones((d,), F32)}
+
+
+def rmsnorm(params: Dict, x: Array, eps: float) -> Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d: int, f: int, dtype=jnp.bfloat16) -> Dict:
+    k1, k3 = jax.random.split(key, 2)
+    return {
+        # fused gate+up: one matmul and one backward dL/dx all-reduce
+        "wiu": dense_init(k1, (d, 2 * f), dtype=dtype),
+        "wo": dense_init(k3, (f, d), dtype=dtype),      # down
+    }
+
+
+def mlp(params: Dict, x: Array, act: str = "silu",
+        reduce_bf16: bool = False) -> Array:
+    f = params["wo"].shape[0]
+    gu = matmul(x, params["wiu"])
+    g, u = gu[..., :f], gu[..., f:]
+    g = shard(g, BATCH, None, MODEL)
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = fn(g.astype(F32)).astype(x.dtype) * u
+    out = matmul(h, params["wo"],
+                 reduce_dtype=x.dtype if reduce_bf16 else None)
+    return shard(out, BATCH, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d: int, n_codebooks: int = 1,
+               dtype=jnp.bfloat16) -> Dict:
+    shape = (vocab, d) if n_codebooks == 1 else (n_codebooks, vocab, d)
+    return {"table": (jax.random.normal(key, shape, F32) * 0.02).astype(dtype)}
+
+
+def embed(params: Dict, tokens: Array) -> Array:
+    """tokens (B, S) -> (B, S, D); or (B, C, S) with per-codebook tables
+    summed (musicgen-style multi-stream input)."""
+    table = params["table"]
+    if table.ndim == 2:
+        return table[tokens]
+    # (C, V, D) tables, tokens (B, C, S)
+    out = jnp.zeros(tokens.shape[:1] + tokens.shape[2:] + table.shape[-1:],
+                    table.dtype)
+    for c in range(table.shape[0]):
+        out = out + table[c][tokens[:, c]]
+    return out
+
+
+def head_init(key, d: int, vocab: int, n_codebooks: int = 1,
+              dtype=jnp.bfloat16) -> Dict:
+    shape = (d, vocab) if n_codebooks == 1 else (n_codebooks, d, vocab)
+    return {"w": dense_init(key, shape, in_axis=-2, dtype=dtype)}
+
+
+def lm_head(params: Dict, x: Array) -> Array:
+    """x (B,S,D) -> logits (B,S,V) or (B,S,C,V) for multi-codebook heads."""
+    w = params["w"]
+    if w.ndim == 2:
+        logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=F32)
+        return shard(logits.astype(x.dtype), BATCH, None, MODEL)
+    logits = jnp.einsum("bsd,cdv->bscv", x, w, preferred_element_type=F32)
+    return shard(logits.astype(x.dtype), BATCH, None, None, MODEL)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> Array:
+    """MusicGen-style sinusoidal position embedding (f32). `offset` may be a
+    traced scalar (decode)."""
+    pos = (jnp.arange(seq, dtype=F32) + offset)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=F32)[None, :]
+    angle = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((seq, d), F32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe

@@ -1,0 +1,318 @@
+"""Model façade: loss, train/serve steps, input specs, sharding specs.
+
+Everything the launcher (and the dry-run) needs per architecture:
+
+  * :func:`loss_fn` / :func:`train_step` — LM cross-entropy (+MoE aux), grad,
+    AdamW update; microbatched gradient accumulation optional.
+  * :func:`prefill_step` / :func:`serve_step` — inference paths.
+  * :func:`input_specs` — ShapeDtypeStruct stand-ins per (arch x shape) cell.
+  * :func:`param_pspecs` / :func:`cache_pspecs` — PartitionSpec trees derived
+    from leaf paths (TP over 'model'; optional ZeRO-3 over the fsdp axes;
+    decode caches context-parallel over 'model').
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None
+                  ) -> Array:
+    """Mean CE. logits (..., V) bf16 -> f32 stable logsumexp."""
+    lf = logits.astype(F32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict) -> Tuple[Array, Dict]:
+    tokens = batch["tokens"]
+    logits, aux = tf.forward_train(
+        params, cfg, tokens,
+        positions=batch.get("positions"), vision=batch.get("vision"))
+    if cfg.n_codebooks > 1:
+        # tokens (B,C,S); logits (B,S,C,V): next-token per codebook
+        labels = tokens[:, :, 1:]                       # (B,C,S-1)
+        lg = jnp.moveaxis(logits[:, :-1], 2, 1)         # (B,C,S-1,V)
+        ce = cross_entropy(lg, labels)
+    else:
+        labels = tokens[:, 1:]
+        ce = cross_entropy(logits[:, :-1], labels)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Train / serve steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, opt: adamw.AdamWConfig,
+                    accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    `accum_steps > 1` splits the batch into microbatches and accumulates
+    grads — overlap-friendly (each microbatch's backward all-reduce overlaps
+    the next microbatch's compute under XLA's async collectives)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(p, cfg, batch)[0],
+                                  )(params)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_sum, l_sum = carry
+                l, g = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, g_sum, g), l_sum + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (g_sum, l_sum), _ = jax.lax.scan(acc, (zeros, jnp.zeros((), F32)),
+                                             micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = l_sum / accum_steps
+        params, opt_state, om = adamw.update(opt, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def prefill_step(params, cfg: ModelConfig, batch: Dict):
+    return tf.forward_prefill(params, cfg, batch["tokens"],
+                              positions=batch.get("positions"),
+                              vision=batch.get("vision"))
+
+
+def serve_step(params, cfg: ModelConfig, token, caches, ctx_len):
+    return tf.decode_step(params, cfg, token, caches, ctx_len)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                 # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch x shape)."""
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    def tok_struct(seq):
+        if cfg.n_codebooks > 1:
+            return jax.ShapeDtypeStruct((b, cfg.n_codebooks, seq), i32)
+        return jax.ShapeDtypeStruct((b, seq), i32)
+
+    if cell.kind in ("train", "prefill"):
+        out = {"tokens": tok_struct(s)}
+        if cfg.rope == "mrope":
+            out["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        if cfg.vision_tokens:
+            out["vision"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16)
+        return out
+    # decode: one token, cache of length seq_len
+    token = jax.ShapeDtypeStruct(
+        (b, cfg.n_codebooks) if cfg.n_codebooks > 1 else (b,), i32)
+    caches = jax.eval_shape(lambda: tf.init_cache(cfg, b, s))
+    return {"token": token, "caches": caches,
+            "ctx_len": jax.ShapeDtypeStruct((), i32)}
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs by leaf path
+# ---------------------------------------------------------------------------
+def _keys(path) -> List[str]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(f"[{k.idx}]")
+        else:
+            out.append(str(k))
+    return out
+
+
+def _logical_weight_spec(names: List[str], ndim: int) -> Tuple:
+    """Logical spec ('fsdp' | 'model' | None per dim) for one param leaf."""
+    leaf = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    M, Fd = "model", "fsdp"
+
+    table = {
+        # attention
+        "wqkv": (Fd, M), "wg": (Fd, M),
+        "wq_a": (Fd, None), "wq_b": (None, M),
+        "wkv_a": (Fd, None), "wkv_b": (None, M),
+        # rglru
+        "wx": (Fd, M), "wgate": (Fd, M), "wi_g": (None, M),
+        "conv_w": (None, M),
+        # misc
+        "vision_proj": (Fd, None),
+        "router": (None, None),
+        "mix_a": (Fd, None), "decay_a": (Fd, None),
+    }
+    if leaf in ("wi", "wu", "wiu"):
+        return (M, Fd, None) if ndim == 3 else (Fd, M)
+    if leaf == "wo":
+        return (M, None, Fd) if ndim == 3 else (M, Fd)
+    if leaf == "wr" and parent == "rec":
+        return (None, M)
+    if leaf == "wi" and parent == "rec":
+        return (None, M)
+    if leaf == "table":      # embedding
+        return (None, M, Fd) if ndim == 3 else (M, Fd)
+    if leaf == "w" and parent == "head":
+        return (None, Fd, M) if ndim == 3 else (Fd, M)
+    if leaf in table:
+        spec = table[leaf]
+        return spec if len(spec) == ndim else tuple(
+            [None] * (ndim - len(spec)) + list(spec))
+    return tuple([None] * ndim)      # replicate (norms, biases, loras)
+
+
+def _resolve(logical: Tuple, batch_axes, model_axis, fsdp_axes) -> P:
+    out = []
+    for ax in logical:
+        if ax == "model":
+            out.append(model_axis)
+        elif ax == "fsdp":
+            out.append(fsdp_axes)
+        elif ax == "batch":
+            out.append(batch_axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_pspecs(cfg: ModelConfig, *, batch_axes="data", model_axis="model",
+                 fsdp_axes=None, shard_mode: str = "tp") -> Any:
+    """PartitionSpec tree matching init_params(cfg).
+
+    shard_mode:
+      'tp'  — tensor parallel over the model axis (+ optional ZeRO-3 over
+              the data axis when cfg.fsdp);
+      'dp'  — pure data parallel + ZeRO-3 over the *whole* mesh: every
+              matrix shards its largest dim over (data, model) flattened and
+              is all-gathered per layer.  Right for small dense models where
+              TP activation collectives dominate (EXPERIMENTS.md §Perf #1).
+    """
+    shapes = tf.param_shapes(cfg)
+
+    if shard_mode == "dp":
+        all_axes = (tuple(batch_axes) if isinstance(batch_axes, (tuple, list))
+                    else (batch_axes,)) + (model_axis,)
+
+        def spec_dp(path, leaf):
+            names = _keys(path)
+            stacked = names and names[0] == "segments"
+            dims = leaf.shape[1:] if stacked else leaf.shape
+            if len(dims) < 2:
+                return P(*([None] * leaf.ndim))
+            big = max(range(len(dims)), key=lambda i: dims[i])
+            spec = [None] * len(dims)
+            spec[big] = all_axes
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(spec_dp, shapes)
+
+    fsdp = (fsdp_axes or "data") if cfg.fsdp else None
+
+    def spec_of(path, leaf):
+        names = _keys(path)
+        stacked = names and names[0] == "segments"
+        nd = leaf.ndim - (1 if stacked else 0)
+        logical = _logical_weight_spec(names, nd)
+        if stacked:
+            logical = (None,) + logical
+        # never shard a dim that is too small / indivisible: the resolver
+        # in launch.mesh validates divisibility and drops offending axes
+        return _resolve(logical, batch_axes, model_axis, fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec_of, shapes)
+
+
+def cache_pspecs(cfg: ModelConfig, cell: ShapeCell, *, batch_axes="data",
+                 model_axis="model", n_batch_shards: int = 16) -> Any:
+    """PartitionSpec tree matching init_cache: batch over data (when it
+    divides), cache length context-parallel over 'model'."""
+    b = cell.global_batch
+    batch = batch_axes if b % n_batch_shards == 0 else None
+    caches = jax.eval_shape(lambda: tf.init_cache(cfg, b, cell.seq_len))
+
+    def spec_of(path, leaf):
+        names = _keys(path)
+        leaf_name = names[-1]
+        if leaf_name in ("k", "v"):          # (P,B,S,K,hd)
+            return P(None, batch, model_axis, None, None)
+        if leaf_name in ("ckv", "krope"):    # (P,B,S,r)
+            return P(None, batch, model_axis, None)
+        if leaf_name == "S":                 # (P,B,H,hd,hd)
+            return P(None, batch, model_axis, None, None)
+        if leaf_name in ("tm_shift", "cm_shift"):   # (P,B,D)
+            return P(None, batch, None)
+        if leaf_name == "h":                 # (P,B,W)
+            return P(None, batch, model_axis)
+        if leaf_name == "conv":              # (P,B,cw-1,W)
+            return P(None, batch, None, model_axis)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches)
+
+
+def batch_pspecs(cfg: ModelConfig, cell: ShapeCell, *, batch_axes="data",
+                 n_batch_shards: int = 16) -> Any:
+    b = cell.global_batch
+    batch = batch_axes if b % n_batch_shards == 0 else None
+    if cell.kind in ("train", "prefill"):
+        out = {"tokens": P(batch, None, None) if cfg.n_codebooks > 1
+               else P(batch, None)}
+        if cfg.rope == "mrope":
+            out["positions"] = P(None, batch, None)
+        if cfg.vision_tokens:
+            out["vision"] = P(batch, None, None)
+        return out
+    return {"token": P(batch, None) if cfg.n_codebooks > 1 else P(batch),
+            "caches": cache_pspecs(cfg, cell, batch_axes=batch_axes,
+                                   n_batch_shards=n_batch_shards),
+            "ctx_len": P()}

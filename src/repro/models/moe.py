@@ -1,0 +1,165 @@
+"""Mixture-of-Experts with capacity-based gather dispatch (expert parallel).
+
+Design (DESIGN.md §4): experts are sharded over the **model** mesh axis.
+Dispatch avoids the O(T*E*C) one-hot tensors of dense-dispatch MoE:
+
+  1. router top-k per token (f32);
+  2. an (E, C) **token-index table** built by scatter: token t's rank within
+     expert e (computed via a cumulative-count over the T*k assignment list)
+     gives its capacity slot; overflow (rank >= C) is dropped — classic
+     capacity-factor semantics;
+  3. gather tokens into (E, C, D) — sharding-constrained so each model shard
+     materializes only its *local* experts' rows;
+  4. grouped expert FFN einsum (E sharded => expert-parallel compute);
+  5. scatter-add combine back to (T, D) weighted by router probabilities.
+
+Communication = the all-reduce of the combined output over the model axis
+(same volume as a TP FFN) — no all-to-all needed, and the index tables are
+int32 (tiny).  Shared experts (DeepSeek) run as a dense MLP on every token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, mlp, mlp_init
+from repro.models.sharding import BATCH, MODEL, dp_shards, shard
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def moe_init(key, cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    e, f = m.n_experts, m.expert_d_ff
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=F32),
+        "wiu": dense_init(ks[1], (e, d, 2 * f), in_axis=-2, dtype=dt),
+        "wo": dense_init(ks[3], (e, f, d), in_axis=-2, dtype=dt),
+    }
+    if m.n_shared:
+        sh = m.shared_d_ff or m.expert_d_ff
+        p["shared"] = mlp_init(ks[4], d, m.n_shared * sh, dtype=dt)
+    return p
+
+
+def _dispatch_tables(expert_idx: Array, weights: Array, n_experts: int,
+                     capacity: int, n_tokens: int
+                     ) -> Tuple[Array, Array]:
+    """Build (E, C) token-index and weight tables from top-k assignments.
+
+    expert_idx, weights: (T, k).  Returns (table (E,C) int32 with sentinel
+    T for empty slots, wtable (E,C) f32).
+    """
+    t, k = expert_idx.shape
+    flat_e = expert_idx.reshape(-1)                          # (T*k,)
+    flat_w = weights.reshape(-1)
+    # rank of each assignment within its expert: count of equal experts
+    # strictly before it in flat order (segmented running count)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    ranks_all = jnp.cumsum(onehot, axis=0) - onehot              # exclusive
+    rank = jnp.take_along_axis(ranks_all, flat_e[:, None],
+                               axis=1)[:, 0]                     # (T*k,)
+    keep = rank < capacity
+    slot = jnp.where(keep, rank, capacity)                   # overflow -> C
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    table = jnp.full((n_experts, capacity + 1), n_tokens, jnp.int32)
+    table = table.at[flat_e, slot].set(jnp.where(keep, token_of, n_tokens))
+    wtable = jnp.zeros((n_experts, capacity + 1), F32)
+    wtable = wtable.at[flat_e, slot].set(jnp.where(keep, flat_w, 0.0))
+    return table[:, :capacity], wtable[:, :capacity]
+
+
+def moe_ffn(params: Dict, x: Array, cfg: ModelConfig
+            ) -> Tuple[Array, Array]:
+    """MoE feed-forward. x (B,S,D) -> (y (B,S,D), aux_loss ()).
+
+    Dispatch is **local per data shard**: tokens are regrouped (G, T/G, D)
+    with G = dp_shards(), tables are built per group, and the (G, E, C, D)
+    dispatch tensor is sharded (batch, model, -, -) so the expert einsum is
+    2D-parallel (tokens x experts) with zero cross-shard token movement.
+    The combine's scatter-add then reduces over the model axis only —
+    (T_local, D) bf16 per layer — instead of GSPMD materializing a global
+    (T, D) f32 buffer (38x collective reduction; EXPERIMENTS.md §Perf #2).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    groups = dp_shards()
+    # group-local dispatch only pays off when each group has enough tokens
+    # to fill expert capacity (training/prefill); decode (s == 1) and tiny
+    # batches keep global dispatch — per-group capacity would round up to
+    # 8x the work and the (G,E,C,D) gathers would dominate.
+    if t % groups or t // groups < 2 * m.n_experts:
+        groups = 1
+    t_loc = t // groups
+    xg = x.reshape(groups, t_loc, d)
+    xg = shard(xg, BATCH, None, None)
+
+    # ---- router (f32) ----
+    logits = jnp.einsum("gtd,de->gte", xg.astype(F32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, m.top_k)             # (G,T/G,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing aux loss (Switch-style, global) ----
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = jnp.zeros((m.n_experts,), F32).at[top_e.reshape(-1)].add(
+        1.0 / (t * m.top_k))
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+
+    # ---- per-group dispatch tables ----
+    capacity = int(m.capacity_factor * t_loc * m.top_k / m.n_experts)
+    capacity = max(capacity, 1)
+    capacity = -(-capacity // 8) * 8          # MXU-aligned C
+    table, wtable = jax.vmap(
+        lambda e, w: _dispatch_tables(e, w, m.n_experts, capacity, t_loc)
+    )(top_e, top_w)                                          # (G,E,C) each
+
+    zeros = jnp.zeros((groups, 1, d), xg.dtype)
+    xg_pad = jnp.concatenate([xg, zeros], axis=1)            # (G,T/G+1,D)
+    xe = jax.vmap(lambda xp, tb: xp[tb])(xg_pad, table)      # (G,E,C,D)
+    xe = shard(xe, BATCH, MODEL, None, None)
+
+    # ---- grouped expert FFN (tokens x experts 2D-parallel) ----
+    # flatten groups into capacity: (E, G*C, D) keeps the dot 3D (the form
+    # every backend's batched-dot path supports) with the SAME sharding:
+    # E -> model, G*C -> batch (G divides the batch axes by construction).
+    e_, c_ = m.n_experts, capacity
+    xe_f = jnp.moveaxis(xe, 1, 0).reshape(e_, groups * c_, d)
+    # G*C carries the batch sharding only when G spans the data shards;
+    # with global dispatch (G=1, decode/tiny batches) C is capacity — local
+    gc = BATCH if groups > 1 else None
+    xe_f = shard(xe_f, MODEL, gc, None)
+    f_ = m.expert_d_ff
+    gu = jnp.einsum("ecd,edf->ecf", xe_f, params["wiu"],
+                    preferred_element_type=F32)
+    g_, u = gu[..., :f_], gu[..., f_:]
+    h = (jax.nn.silu(g_) * u).astype(xe.dtype)
+    h = shard(h, MODEL, gc, None)
+    ye_f = jnp.einsum("ecf,efd->ecd", h, params["wo"],
+                      preferred_element_type=(x.dtype if cfg.tp_reduce_bf16
+                                              else F32))
+    ye = jnp.moveaxis(ye_f.reshape(e_, groups, c_, d), 0, 1)  # (G,E,C,D)
+
+    # ---- combine (scatter-add per group, weighted, bf16 wire) ----
+    ye = (ye.astype(F32) * wtable[..., None]).astype(x.dtype)
+
+    def combine(yg, tg):
+        return jnp.zeros((t_loc + 1, d), x.dtype).at[
+            tg.reshape(-1)].add(yg.reshape(-1, d))[:t_loc]
+
+    yt = jax.vmap(combine)(ye, table)                        # (G,T/G,D)
+    y = yt.reshape(b, s, d)
+    y = shard(y, BATCH, None, None)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, cfg.act,
+                    reduce_bf16=cfg.tp_reduce_bf16)
+    return y, aux

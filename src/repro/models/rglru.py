@@ -1,0 +1,131 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+Real-Gated Linear Recurrent Unit (arXiv:2402.19427):
+
+    i_t = sigmoid(W_i x_t + b_i)            (input gate)
+    r_t = sigmoid(W_r x_t + b_r)            (recurrence gate)
+    a_t = exp(-c * softplus(L) * r_t)       (data-dependent decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal linear recurrence is computed with `jax.lax.associative_scan`
+for train/prefill (O(log T) depth — the TPU-native choice over the GPU
+implementation's sequential CUDA scan) and one explicit step for decode.
+The surrounding block is Griffin's: branch gate (GeLU) x [linear -> causal
+depthwise conv(width 4) -> RG-LRU] -> output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import BATCH, MODEL, shard
+
+Array = jax.Array
+F32 = jnp.float32
+C_DECAY = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> Dict:
+    d, w = cfg.d_model, cfg.lru_width
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(ks[0], (d, w), dtype=dt),          # recurrent branch
+        "wgate": dense_init(ks[1], (d, w), dtype=dt),       # GeLU gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w), F32)
+                   * (cfg.conv_width * w) ** -0.5).astype(F32),
+        "conv_b": jnp.zeros((w,), F32),
+        "wi": dense_init(ks[3], (w, w), dtype=dt),          # input gate
+        "bi": jnp.zeros((w,), F32),
+        "wr": dense_init(ks[4], (w, w), dtype=dt),          # recurrence gate
+        "br": jnp.zeros((w,), F32),
+        "lam": jnp.full((w,), 2.0, F32),                    # softplus(L)>0
+        "wo": dense_init(ks[5], (w, d), dtype=dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, hist: Array
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv over time via shifted adds.
+
+    x (B,T,W); w (cw, W); hist (B, cw-1, W) carries the previous tokens.
+    Returns (y (B,T,W), new hist)."""
+    cw = w.shape[0]
+    xf = x.astype(F32)
+    ext = jnp.concatenate([hist.astype(F32), xf], axis=1)   # (B, T+cw-1, W)
+    t = x.shape[1]
+    y = jnp.zeros_like(xf)
+    for j in range(cw):
+        y = y + ext[:, j:j + t] * w[j]
+    return (y + b).astype(x.dtype), ext[:, -(cw - 1):].astype(x.dtype)
+
+
+def _rglru_gates(p: Dict, u: Array):
+    uf = u.astype(F32)
+    i = jax.nn.sigmoid((u @ p["wi"]).astype(F32) + p["bi"])
+    r = jax.nn.sigmoid((u @ p["wr"]).astype(F32) + p["br"])
+    log_a = -C_DECAY * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+    return a, b
+
+
+def rglru_scan(p: Dict, u: Array, h0: Array) -> Tuple[Array, Array]:
+    """Sequence form. u (B,T,W); h0 (B,W) -> (h (B,T,W), h_last)."""
+    a, b = _rglru_gates(p, u)
+    # fold h0 into the first step: b_0 += a_0 * h0
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(F32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1].astype(F32)
+
+
+def rglru_step(p: Dict, u: Array, h_prev: Array) -> Tuple[Array, Array]:
+    """Single decode step. u (B,W); h_prev (B,W)."""
+    a, b = _rglru_gates(p, u[:, None, :])
+    h = a[:, 0] * h_prev.astype(F32) + b[:, 0]
+    return h.astype(u.dtype), h
+
+
+def recurrent_block(p: Dict, x: Array, state: Dict, cfg: ModelConfig
+                    ) -> Tuple[Array, Dict]:
+    """Griffin recurrent block over a sequence. state {h:(B,W), conv:(B,cw-1,W)}."""
+    gate = jax.nn.gelu((x @ p["wgate"]).astype(F32))
+    u = x @ p["wx"]
+    u = shard(u, BATCH, None, MODEL)
+    u, conv_hist = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    h, h_last = rglru_scan(p, u, state["h"])
+    y = (gate.astype(x.dtype) * h) @ p["wo"]
+    return shard(y, BATCH, None, None), {"h": h_last, "conv": conv_hist}
+
+
+def recurrent_block_step(p: Dict, x: Array, state: Dict, cfg: ModelConfig
+                         ) -> Tuple[Array, Dict]:
+    """One-token decode. x (B,1,D)."""
+    b, _, d = x.shape
+    gate = jax.nn.gelu((x[:, 0] @ p["wgate"]).astype(F32))
+    u = x[:, 0] @ p["wx"]
+    # conv over (hist, u)
+    cw = p["conv_w"].shape[0]
+    ext = jnp.concatenate([state["conv"].astype(F32),
+                           u.astype(F32)[:, None, :]], axis=1)  # (B,cw,W)
+    uc = jnp.einsum("bcw,cw->bw", ext, p["conv_w"]) + p["conv_b"]
+    h, h_new = rglru_step(p, uc.astype(u.dtype), state["h"])
+    y = ((gate.astype(x.dtype) * h) @ p["wo"])[:, None, :]
+    return y, {"h": h_new, "conv": ext[:, 1:].astype(x.dtype)}
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    w = cfg.lru_width
+    return {"h": jnp.zeros((batch, w), F32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w),
+                              jnp.dtype(cfg.dtype))}

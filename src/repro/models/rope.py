@@ -1,0 +1,60 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits each head's rotary dims into (temporal, height, width)
+sections with independent position streams — the VLM backbone receives a
+(3, B, S) position tensor from the (stubbed) vision frontend; pure-text
+positions simply replicate the temporal stream.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim))
+
+
+def _rotate(x: Array, cos: Array, sin: Array) -> Array:
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (B, S, N, H); positions (B, S) -> rotated x."""
+    h = x.shape[-1]
+    freqs = rope_freqs(h, theta)                            # (H/2,)
+    angle = positions.astype(F32)[..., None] * freqs        # (B, S, H/2)
+    cos = jnp.cos(angle)[..., None, :]                      # (B, S, 1, H/2)
+    sin = jnp.sin(angle)[..., None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(x: Array, positions: Array, theta: float,
+                sections: Tuple[int, ...]) -> Array:
+    """Qwen2-VL M-RoPE. x (B,S,N,H); positions (3,B,S); sections sum to H/2."""
+    h = x.shape[-1]
+    assert sum(sections) == h // 2, "mrope sections must cover half dim"
+    freqs = rope_freqs(h, theta)                            # (H/2,)
+    # choose the position stream per frequency slot
+    stream = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    angle_all = positions.astype(F32)[..., None] * freqs    # (3, B, S, H/2)
+    # pick stream i=stream[j] for frequency slot j
+    angle = angle_all[stream, ..., jnp.arange(h // 2)]      # (H/2, B, S)
+    angle = jnp.moveaxis(angle, 0, -1)                      # (B, S, H/2)
+    cos = jnp.cos(angle)[..., None, :]
+    sin = jnp.sin(angle)[..., None, :]
+    return _rotate(x, cos, sin)
+
+
+def text_mrope_positions(b: int, s: int, offset: int = 0) -> Array:
+    """Pure-text M-RoPE positions: all three streams identical."""
+    p = jnp.arange(offset, offset + s, dtype=jnp.int32)[None, :].repeat(b, 0)
+    return jnp.stack([p, p, p], axis=0)

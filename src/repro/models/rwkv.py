@@ -1,0 +1,210 @@
+"""RWKV6 "Finch" blocks: data-dependent-decay time-mix + channel-mix.
+
+Attention-free SSM family (arXiv:2404.05892).  Faithful structure:
+
+  time-mix: token-shift ddlerp (5-way LoRA-modulated mixing), projections
+  r/k/v/gate, **data-dependent per-channel decay** w_t = exp(-exp(w0 +
+  lora(x))), bonus u, and the WKV6 recurrence per head (hd x hd state):
+
+      y_t[j] = sum_i r_i (S[i,j] + u_i k_i v_j)
+      S'     = diag(w_t) S + k_t v_t^T
+
+  channel-mix: token-shifted squared-ReLU FFN gated by sigmoid(r).
+
+Training/prefill runs the recurrence as a `lax.scan` over time (the state
+update is inherently sequential; each step is batched over (B, H) — the
+TPU-friendly axis).  Decode carries {shift states, S} explicitly.  No KV
+cache exists — the CXL KV-tiering feature is inapplicable here (DESIGN.md
+§6); state + optimizer offload still apply.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm_init
+from repro.models.sharding import BATCH, MODEL, shard
+
+Array = jax.Array
+F32 = jnp.float32
+LORA_MIX = 32
+LORA_DECAY = 64
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def timemix_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": jnp.zeros((d,), F32),
+        "mu": jnp.zeros((5, d), F32),
+        "mix_a": dense_init(ks[0], (d, 5 * LORA_MIX), dtype=F32),
+        "mix_b": (jax.random.normal(ks[1], (5, LORA_MIX, d), F32) * 0.01),
+        "w0": jnp.full((d,), -6.0, F32),
+        "decay_a": dense_init(ks[2], (d, LORA_DECAY), dtype=F32),
+        "decay_b": (jax.random.normal(ks[3], (LORA_DECAY, d), F32) * 0.01),
+        "u": jnp.zeros((h, hd), F32),
+        "wr": dense_init(ks[4], (d, d), dtype=dt),
+        "wk": dense_init(ks[5], (d, d), dtype=dt),
+        "wv": dense_init(ks[6], (d, d), dtype=dt),
+        "wg": dense_init(ks[7], (d, d), dtype=dt),
+        "wo": dense_init(ks[8], (d, d), dtype=dt),
+        "ln_x": rmsnorm_init(d),   # per-head group norm approximated by RMS
+    }
+
+
+def channelmix_init(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), F32),
+        "mu_r": jnp.zeros((d,), F32),
+        "wk": dense_init(k1, (d, f), dtype=dt),
+        "wv": dense_init(k2, (f, d), dtype=dt),
+        "wr": dense_init(k3, (d, d), dtype=dt),
+    }
+
+
+def _ddlerp(p: Dict, x: Array, x_prev: Array) -> Tuple[Array, ...]:
+    """Data-dependent token-shift interpolation -> 5 mixed streams."""
+    xf, pf = x.astype(F32), x_prev.astype(F32)
+    xx = pf - xf
+    base = xf + xx * p["mu_x"]
+    lora = jnp.tanh(base @ p["mix_a"])                    # (..., 5*32)
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_MIX)
+    delta = jnp.einsum("...nl,nld->...nd", lora, p["mix_b"])  # (...,5,D)
+    mixed = xf[..., None, :] + xx[..., None, :] * (p["mu"] + delta)
+    return tuple(mixed[..., i, :].astype(x.dtype) for i in range(5))
+
+
+def _wkv_step(S, rkvw):
+    """One WKV6 step. S (B,H,hd,hd); r/k/v (B,H,hd); w (B,H,hd) decay."""
+    r, k, v, w, u = rkvw
+    # y_j = sum_i r_i (S_ij + u_i k_i v_j)
+    y = jnp.einsum("bhi,bhij->bhj", r, S) \
+        + jnp.einsum("bhi,bhi,bhi,bhj->bhj", r, u, k, v)
+    S = S * w[..., None] + k[..., None] * v[..., None, :]
+    return S, y
+
+
+def timemix(p: Dict, x: Array, x_prev_last: Array, S0: Array,
+            cfg: ModelConfig) -> Tuple[Array, Array, Array]:
+    """Time-mix over a sequence. x (B,T,D); x_prev_last (B,D) shift-in state;
+    S0 (B,H,hd,hd). Returns (y, new shift state, new S)."""
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+    mw, mk, mv, mr, mg = _ddlerp(p, x, x_prev)
+    r = (mr @ p["wr"]).reshape(b, t, h, hd).astype(F32)
+    k = (mk @ p["wk"]).reshape(b, t, h, hd).astype(F32)
+    v = (mv @ p["wv"]).reshape(b, t, h, hd).astype(F32)
+    g = jax.nn.silu((mg @ p["wg"]).astype(F32))
+    w = jnp.exp(-jnp.exp(
+        p["w0"] + jnp.tanh(mw.astype(F32) @ p["decay_a"]) @ p["decay_b"]))
+    w = w.reshape(b, t, h, hd)
+    r = shard(r, BATCH, None, MODEL, None)
+    u = jnp.broadcast_to(p["u"], (b, h, hd))
+
+    chunk = getattr(cfg, "rwkv_chunk", 0)
+    if chunk and t > chunk and t % chunk == 0:
+        # chunk-parallel form: O(T/chunk) sequential steps (§Perf bonus)
+        y, S = _wkv_chunked(r, k, v, w, u, S0.astype(F32), chunk)
+    else:
+        def step(S, inp):
+            rt, kt, vt, wt = inp
+            return _wkv_step(S, (rt, kt, vt, wt, u))
+
+        S, y = jax.lax.scan(step, S0.astype(F32),
+                            (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+                             jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0)))
+        y = jnp.moveaxis(y, 0, 1)
+    y = y.reshape(b, t, d)                                  # (B,T,D)
+    # per-head norm (grouped RMS) then gate
+    yh = y.reshape(b, t, h, hd)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (yh.reshape(b, t, d) * p["ln_x"]["scale"] * g).astype(x.dtype)
+    out = (y @ p["wo"]).astype(x.dtype)
+    return shard(out, BATCH, None, None), x[:, -1], S.astype(F32)
+
+
+def channelmix(p: Dict, x: Array, x_prev_last: Array
+               ) -> Tuple[Array, Array]:
+    """Channel-mix. x (B,T,D) -> (y, new shift state)."""
+    xf = x.astype(F32)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :].astype(F32),
+                              xf[:, :-1]], axis=1)
+    xx = x_prev - xf
+    xk = (xf + xx * p["mu_k"]).astype(x.dtype)
+    xr = (xf + xx * p["mu_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu((xk @ p["wk"]).astype(F32))).astype(x.dtype)
+    k = shard(k, BATCH, None, MODEL)
+    kv = k @ p["wv"]
+    out = (jax.nn.sigmoid((xr @ p["wr"]).astype(F32)).astype(x.dtype) * kv)
+    return shard(out, BATCH, None, None), x[:, -1]
+
+
+def _wkv_chunked(r, k, v, w, u, S0, chunk: int):
+    """Chunk-parallel WKV6: O(T/chunk) sequential steps, MXU-sized matmuls.
+
+    Standard chunked linear-attention decomposition with per-channel decay
+    products p_t = prod_{s<t} w_s inside each chunk:
+
+        y_t = (r_t p_t) S_chunk + sum_{s<t} (r_t p_t / (p_s w_s)) k_s v_s^T
+              + (r_t u k_t) v_t                       [diag bonus]
+        S'  = diag(p_C) S + (k p_C/(p w))^T v
+
+    All inputs (B,T,H,hd) f32; S0 (B,H,hd,hd). Exactly equals the step scan
+    (tests/test_models.py::test_rwkv_chunked_matches_scan).
+    """
+    b, t, h, hd = r.shape
+    assert t % chunk == 0
+    nc = t // chunk
+    rs = r.reshape(b, nc, chunk, h, hd)
+    ks = k.reshape(b, nc, chunk, h, hd)
+    vs = v.reshape(b, nc, chunk, h, hd)
+    logw = jnp.log(jnp.maximum(w, 1e-12)).reshape(b, nc, chunk, h, hd)
+
+    def chunk_step(S, xs):
+        rc, kc, vc, lw = xs                     # (B,C,H,hd)
+        cum = jnp.cumsum(lw, axis=1)
+        p = jnp.exp(cum - lw)                   # exclusive prod_{s<t} w_s
+        p_end = jnp.exp(cum[:, -1])             # (B,H,hd)
+        rp = rc * p
+        kq = kc * jnp.exp(-cum)                 # k / (p*w)
+        inter = jnp.einsum("bchi,bhij->bchj", rp, S)
+        att = jnp.einsum("bchi,bdhi->bhcd", rp, kq)
+        tri = jnp.tril(jnp.ones((chunk, chunk)), k=-1)
+        att = att * tri[None, None]
+        intra = jnp.einsum("bhcd,bdhj->bchj", att, vc)
+        diag = jnp.einsum("bchi,bchi->bch", rc * u[:, None], kc)
+        y = inter + intra + diag[..., None] * vc
+        S_new = S * p_end[..., None] + jnp.einsum(
+            "bchi,bchj->bhij", kc * (p_end[:, None] * jnp.exp(-cum)), vc)
+        return S_new, y
+
+    S, ys = jax.lax.scan(
+        chunk_step, S0,
+        (jnp.moveaxis(rs, 1, 0), jnp.moveaxis(ks, 1, 0),
+         jnp.moveaxis(vs, 1, 0), jnp.moveaxis(logw, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, hd)
+    return y, S
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "tm_shift": jnp.zeros((batch, d), jnp.dtype(cfg.dtype)),
+        "cm_shift": jnp.zeros((batch, d), jnp.dtype(cfg.dtype)),
+        "S": jnp.zeros((batch, h, hd, hd), F32),
+    }

@@ -1,0 +1,102 @@
+"""Logical sharding annotations, mesh-agnostic.
+
+Model code annotates activations with *logical* axes; the launcher installs a
+mesh context that maps logical -> physical mesh axes:
+
+    batch  -> ('pod', 'data') on the multi-pod mesh, ('data',) single-pod
+    model  -> ('model',)   (TP: heads / ffn hidden / vocab / experts)
+    none   -> replicated
+
+Outside any mesh context (unit tests, smoke tests on 1 CPU device) the
+annotations are identity — the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+BATCH = "batch"
+MODEL = "model"
+NONE = None
+
+
+def _ctx():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, batch_axes: Tuple[str, ...],
+                 model_axes: Tuple[str, ...] = ("model",)):
+    """Install the logical->physical mapping for `shard()` constraints."""
+    prev = _ctx()
+    _state.ctx = (mesh, tuple(batch_axes), tuple(model_axes))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def resolve(*logical) -> Optional[P]:
+    """Logical axes tuple -> PartitionSpec under the current context."""
+    ctx = _ctx()
+    if ctx is None:
+        return None
+    _, batch_axes, model_axes = ctx
+    out = []
+    for ax in logical:
+        if ax == BATCH:
+            out.append(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        elif ax == MODEL:
+            if not model_axes:                 # pure-DP strategy
+                out.append(None)
+            else:
+                out.append(model_axes if len(model_axes) > 1
+                           else model_axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x, *logical):
+    """with_sharding_constraint under a mesh context; identity otherwise."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh = ctx[0]
+    spec = resolve(*logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical) -> Optional[NamedSharding]:
+    ctx = _ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx[0], resolve(*logical))
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _ctx()
+    return None if ctx is None else ctx[0]
+
+
+def dp_shards() -> int:
+    """Number of batch (data-parallel) shards under the current context.
+
+    MoE dispatch uses this to keep token routing *local per data shard*
+    (see models/moe.py) — the combine then reduces over the model axis only
+    instead of scattering across the global token dim (EXPERIMENTS.md §Perf,
+    hillclimb #2)."""
+    ctx = _ctx()
+    if ctx is None:
+        return 1
+    mesh, batch_axes, _ = ctx
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+    return n

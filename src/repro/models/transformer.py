@@ -1,0 +1,415 @@
+"""Transformer assembly: segments of repeating block patterns, scanned.
+
+Depth is organised into **segments** — maximal runs where a block pattern
+repeats — so heterogeneous stacks lower to a handful of `lax.scan`s over
+stacked parameters (small HLO even at 94 layers):
+
+    dense LMs:        [('attn',) x L]
+    deepseek-v3:      [('attn',) x 3] + [('moe',) x 58]
+    recurrentgemma:   [('rec','rec','attn') x 12] + [('rec','rec') x 1]
+    rwkv6:            [('rwkv',) x L]
+
+Three assembly paths share the block implementations:
+  forward_train   — no cache, remat'd scan (training / benchmark forward)
+  forward_prefill — emits per-layer cache slices (prefill_32k cells)
+  decode_step     — consumes/updates the cache (decode_32k / long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.layers import (embed, embed_init, head_init, lm_head, mlp,
+                                 mlp_init, rmsnorm, rmsnorm_init,
+                                 sinusoidal_positions)
+from repro.models.rope import text_mrope_positions
+from repro.models.sharding import BATCH, MODEL, shard
+
+Array = jax.Array
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[str, ...]
+    n_periods: int
+
+
+def segments(cfg: ModelConfig) -> List[Segment]:
+    kinds = cfg.layer_kinds()
+    segs: List[Segment] = []
+    i = 0
+    # leading homogeneous run (covers first_dense and pure stacks)
+    if len(set(kinds)) == 1:
+        return [Segment((kinds[0],), len(kinds))]
+    # split off a leading run of a different kind (deepseek first_dense)
+    j = 0
+    while j < len(kinds) and kinds[j] == kinds[0]:
+        j += 1
+    rest = kinds[j:]
+    if len(set(rest)) == 1:
+        segs.append(Segment((kinds[0],), j))
+        segs.append(Segment((rest[0],), len(rest)))
+        return segs
+    # periodic pattern (recurrentgemma)
+    pat = tuple(cfg.block_pattern)
+    plen = len(pat)
+    n_full = len(kinds) // plen
+    for idx, k in enumerate(kinds[:n_full * plen]):
+        if k != pat[idx % plen]:
+            raise ValueError(f"layer kinds do not follow pattern at {idx}")
+    segs.append(Segment(pat, n_full))
+    rem = kinds[n_full * plen:]
+    if rem:
+        segs.append(Segment(tuple(rem), 1))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+def _attn_init(key, cfg: ModelConfig) -> Dict:
+    if cfg.attn_kind == "mla":
+        return attn_mod.mla_init(key, cfg)
+    return attn_mod.attn_init(key, cfg)
+
+
+def _dense_ff(cfg: ModelConfig) -> int:
+    if cfg.moe is not None and cfg.moe.dense_d_ff:
+        return cfg.moe.dense_d_ff
+    return cfg.d_ff
+
+
+def block_init(key, kind: str, cfg: ModelConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "attn":
+        return {"ln1": rmsnorm_init(d), "attn": _attn_init(k1, cfg),
+                "ln2": rmsnorm_init(d),
+                "mlp": mlp_init(k2, d, _dense_ff(cfg),
+                                dtype=jnp.dtype(cfg.dtype))}
+    if kind == "moe":
+        return {"ln1": rmsnorm_init(d), "attn": _attn_init(k1, cfg),
+                "ln2": rmsnorm_init(d), "moe": moe_mod.moe_init(k2, cfg)}
+    if kind == "rwkv":
+        return {"ln1": rmsnorm_init(d),
+                "tm": rwkv_mod.timemix_init(k1, cfg),
+                "ln2": rmsnorm_init(d),
+                "cm": rwkv_mod.channelmix_init(k2, cfg)}
+    if kind == "rec":
+        return {"ln1": rmsnorm_init(d), "rec": rglru_mod.rglru_init(k1, cfg),
+                "ln2": rmsnorm_init(d),
+                "mlp": mlp_init(k2, d, cfg.d_ff, dtype=jnp.dtype(cfg.dtype))}
+    raise ValueError(kind)
+
+
+def _block_seq(kind: str, p: Dict, x: Array, cfg: ModelConfig, positions,
+               state: Optional[Dict], want_cache: bool
+               ) -> Tuple[Array, Array, Optional[Dict]]:
+    """Sequence-form block (train/prefill). Returns (x, aux, cache_entry)."""
+    aux = jnp.zeros((), F32)
+    eps = cfg.norm_eps
+    if kind in ("attn", "moe"):
+        h = rmsnorm(p["ln1"], x, eps)
+        if cfg.attn_kind == "mla":
+            if want_cache:
+                y, cache = attn_mod.mla_prefill(p["attn"], h, cfg, positions)
+            else:
+                y = attn_mod.mla_attention(p["attn"], h, cfg, positions)
+                cache = None
+        else:
+            if want_cache:
+                y, cache = attn_mod.attention_prefill(
+                    p["attn"], h, cfg, positions,
+                    seq_shard=cfg.attn_seq_shard)
+            else:
+                y = attn_mod.attention(p["attn"], h, cfg, positions,
+                                       seq_shard=cfg.attn_seq_shard)
+                cache = None
+        x = x + y
+        h = rmsnorm(p["ln2"], x, eps)
+        if kind == "moe":
+            y, aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+        else:
+            y = mlp(p["mlp"], h, cfg.act, reduce_bf16=cfg.tp_reduce_bf16)
+        return x + y, aux, cache
+    if kind == "rwkv":
+        st = state or rwkv_mod.rwkv_state_init(cfg, x.shape[0])
+        h = rmsnorm(p["ln1"], x, eps)
+        y, tm_shift, S = rwkv_mod.timemix(p["tm"], h, st["tm_shift"],
+                                          st["S"], cfg)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, eps)
+        y, cm_shift = rwkv_mod.channelmix(p["cm"], h, st["cm_shift"])
+        cache = {"tm_shift": tm_shift, "cm_shift": cm_shift, "S": S} \
+            if want_cache else None
+        return x + y, aux, cache
+    if kind == "rec":
+        st = state or rglru_mod.rglru_state_init(cfg, x.shape[0])
+        h = rmsnorm(p["ln1"], x, eps)
+        y, new_st = rglru_mod.recurrent_block(p["rec"], h, st, cfg)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, eps)
+        y = mlp(p["mlp"], h, cfg.act, reduce_bf16=cfg.tp_reduce_bf16)
+        return x + y, aux, (new_st if want_cache else None)
+    raise ValueError(kind)
+
+
+def _block_decode(kind: str, p: Dict, x: Array, cfg: ModelConfig,
+                  cache: Dict, ctx_len: Array) -> Tuple[Array, Dict]:
+    eps = cfg.norm_eps
+    if kind in ("attn", "moe"):
+        h = rmsnorm(p["ln1"], x, eps)
+        if cfg.attn_kind == "mla":
+            y, new_cache = attn_mod.mla_decode(p["attn"], h, cfg, cache,
+                                               ctx_len)
+        else:
+            y, new_cache = attn_mod.attention_decode(p["attn"], h, cfg,
+                                                     cache, ctx_len)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, eps)
+        if kind == "moe":
+            y, _ = moe_mod.moe_ffn(p["moe"], h, cfg)
+        else:
+            y = mlp(p["mlp"], h, cfg.act, reduce_bf16=cfg.tp_reduce_bf16)
+        return x + y, new_cache
+    if kind == "rwkv":
+        h = rmsnorm(p["ln1"], x, eps)
+        y, tm_shift, S = rwkv_mod.timemix(p["tm"], h, cache["tm_shift"],
+                                          cache["S"], cfg)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, eps)
+        y, cm_shift = rwkv_mod.channelmix(p["cm"], h, cache["cm_shift"])
+        return x + y, {"tm_shift": tm_shift, "cm_shift": cm_shift, "S": S}
+    if kind == "rec":
+        h = rmsnorm(p["ln1"], x, eps)
+        y, new_st = rglru_mod.recurrent_block_step(p["rec"], h, cache, cfg)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, eps)
+        y = mlp(p["mlp"], h, cfg.act, reduce_bf16=cfg.tp_reduce_bf16)
+        return x + y, new_st
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Dict:
+    segs = segments(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: Dict = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                            cfg.n_codebooks, dtype=jnp.dtype(cfg.dtype)),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = head_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                   cfg.n_codebooks,
+                                   dtype=jnp.dtype(cfg.dtype))
+    if cfg.vision_tokens:
+        from repro.models.layers import dense_init
+        params["vision_proj"] = dense_init(keys[2],
+                                           (cfg.vision_dim, cfg.d_model),
+                                           dtype=jnp.dtype(cfg.dtype))
+    for si, seg in enumerate(segs):
+        def one_period(k, seg=seg):
+            ks = jax.random.split(k, len(seg.pattern))
+            return {f"b{i}": block_init(ks[i], kind, cfg)
+                    for i, kind in enumerate(seg.pattern)}
+        pkeys = jax.random.split(keys[3 + si if 3 + si < len(keys)
+                                      else -1], seg.n_periods)
+        params["segments"].append(jax.vmap(one_period)(pkeys))
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Dict:
+    """ShapeDtypeStruct tree without allocating (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg),
+        jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Embedding & positions
+# ---------------------------------------------------------------------------
+def _embed_inputs(params: Dict, cfg: ModelConfig, tokens: Array,
+                  vision: Optional[Array], offset=0) -> Array:
+    x = embed(params["embed"], tokens)
+    if cfg.rope == "none":
+        s = x.shape[-2]
+        x = x + sinusoidal_positions(s, cfg.d_model,
+                                     offset).astype(x.dtype)[None]
+    if cfg.vision_tokens and vision is not None:
+        vproj = (vision.astype(x.dtype) @ params["vision_proj"])
+        x = jnp.concatenate([vproj, x[:, cfg.vision_tokens:]], axis=1)
+    return shard(x, BATCH, None, None)
+
+
+def _positions(cfg: ModelConfig, batch: int, seq: int,
+               positions: Optional[Array]) -> Array:
+    if positions is not None:
+        return positions
+    if cfg.rope == "mrope":
+        return text_mrope_positions(batch, seq)
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Forward paths
+# ---------------------------------------------------------------------------
+def forward_train(params: Dict, cfg: ModelConfig, tokens: Array,
+                  positions: Optional[Array] = None,
+                  vision: Optional[Array] = None,
+                  remat: bool = True) -> Tuple[Array, Array]:
+    """Returns (logits, aux_loss)."""
+    b = tokens.shape[0]
+    s = tokens.shape[-1]
+    x = _embed_inputs(params, cfg, tokens, vision)
+    pos = _positions(cfg, b, s, positions)
+    aux_total = jnp.zeros((), F32)
+
+    for seg, seg_params in zip(segments(cfg), params["segments"]):
+        def body(carry, pp, seg=seg):
+            x, aux = carry
+            for i, kind in enumerate(seg.pattern):
+                x, a, _ = _block_seq(kind, pp[f"b{i}"], x, cfg, pos,
+                                     None, False)
+                aux = aux + a
+            return (x, aux), None
+        if remat:
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg_params)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, cfg, x)
+    return logits, aux_total
+
+
+def _head(params: Dict, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"]
+        logits = jnp.einsum("bsd,vd->bsv", x, table,
+                            preferred_element_type=F32).astype(x.dtype)
+        return shard(logits, BATCH, None, MODEL)
+    return lm_head(params["head"], x)
+
+
+def pad_cache(caches: List, cfg: ModelConfig, target_len: int) -> List:
+    """Right-pad attention caches (k/v/ckv/krope sequence dim 2, counting the
+    stacked period dim) to `target_len` capacity for subsequent decode."""
+    from jax.tree_util import DictKey
+
+    def pad(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, DictKey):
+                name = str(k.key)
+                break
+        if name in ("k", "v", "ckv", "krope"):
+            s = leaf.shape[2]
+            tgt = target_len
+            if name in ("k", "v") and cfg.window:
+                tgt = min(tgt, cfg.window)   # rolling caches stay window-sized
+            if s < tgt:
+                width = [(0, 0)] * leaf.ndim
+                width[2] = (0, tgt - s)
+                return jnp.pad(leaf, width)
+        return leaf
+
+    return [jax.tree_util.tree_map_with_path(pad, c) for c in caches]
+
+
+def forward_prefill(params: Dict, cfg: ModelConfig, tokens: Array,
+                    positions: Optional[Array] = None,
+                    vision: Optional[Array] = None
+                    ) -> Tuple[Array, List]:
+    """Returns (last-token logits, cache list per segment)."""
+    b = tokens.shape[0]
+    s = tokens.shape[-1]
+    x = _embed_inputs(params, cfg, tokens, vision)
+    pos = _positions(cfg, b, s, positions)
+    caches: List = []
+
+    for seg, seg_params in zip(segments(cfg), params["segments"]):
+        def body(x, pp, seg=seg):
+            entry = {}
+            for i, kind in enumerate(seg.pattern):
+                x, _, c = _block_seq(kind, pp[f"b{i}"], x, cfg, pos,
+                                     None, True)
+                entry[f"b{i}"] = c
+            return x, entry
+        x, seg_cache = jax.lax.scan(body, x, seg_params)
+        caches.append(seg_cache)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _head(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: Array,
+                caches: List, ctx_len: Array,
+                positions: Optional[Array] = None
+                ) -> Tuple[Array, List]:
+    """One decode step. token (B,) or (B,C) -> (logits (B,1,...), caches')."""
+    tok = token[:, None] if token.ndim == 1 else token[..., None]
+    x = _embed_inputs(params, cfg, tok, None, offset=ctx_len)
+    new_caches: List = []
+    for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
+                                          caches):
+        def body(x, pc, seg=seg):
+            pp, cache = pc
+            entry = {}
+            for i, kind in enumerate(seg.pattern):
+                x, c = _block_decode(kind, pp[f"b{i}"], x, cfg,
+                                     cache[f"b{i}"], ctx_len)
+                entry[f"b{i}"] = c
+            return x, entry
+        x, new_seg_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_seg_cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(params, cfg, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, s_cache: int) -> List:
+    """Empty cache pytree shaped like decode_step expects."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def entry(kind: str) -> Dict:
+        if kind in ("attn", "moe"):
+            if cfg.attn_kind == "mla":
+                m = cfg.mla
+                return {"ckv": jnp.zeros((batch, s_cache, m.kv_lora_rank), dt),
+                        "krope": jnp.zeros(
+                            (batch, s_cache, m.qk_rope_head_dim), dt)}
+            s = min(cfg.window, s_cache) if cfg.window else s_cache
+            return {"k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim),
+                                   dt),
+                    "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim),
+                                   dt)}
+        if kind == "rwkv":
+            return rwkv_mod.rwkv_state_init(cfg, batch)
+        if kind == "rec":
+            return rglru_mod.rglru_state_init(cfg, batch)
+        raise ValueError(kind)
+
+    caches = []
+    for seg in segments(cfg):
+        one = {f"b{i}": entry(kind) for i, kind in enumerate(seg.pattern)}
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (seg.n_periods,) + x.shape), one))
+    return caches

@@ -1,0 +1,100 @@
+"""AdamW with ZeRO-friendly state sharding and bf16-compressed gradients.
+
+Distributed-optimization notes (DESIGN.md §4):
+  * parameters are bf16, so the data-parallel gradient all-reduce is already
+    2-byte compressed; `grad_dtype` can force a further cast point;
+  * first/second moments are f32 and inherit each parameter's sharding —
+    with `fsdp=True` configs that is ZeRO-3; the tiering planner
+    (:mod:`repro.memory.offload`) can spill them to the CXL pool;
+  * global-norm clipping runs in f32 over the sharded tree (psum'd by XLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_dtype: Optional[str] = None    # e.g. 'bfloat16' compression point
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    step = step.astype(F32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads, state: OptState, params
+           ) -> Tuple[Any, OptState, Dict]:
+    if cfg.grad_dtype:
+        grads = jax.tree.map(
+            lambda g: g.astype(jnp.dtype(cfg.grad_dtype)), grads)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(F32)
+    b2c = 1.0 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mh = m_new / b1c
+        vh = v_new / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step=step, m=new_m, v=new_v), metrics

@@ -1,0 +1,71 @@
+"""Gradient compression with error feedback (int8 + per-tensor scale).
+
+For cross-pod gradient reduction on the slow inter-pod links: quantize each
+gradient tensor to int8 with a per-tensor absmax scale before the reduce and
+carry the quantization residual forward (error feedback), which keeps SGD /
+Adam convergence (Karimireddy et al., 2019) while moving 4x fewer bytes than
+f32 (2x fewer than the bf16 default wire).
+
+Usage in the train step (cross-pod stage only — intra-pod reduction stays
+bf16):
+
+    comp, ef_state = compress(grads, ef_state)   # int8 payload + residuals
+    comp = psum_over_pods(comp)                  # 1/4 the f32 bytes
+    grads = decompress(comp, n_pods)
+
+The quantizer is deterministic and shape-preserving; `ef_state` is a pytree
+like the grads (f32 residuals), checkpointed alongside optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class Compressed(NamedTuple):
+    q: Any          # int8 pytree
+    scale: Any      # f32 per-tensor scales
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, F32), grads)
+
+
+def _quantize(g, err):
+    corrected = g.astype(F32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_err = corrected - q.astype(F32) * scale
+    return q, scale, new_err
+
+
+def compress(grads, ef_state) -> Tuple[Compressed, Any]:
+    """-> (Compressed payload, new error-feedback state)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    qs, scales, errs = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = _quantize(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    return (Compressed(tdef.unflatten(qs), tdef.unflatten(scales)),
+            tdef.unflatten(errs))
+
+
+def decompress(comp: Compressed, like=None) -> Any:
+    out = jax.tree.map(lambda q, s: q.astype(F32) * s, comp.q, comp.scale)
+    if like is not None:
+        out = jax.tree.map(lambda o, l: o.astype(l.dtype), out, like)
+    return out
+
+
+def wire_bytes(grads) -> Tuple[int, int]:
+    """(uncompressed f32 bytes, compressed int8+scale bytes)."""
+    full = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    comp = sum(g.size + 4 for g in jax.tree.leaves(grads))
+    return full, comp

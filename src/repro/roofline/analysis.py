@@ -1,0 +1,188 @@
+"""Roofline assembly: three HLO-derived terms + the CXL tier term.
+
+Per (arch x shape x mesh) cell, from the saved dry-run HLO:
+
+    compute_s    = HLO_dot_flops_per_device / 197e12        (bf16 peak, v5e)
+    memory_s     = HLO_traffic_bytes_per_device / 819e9     (HBM bw)
+    collective_s = ring-corrected collective bytes / 50e9   (ICI per link)
+    cxl_s        = tiering-plan off-HBM traffic / calibrated CXL path
+
+plus MODEL_FLOPS (the analytic 6*N*D convention) and the useful-compute
+ratio MODEL/HLO that flags remat/dispatch waste.  The dominant term is the
+hillclimb target (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core import spec as hw
+from repro.memory import tiering
+from repro.models.model import SHAPES, ShapeCell
+from repro.roofline import hlo_analysis
+
+PEAK_FLOPS = hw.TPU_V5E_BF16_FLOPS
+HBM_BW = hw.TPU_V5E_HBM_GBPS
+ICI_BW = hw.TPU_V5E_ICI_GBPS
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6*N*D convention; excludes remat recompute)
+# ---------------------------------------------------------------------------
+def _attn_flops_token(cfg: ModelConfig, ctx: float) -> float:
+    """Forward attention matmul flops per token per ATTENTION layer."""
+    if cfg.attn_kind == "mla" and cfg.mla:
+        dims = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        return 4.0 * cfg.n_heads * dims * ctx
+    eff_ctx = min(ctx, cfg.window) if cfg.window else ctx
+    return 4.0 * cfg.n_heads * cfg.head_dim * eff_ctx
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    n_act = cfg.n_active_params()
+    attn_layers = sum(1 for k in cfg.layer_kinds() if k in ("attn", "moe"))
+    rwkv_layers = sum(1 for k in cfg.layer_kinds() if k == "rwkv")
+    hd = cfg.rwkv_head_dim
+    rwkv_tok = 6.0 * cfg.d_model * hd * rwkv_layers     # WKV state math
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        tokens = b * s
+        attn = attn_layers * _attn_flops_token(cfg, s / 2.0)
+        return tokens * (6.0 * n_act + 3.0 * (attn + rwkv_tok))
+    if cell.kind == "prefill":
+        tokens = b * s
+        attn = attn_layers * _attn_flops_token(cfg, s / 2.0)
+        return tokens * (2.0 * n_act + attn + rwkv_tok)
+    # decode: one token against ctx = seq_len
+    attn = attn_layers * _attn_flops_token(cfg, float(s))
+    return b * (2.0 * n_act + attn + rwkv_tok)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell roofline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float               # fusion-ideal (headline)
+    memory_hi_s: float            # all-instruction ceiling (diagnostic)
+    collective_s: float
+    cxl_s: float
+    dominant: str
+    hlo_flops_dev: float
+    traffic_dev: float
+    coll_bytes_dev: float
+    model_flops_total: float
+    useful_ratio: float           # MODEL / (HLO x chips)
+    mfu_bound: float              # model compute time / dominant bound
+    bytes_per_device: int
+    warnings: List[str]
+    next_action: str = ""
+
+    def terms(self) -> Dict[str, float]:
+        return {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s, "cxl": self.cxl_s}
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _suggestion(dom: str, r: "Roofline", cfg: ModelConfig) -> str:
+    if dom == "memory":
+        return ("memory-bound: raise arithmetic intensity — larger fused "
+                "blocks (Pallas flash kernel on TPU), wider microbatch, or "
+                "bf16 logits to cut LM-head traffic")
+    if dom == "collective":
+        return ("collective-bound: move the all-reduce earlier (overlap "
+                "with compute), reduce-scatter+all-gather the gradients, "
+                "or shrink TP degree for this layer")
+    if dom == "cxl":
+        return ("CXL-bound: deepen prefetch overlap or increase HBM-resident "
+                "fraction (tiering plan)")
+    return ("compute-bound: good — push MFU via kernel fusion and keep "
+            "collectives overlapped")
+
+
+def analyze_cell(arch: str, shape: str, mesh_tag: str, hlo_text: str,
+                 bytes_per_device: int = 0) -> Roofline:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    chips = 512 if mesh_tag == "2x16x16" else 256
+    a = hlo_analysis.analyze(hlo_text)
+    compute_s = a.flops / PEAK_FLOPS
+    # memory term bracketed: `hi` counts every post-fusion instruction's
+    # operands+outputs (CPU-backend fusion is weaker than TPU's, so this
+    # over-counts on a real pod); `lo` is fusion-ideal — only dot operands/
+    # outputs cross HBM<->VMEM (what the Pallas kernels + XLA:TPU achieve).
+    # The headline roofline uses `lo`; `hi` is the diagnostic ceiling.
+    memory_hi_s = a.traffic_bytes / HBM_BW
+    memory_s = a.dot_traffic_bytes / HBM_BW
+    collective_s = a.total_collective_bytes / ICI_BW
+    # CXL term from the tiering plan (training spills / cold-KV serving)
+    if cell.kind == "train":
+        plan = tiering.plan_training(cfg, n_devices=chips,
+                                     batch=cell.global_batch,
+                                     seq=cell.seq_len)
+    else:
+        plan = tiering.plan_serving(cfg, n_devices=chips,
+                                    batch=cell.global_batch,
+                                    context=cell.seq_len)
+    cxl_s = plan.cxl_seconds
+    mf = model_flops(cfg, cell)
+    useful = mf / max(a.flops * chips, 1.0)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s, "cxl": cxl_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mfu_bound = (mf / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    r = Roofline(arch=arch, shape=shape, mesh=mesh_tag, chips=chips,
+                 compute_s=compute_s, memory_s=memory_s,
+                 memory_hi_s=memory_hi_s,
+                 collective_s=collective_s, cxl_s=cxl_s, dominant=dominant,
+                 hlo_flops_dev=a.flops, traffic_dev=a.traffic_bytes,
+                 coll_bytes_dev=a.total_collective_bytes,
+                 model_flops_total=mf, useful_ratio=useful,
+                 mfu_bound=min(mfu_bound, 1.0),
+                 bytes_per_device=bytes_per_device,
+                 warnings=a.warnings[:3])
+    r.next_action = _suggestion(dominant, r, cfg)
+    return r
+
+
+def analyze_dir(dryrun_dir: str | pathlib.Path,
+                mesh_tag: str = "16x16") -> List[Roofline]:
+    d = pathlib.Path(dryrun_dir)
+    rows: List[Roofline] = []
+    for jf in sorted(d.glob(f"*__{mesh_tag}.json")):
+        meta = json.loads(jf.read_text())
+        if meta["status"] != "ok":
+            continue
+        hlo_file = d / "hlo" / (jf.stem + ".txt")
+        if not hlo_file.exists():
+            continue
+        rows.append(analyze_cell(meta["arch"], meta["shape"], mesh_tag,
+                                 hlo_file.read_text(),
+                                 meta.get("peak_memory_per_device", 0)))
+    return rows
+
+
+def to_markdown(rows: List[Roofline]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "cxl_s | dominant | MODEL/HLO | MFU-bound |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.2e} | "
+            f"{r.memory_s:.2e} | {r.collective_s:.2e} | {r.cxl_s:.2e} | "
+            f"**{r.dominant}** | {r.useful_ratio:.2f} | "
+            f"{r.mfu_bound:.1%} |\n")
+    return "".join(out)

@@ -1,0 +1,322 @@
+"""Static analyzer for optimized (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` counts a while-loop body ONCE, not times its
+trip count — useless for scanned transformers (94-layer loops).  This
+module re-derives per-device costs from `compiled.as_text()` with correct
+loop multipliers:
+
+  * **flops** — every `dot` (2 x output-elements x contraction size), with
+    fused computations attributed at their call sites and while bodies
+    multiplied by parsed trip counts;
+  * **traffic bytes** — per top-level instruction: output + operand bytes
+    (a post-fusion instruction ~= one kernel launch; its operands/outputs
+    are the HBM round trips).  Upper-bound proxy, consistent across cells;
+  * **collective bytes** — all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, ring-corrected ((g-1)/g, all-reduce
+    x2), multiplied into loops like everything else.
+
+Trip counts come from the loop condition: `compare(get-tuple-element,
+constant(N)), direction=LT` — the shape XLA emits for `lax.scan`.  Loops
+whose bound can't be parsed get multiplier 1 and are reported in
+`warnings` (never silently wrong).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_CALL_ATTR = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST = re.compile(r"constant\((\d+)\)")
+_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) of all array shapes in a type string."""
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+def _first_shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rhs: str
+    opcode: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    # symbol table: value name -> dims of its (first) array shape
+    types: Dict[str, List[int]] = dataclasses.field(default_factory=dict)
+    # value name -> bytes of its (first) array shape
+    nbytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    dot_traffic: float = 0.0      # fusion-ideal: dot operands/outputs only
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        self.dot_traffic += other.dot_traffic * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + int(v * mult)
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float
+    traffic_bytes: float
+    dot_traffic_bytes: float
+    collective_bytes: Dict[str, float]
+    collective_count: Dict[str, int]
+    warnings: List[str]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_PARAM_DECL = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))")
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEAD.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                # parameter types from the header signature
+                sig = line[line.find("("):line.rfind("->")]
+                for pname, ptype in _PARAM_DECL.findall(sig):
+                    sh = _first_shape_dims(ptype)
+                    if sh:
+                        cur.types[pname] = sh[1]
+                        cur.nbytes[pname] = _shape_elems_bytes(ptype)[1]
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # opcode = first word after the result type
+        after_type = re.sub(r"^\([^)]*\)\s*", "",
+                            re.sub(r"^[a-z0-9]+\[[0-9,]*\]\{?[0-9,]*\}?\s*",
+                                   "", rhs))
+        opm = re.match(r"([\w\-]+)", after_type)
+        opcode = opm.group(1) if opm else ""
+        is_root = raw.lstrip().startswith("ROOT")
+        sh = _first_shape_dims(rhs)
+        if sh:
+            cur.types[name] = sh[1]
+            # result type is everything before the opcode token
+            cur.nbytes[name] = _shape_elems_bytes(
+                rhs.split(opcode)[0] if opcode else rhs)[1]
+        cur.instrs.append(Instr(name, rhs, opcode, is_root))
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation,
+               warnings: List[str]) -> float:
+    """2 * out_elems * contraction_size for one dot instruction."""
+    out = _first_shape_dims(ins.rhs)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # lhs operand: first %name inside dot(...); dims via the symbol table
+    inside = ins.rhs[ins.rhs.find("dot(") + 4:]
+    lhs_dims: Optional[List[int]] = None
+    inline = _first_shape_dims(inside.split(",")[0])
+    if inline:                       # operand type written inline
+        lhs_dims = inline[1]
+    else:
+        mo = re.match(r"\s*%?([\w.\-]+)", inside)
+        if mo:
+            lhs_dims = comp.types.get(mo.group(1))
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
+    contraction = 1
+    if lhs_dims is not None and m:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contraction *= lhs_dims[int(idx)]
+    else:
+        warnings.append(f"dot {ins.name}: lhs shape unresolved; "
+                        "contraction=1 undercount")
+    return 2.0 * out_elems * contraction
+
+
+def _group_size(rhs: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA.search(rhs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS.search(rhs)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def _trip_count(cond: Computation, warnings: List[str]) -> float:
+    """Parse `while` trip count from the scan-shaped condition.
+
+    XLA lowers `lax.scan` to `while(i < N)`; the compare may be wrapped in
+    a kLoop fusion (`%root = fusion(%i, %constant_N), calls=...compare`).
+    Strategy: take the s32 constant operand of the ROOT instruction;
+    fall back to the largest s32 constant in the computation.
+    """
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        m = _CONST.search(ins.rhs)
+        if m and ins.rhs.strip().startswith("s32[]"):
+            consts[ins.name] = int(m.group(1))
+    root = next((i for i in cond.instrs if i.is_root), None)
+    if root is not None:
+        ops = re.findall(r"%([\w.\-]+)", root.rhs)
+        hits = [consts[o] for o in ops if o in consts]
+        if hits:
+            return float(max(hits))
+        m = _CONST.search(root.rhs)
+        if m:
+            return float(m.group(1))
+    if consts:
+        return float(max(consts.values()))
+    warnings.append(f"trip count unresolved for cond {cond.name}; using 1")
+    return 1.0
+
+
+def analyze(hlo: str) -> Analysis:
+    comps, entry = parse_computations(hlo)
+    warnings: List[str] = []
+    memo: Dict[str, Cost] = {}
+
+    def cost_of(name: str, stack=()) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Cost()
+        comp = comps[name]
+        c = Cost()
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                c.flops += _dot_flops(ins, comp, warnings)
+                # fusion-ideal traffic: operands + output of the dot
+                dt = comp.nbytes.get(ins.name, 0)
+                inside = ins.rhs[ins.rhs.find("dot(") + 4:]
+                for om in re.findall(r"%([\w.\-]+)", inside.split(")")[0]):
+                    dt += comp.nbytes.get(om, 0)
+                c.dot_traffic += dt
+            # collectives
+            for coll in COLLECTIVES:
+                if op == coll or op == coll + "-start":
+                    _, out_bytes = _shape_elems_bytes(
+                        ins.rhs.split(op)[0])
+                    g = _group_size(ins.rhs)
+                    ring = (g - 1) / g if g > 1 else 1.0
+                    factor = 2.0 if coll == "all-reduce" else 1.0
+                    wire = out_bytes * ring * factor
+                    c.coll_bytes[coll] = c.coll_bytes.get(coll, 0.0) + wire
+                    c.coll_count[coll] = c.coll_count.get(coll, 0) + 1
+                    break
+            # traffic
+            if op not in _SKIP_TRAFFIC and not op.endswith("-done"):
+                _, total_bytes = _shape_elems_bytes(ins.rhs)
+                c.traffic += total_bytes
+            # children
+            if op == "while":
+                m = _CALL_ATTR.findall(ins.rhs)
+                body = cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                trips = _trip_count(comps[cond], warnings) if cond in comps \
+                    else 1.0
+                if body:
+                    c.add(cost_of(body, stack + (name,)), trips)
+            elif op in ("fusion", "call", "custom-call", "reduce",
+                        "reduce-window", "scatter", "sort", "map",
+                        "all-reduce", "reduce-scatter", "select-and-scatter"):
+                for attr in ("calls", "to_apply"):
+                    m = re.search(attr + r"=%?([\w.\-]+)", ins.rhs)
+                    if m:
+                        c.add(cost_of(m.group(1), stack + (name,)), 1.0)
+            elif op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.rhs)
+                if m:
+                    branches = [b.strip().lstrip("%")
+                                for b in m.group(1).split(",")]
+                    costs = [cost_of(b, stack + (name,)) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda x: x.flops + x.traffic)
+                        c.add(best, 1.0)
+        memo[name] = c
+        return c
+
+    total = cost_of(entry)
+    return Analysis(flops=total.flops, traffic_bytes=total.traffic,
+                    dot_traffic_bytes=total.dot_traffic,
+                    collective_bytes=dict(total.coll_bytes),
+                    collective_count=dict(total.coll_count),
+                    warnings=warnings)

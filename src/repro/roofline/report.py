@@ -1,0 +1,95 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from saved runs.
+
+    PYTHONPATH=src python -m repro.roofline.report \
+        --baseline experiments/dryrun --optimized experiments/dryrun_opt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.roofline.analysis import Roofline, analyze_dir
+
+
+def dryrun_table(dirpath: pathlib.Path, mesh_tag: str) -> str:
+    rows = []
+    for jf in sorted(dirpath.glob(f"*__{mesh_tag}.json")):
+        m = json.loads(jf.read_text())
+        rows.append(m)
+    out = ["| arch | shape | status | compile_s | flops/dev | mem/dev GiB | "
+           "note |",
+           "|---|---|---|---|---|---|---|"]
+    for m in rows:
+        out.append(
+            f"| {m['arch']} | {m['shape']} | {m['status']} | "
+            f"{m['compile_s']} | {m['flops']:.2e} | "
+            f"{m['peak_memory_per_device']/2**30:.2f} | {m['note'][:70]} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Roofline]) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | cxl_s | "
+           "dominant | MODEL/HLO | MFU-bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.2e} | {r.memory_s:.2e} "
+            f"| {r.collective_s:.2e} | {r.cxl_s:.2e} | **{r.dominant}** | "
+            f"{r.useful_ratio:.2f} | {r.mfu_bound:.1%} |")
+    return "\n".join(out)
+
+
+def compare_table(base: List[Roofline], opt: List[Roofline]) -> str:
+    bidx = {(r.arch, r.shape): r for r in base}
+    out = ["| arch | shape | MFU before | MFU after | coll_s before | "
+           "coll_s after | speedup(bound) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in opt:
+        b = bidx.get((r.arch, r.shape))
+        if b is None:
+            continue
+        b_bound = max(b.terms().values())
+        r_bound = max(r.terms().values())
+        out.append(
+            f"| {r.arch} | {r.shape} | {b.mfu_bound:.1%} | "
+            f"**{r.mfu_bound:.1%}** | {b.collective_s:.1f} | "
+            f"{r.collective_s:.1f} | {b_bound/max(r_bound,1e-9):.1f}x |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    ap.add_argument("--optimized", default="experiments/dryrun_opt")
+    ap.add_argument("--out", default="experiments/tables")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    base = analyze_dir(args.baseline, "16x16")
+    (outdir / "roofline_baseline.md").write_text(roofline_table(base))
+    roof = pathlib.Path("experiments/roofline")
+    roof.mkdir(parents=True, exist_ok=True)
+    (roof / "baseline.json").write_text(
+        json.dumps([r.row() for r in base], indent=1))
+    (outdir / "dryrun_16x16.md").write_text(
+        dryrun_table(pathlib.Path(args.baseline), "16x16"))
+    (outdir / "dryrun_2x16x16.md").write_text(
+        dryrun_table(pathlib.Path(args.baseline), "2x16x16"))
+
+    opt_dir = pathlib.Path(args.optimized)
+    if opt_dir.exists() and list(opt_dir.glob("*__16x16.json")):
+        opt = analyze_dir(args.optimized, "16x16")
+        (outdir / "roofline_optimized.md").write_text(roofline_table(opt))
+        (roof / "optimized.json").write_text(
+            json.dumps([r.row() for r in opt], indent=1))
+        (outdir / "before_after.md").write_text(compare_table(base, opt))
+        (outdir / "dryrun_opt_2x16x16.md").write_text(
+            dryrun_table(opt_dir, "2x16x16"))
+    print(f"tables written to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.runtime.fault import (RuntimeConfig, TrainingRuntime,  # noqa: F401
+                                 WorkerFailure)

@@ -1,0 +1,37 @@
+"""Elastic mesh resizing: rebuild the mesh from surviving hosts.
+
+On TPU pods a host owns a fixed block of chips; losing a host removes its
+chips. The policy here: shrink the *data* axis to the largest power of two
+that the surviving chip count supports (model/TP axis is never resized —
+it would invalidate weight sharding), then restore from the newest
+checkpoint with the new shardings (whole-tensor checkpoints make this a
+device_put, see checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def shrink_data_axis(n_live_chips: int, model_size: int) -> Tuple[int, int]:
+    """-> (data_size, chips_used). Keeps TP intact, shrinks DP."""
+    if n_live_chips < model_size:
+        raise ValueError("fewer chips than one TP group — cannot continue")
+    data = largest_pow2_leq(n_live_chips // model_size)
+    return data, data * model_size
+
+
+def remesh(devices, data_size: int, model_size: int) -> Mesh:
+    use = devices[: data_size * model_size]
+    import numpy as np
+    arr = np.array(use).reshape(data_size, model_size)
+    return Mesh(arr, ("data", "model"))

@@ -1,0 +1,1 @@
+from repro.serving.scheduler import ContinuousBatcher, EngineStats, Request  # noqa: F401

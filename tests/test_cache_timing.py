@@ -1,0 +1,141 @@
+"""Cache simulator invariants, MESI behaviour, pollution, timing model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as C
+from repro.core import numa
+from repro.core.timing import CXLTiming, TimingConfig, calibrate
+
+
+def run(params, addr, wr=None, core=None, tier=None):
+    addr = jnp.asarray(addr, jnp.int32)
+    wr = jnp.zeros(addr.shape, bool) if wr is None else jnp.asarray(wr)
+    st_ = C.init_state(params)
+    _, stats = C.simulate_trace(params, st_, addr, wr, core=core, tier=tier)
+    return C.stats_dict(stats)
+
+
+SMALL = C.CacheParams(l1_bytes=4 * 64 * 2, l1_ways=2, l2_bytes=16 * 64 * 4,
+                      l2_ways=4, cores=2)
+
+
+def test_repeat_access_hits():
+    s = run(SMALL, [5, 5, 5, 5])
+    assert s["l1_hit"] == 3 and s["l1_miss"] == 1
+    assert s["l2_miss"] == 1 and s["mem_read_dram"] == 1
+
+
+def test_capacity_eviction_lru():
+    # 3 distinct lines mapping to the same L1 set (4 sets, 2 ways)
+    lines = [0, 4, 8]          # all set 0
+    s = run(SMALL, lines + [0])   # 0 was evicted by 8 (LRU)
+    assert s["l1_miss"] == 4
+    s = run(SMALL, lines + [8])   # 8 is MRU -> hits
+    assert s["l1_hit"] == 1
+
+
+def test_write_allocate_and_writeback():
+    s = run(SMALL, [1, 1], wr=[True, False])
+    assert s["l1_hit"] == 1
+    # dirty line evicted from L1 -> writeback to L2 (not memory yet)
+    s = run(SMALL, [0, 4, 8, 12], wr=[True, False, False, False])
+    assert s["writebacks_l1"] >= 1
+    assert s["mem_write_dram"] == 0      # L2 still holds it
+
+
+def test_mesi_invalidation_between_cores():
+    # core0 reads, core1 writes same line -> invalidation of core0's copy
+    addr = jnp.asarray([7, 7, 7], jnp.int32)
+    wr = jnp.asarray([False, True, False])
+    core = jnp.asarray([0, 1, 0], jnp.int32)
+    s = run(SMALL, addr, wr=wr, core=core)
+    assert s["invalidations"] >= 1
+    assert s["l1_miss"] >= 2             # core0 re-misses after inval
+
+
+def test_tier_attribution_and_pollution():
+    # stream of CXL-tier lines evicts DRAM-tier lines from L2
+    n = SMALL.l2_sets * SMALL.l2_ways * 2
+    addr = jnp.arange(n, dtype=jnp.int32)
+    tier = jnp.asarray([i % 2 for i in range(n)], jnp.int32)
+    s = run(SMALL, addr, tier=tier)
+    assert s["mem_read_dram"] == n // 2
+    assert s["mem_read_cxl"] == n // 2
+    # re-touch the first lines: they were evicted (pollution) -> misses again
+    s2 = run(SMALL, jnp.concatenate([addr, addr[:8]]), tier=jnp.concatenate(
+        [tier, tier[:8]]))
+    assert s2["l2_miss"] > s["l2_miss"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=200))
+def test_stats_conservation(addrs):
+    s = run(SMALL, jnp.asarray(addrs, jnp.int32))
+    assert s["l1_hit"] + s["l1_miss"] == len(addrs)
+    assert s["l2_hit"] + s["l2_miss"] == s["l1_miss"]
+    assert s["mem_read_dram"] + s["mem_read_cxl"] == s["l2_miss"]
+
+
+# ---------------------------------------------------------------------------
+# timing
+# ---------------------------------------------------------------------------
+def test_loaded_latency_monotone():
+    t = TimingConfig()
+    loads = np.linspace(0.1, 30.0, 10)
+    lat = t.loaded_latency_ns("cxl", loads)
+    assert np.all(np.diff(lat) >= 0)
+    assert lat[0] >= t.cxl.idle_ns
+
+
+def test_flit_efficiency_bounds_bandwidth():
+    t = CXLTiming(lanes=16, pcie_gen=5, backend_gbps=1000.0)
+    # 64B payload costs 5 slots x 17B = 85B on the wire
+    assert t.payload_read_gbps == pytest.approx(t.wire_gbps * 64 / 85)
+
+
+def test_calibration_recovers_curve():
+    true = CXLTiming()
+    loads = np.linspace(1.0, true.payload_gbps() * 0.9, 12)
+    lat = true.loaded_latency_ns(loads)
+    fit = calibrate(list(zip(loads, lat)),
+                    peak_gbps_hint=true.payload_gbps())
+    assert fit.idle_ns == pytest.approx(true.idle_ns, rel=0.05)
+    fit_lat = fit.loaded_latency_ns(loads)
+    np.testing.assert_allclose(fit_lat, lat, rtol=0.15)
+
+
+def test_weighted_interleave_ratio():
+    pol = numa.WeightedInterleave(3, 1)
+    tiers = pol.tiers(4000)
+    frac = float(jnp.mean(tiers.astype(jnp.float32)))
+    assert frac == pytest.approx(0.25, abs=0.01)
+
+
+# ---------------------------------------------------------------------------
+# CXL switch (beyond the paper's v1.0: its v2.0 roadmap item)
+# ---------------------------------------------------------------------------
+def test_switch_adds_latency_and_shares_bandwidth():
+    from repro.core.switch import SwitchConfig, fanout_timing
+    from repro.core.timing import CXLTiming
+    base = CXLTiming()
+    sw = SwitchConfig(n_downstream=4, hop_ns=35.0)
+    eff = fanout_timing(base, sw)
+    # two switch hops on the wire path, both directions => +4*hop idle
+    assert eff.idle_ns == pytest.approx(base.idle_ns + 4 * 35.0)
+    # four endpoints share the x16 USP: fair share < device bandwidth
+    assert eff.payload_read_gbps < base.payload_read_gbps
+    assert eff.payload_read_gbps == pytest.approx(
+        CXLTiming(lanes=16, backend_gbps=1e9).payload_read_gbps / 4, rel=0.01)
+
+
+def test_switch_contention_couples_endpoints():
+    from repro.core.switch import SwitchConfig, usp_loaded_latency_ns
+    from repro.core.timing import CXLTiming
+    base = CXLTiming()
+    sw = SwitchConfig(n_downstream=4)
+    quiet = usp_loaded_latency_ns(base, sw, [1.0, 0.0, 0.0, 0.0])
+    busy = usp_loaded_latency_ns(base, sw, [1.0, 10.0, 10.0, 10.0])
+    # endpoint 0's latency rises because of its *neighbours'* load
+    assert busy[0] > quiet[0]

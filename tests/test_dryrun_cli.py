@@ -1,0 +1,40 @@
+"""Dry-run CLI regression: one real cell lowers+compiles on the production
+mesh in a subprocess (so the 512-fake-device XLA_FLAGS never leak into this
+test process's jax)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("h2o-danube-3-4b", "decode_32k"),       # fast-compiling cell
+])
+def test_dryrun_cell_compiles(tmp_path, arch, shape):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--out", str(tmp_path)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=480)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "[ok" in out.stdout, out.stdout[-2000:]
+    meta = json.loads((tmp_path / f"{arch}__{shape}__16x16.json").read_text())
+    assert meta["status"] == "ok"
+    assert meta["flops"] > 0
+    assert meta["peak_memory_per_device"] > 0
+
+
+def test_dryrun_long500k_skip_rule(tmp_path):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-3-8b", "--shape", "long_500k",
+         "--out", str(tmp_path)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0
+    assert "[skipped" in out.stdout

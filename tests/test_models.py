@@ -1,0 +1,158 @@
+"""Per-arch smoke tests (reduced configs): forward, train step, decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.data import DataConfig, batch_at_step
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+KEY = jax.random.key(0)
+
+
+def make_batch(cfg, b=2, s=32, step=0):
+    return batch_at_step(cfg, DataConfig(batch_per_shard=b, seq_len=s), step)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke(arch)
+    params = tf.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    logits, aux = tf.forward_train(params, cfg, batch["tokens"],
+                                   positions=batch.get("positions"),
+                                   vision=batch.get("vision"))
+    if cfg.n_codebooks > 1:
+        assert logits.shape == (2, 32, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_nothing_nan(arch):
+    cfg = get_smoke(arch)
+    params = tf.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    step = M.make_train_step(cfg, adamw.AdamWConfig(lr=1e-3, warmup_steps=1))
+    params2, opt2, metrics = step(params, opt, make_batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "rwkv6-1.6b",
+                                  "recurrentgemma-9b", "musicgen-large"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_smoke(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
+    params = tf.init_params(cfg, KEY)
+    b, s, cap = 2, 24, 32
+    batch = make_batch(cfg, b, s)
+    tokens = batch["tokens"]
+    logits_full, _ = tf.forward_train(params, cfg, tokens, remat=False)
+    if cfg.n_codebooks > 1:
+        prefix, last = tokens[:, :, :s - 1], tokens[:, :, s - 1]
+    else:
+        prefix, last = tokens[:, :s - 1], tokens[:, s - 1]
+    _, caches = tf.forward_prefill(params, cfg, prefix)
+    caches = tf.pad_cache(caches, cfg, cap)
+    got, _ = tf.decode_step(params, cfg, last, caches, jnp.int32(s - 1))
+    err = float(jnp.max(jnp.abs(
+        logits_full[:, -1].astype(jnp.float32) -
+        got[:, 0].astype(jnp.float32))))
+    assert err < 0.08, f"decode diverges from teacher forcing: {err}"
+
+
+def test_deepseek_decode_matches_in_f32_nodrop():
+    cfg0 = get_smoke("deepseek-v3-671b")
+    cfg = dataclasses.replace(
+        cfg0, dtype="float32",
+        moe=dataclasses.replace(cfg0.moe,
+                                capacity_factor=float(cfg0.moe.n_experts)
+                                / cfg0.moe.top_k))
+    params = tf.init_params(cfg, KEY)
+    b, s, cap = 2, 24, 32
+    tokens = make_batch(cfg, b, s)["tokens"]
+    logits_full, _ = tf.forward_train(params, cfg, tokens, remat=False)
+    _, caches = tf.forward_prefill(params, cfg, tokens[:, :s - 1])
+    caches = tf.pad_cache(caches, cfg, cap)
+    got, _ = tf.decode_step(params, cfg, tokens[:, s - 1], caches,
+                            jnp.int32(s - 1))
+    err = float(jnp.max(jnp.abs(logits_full[:, -1] - got[:, 0])))
+    assert err < 1e-3
+
+
+def test_segments_cover_depth():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        segs = tf.segments(cfg)
+        total = sum(len(s.pattern) * s.n_periods for s in segs)
+        assert total == cfg.n_layers, arch
+
+
+def test_param_counts_match_scale():
+    # full configs land near their nameplate sizes
+    expect = {"stablelm-12b": 12e9, "granite-3-8b": 8e9,
+              "starcoder2-3b": 3e9, "rwkv6-1.6b": 1.6e9,
+              "qwen3-moe-235b-a22b": 235e9, "deepseek-v3-671b": 671e9,
+              "recurrentgemma-9b": 9e9, "h2o-danube-3-4b": 4e9,
+              "qwen2-vl-2b": 2e9, "musicgen-large": 2e9}
+    for arch, target in expect.items():
+        n = get_config(arch).n_params()
+        assert 0.55 * target < n < 1.8 * target, (arch, n, target)
+
+
+def test_moe_active_params_fraction():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.n_active_params() < 0.15 * cfg.n_params()
+
+
+def test_loss_decreases_quick_overfit():
+    cfg = dataclasses.replace(get_smoke("granite-3-8b"), vocab_size=128)
+    params = tf.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    step = M.make_train_step(cfg, adamw.AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                    total_steps=30))
+    jstep = jax.jit(step)
+    batch = make_batch(cfg, 4, 64)          # fixed batch -> overfit
+    losses = []
+    for _ in range(25):
+        params, opt, m = jstep(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_rwkv_chunked_matches_scan():
+    """Chunk-parallel WKV6 == sequential step scan (f32 exact-ish)."""
+    from repro.models import rwkv as R
+    cfg0 = dataclasses.replace(get_smoke("rwkv6-1.6b"), dtype="float32")
+    p = R.timemix_init(KEY, cfg0)
+    B, T = 2, 64
+    x = jax.random.normal(jax.random.key(1), (B, T, cfg0.d_model),
+                          jnp.float32) * 0.5
+    shift = jnp.zeros((B, cfg0.d_model), jnp.float32)
+    h = cfg0.d_model // cfg0.rwkv_head_dim
+    S0 = jnp.zeros((B, h, cfg0.rwkv_head_dim, cfg0.rwkv_head_dim),
+                   jnp.float32)
+    y1, _, S1 = R.timemix(p, x, shift, S0,
+                          dataclasses.replace(cfg0, rwkv_chunk=0))
+    for chunk in (8, 16, 32):
+        y2, _, S2 = R.timemix(p, x, shift, S0,
+                              dataclasses.replace(cfg0, rwkv_chunk=chunk))
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(S1), np.asarray(S2),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,190 @@
+"""CXL.mem packet codec + register/topology conformance (+hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packet, registers as regs, spec, topology as topo
+from repro.core.hdm import InterleaveProgram
+
+
+# ---------------------------------------------------------------------------
+# packet codecs
+# ---------------------------------------------------------------------------
+def test_m2s_roundtrip_mixed():
+    addr = jnp.arange(64, dtype=jnp.int32) * 7
+    wr = jnp.asarray([i % 3 == 0 for i in range(64)])
+    out = packet.rc_packetize(addr, wr)
+    dec = packet.ep_depacketize(out["headers"])
+    assert bool(dec["legal"].all())
+    np.testing.assert_array_equal(np.asarray(dec["address"]), np.asarray(addr))
+    np.testing.assert_array_equal(np.asarray(dec["is_write"]), np.asarray(wr))
+
+
+def test_s2m_responses_match_request_kind():
+    addr = jnp.arange(8, dtype=jnp.int32)
+    wr = jnp.asarray([0, 1] * 4, bool)
+    m2s = packet.rc_packetize(addr, wr)
+    s2m = packet.ep_respond(m2s["headers"])
+    done = packet.rc_complete(s2m["headers"])
+    assert bool(done["legal"].all())
+    # writes -> NDR Cmp (no data); reads -> DRS MemData
+    np.testing.assert_array_equal(np.asarray(done["is_read_data"]),
+                                  ~np.asarray(wr))
+    # tags survive the round trip (completion matching)
+    np.testing.assert_array_equal(np.asarray(done["tag"]), np.arange(8))
+
+
+def test_wire_accounting_read_write_asymmetry():
+    addr = jnp.zeros(10, jnp.int32)
+    reads = packet.rc_packetize(addr, jnp.zeros(10, bool))
+    writes = packet.rc_packetize(addr, jnp.ones(10, bool))
+    # a write carries 64B payload in M2S; a read is header-only
+    assert int(writes["wire_bytes"]) == 5 * int(reads["wire_bytes"])
+    m2s, s2m = packet.roundtrip_wire_bytes(10, 0)
+    assert m2s == int(reads["wire_bytes"])
+    assert s2m == 10 * 5 * packet.SLOT_WIRE_BYTES
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**30 - 1), st.booleans()),
+                min_size=1, max_size=32))
+def test_codec_roundtrip_property(reqs):
+    addr = jnp.asarray([a for a, _ in reqs], jnp.int32)
+    wr = jnp.asarray([w for _, w in reqs])
+    dec = packet.ep_depacketize(packet.rc_packetize(addr, wr)["headers"])
+    assert bool(dec["legal"].all())
+    np.testing.assert_array_equal(np.asarray(dec["address"]), np.asarray(addr))
+
+
+# ---------------------------------------------------------------------------
+# registers: HDM decoder commit rules + mailbox doorbell
+# ---------------------------------------------------------------------------
+def test_hdm_commit_rules():
+    hb = regs.HostBridgeRegisters(n_decoders=2)
+    d0, d1 = hb.decoders
+    with pytest.raises(regs.RegisterError):
+        hb.commit_decoder(0)            # commit before program
+    d0.program(0x1_0000_0000, 0x1000_0000, 1, 256, (0,))
+    hb.commit_decoder(0)
+    with pytest.raises(regs.RegisterError):
+        d0.program(0, 0x1000_0000, 1, 256, (0,))   # locked after commit
+    # decoder 1 must be above decoder 0
+    d1.program(0x1_0000_0000, 0x1000_0000, 1, 256, (0,))
+    with pytest.raises(regs.RegisterError):
+        hb.commit_decoder(1)
+
+
+def test_hdm_alignment_and_ways_validation():
+    d = regs.HdmDecoder(0)
+    with pytest.raises(regs.RegisterError):
+        d.program(0x100, 0x1000_0000, 1, 256, (0,))        # misaligned
+    with pytest.raises(regs.RegisterError):
+        d.program(0, 0x1000_0000, 5, 256, (0,) * 5)        # illegal ways
+    with pytest.raises(regs.RegisterError):
+        d.program(0, 0x1000_0000, 1, 300, (0,))            # bad granularity
+
+
+def test_mailbox_doorbell_flow():
+    dev = topo.CXLMemDevice("m0", 16 * 2**30)
+    mbox = dev.registers.mailbox
+    mbox.submit(spec.MBOX_CMD_IDENTIFY)
+    rc, payload = mbox.poll()
+    assert rc == 0
+    ident = regs.parse_identify(payload)
+    assert ident["capacity_bytes"] == 16 * 2**30
+    # unsupported command -> spec return code, doorbell cleared
+    mbox.submit(0xDEAD)
+    rc, _ = mbox.poll()
+    assert rc == 0x15 and not mbox.doorbell
+
+
+def test_bind_fails_without_media_ready():
+    dev = topo.CXLMemDevice("m0", 16 * 2**30)
+    dev.registers.status.media_ready = False
+    with pytest.raises(regs.RegisterError):
+        dev.registers.check_bind()
+
+
+# ---------------------------------------------------------------------------
+# topology / enumeration
+# ---------------------------------------------------------------------------
+def test_enumerate_multi_device_interleave():
+    sys_ = topo.System(dram_size=16 * 2**30)
+    sys_.add_expander("m0", 16 * 2**30, bridge_uid=0)
+    sys_.add_expander("m1", 16 * 2**30, bridge_uid=0)
+    m = topo.enumerate_system(sys_)
+    r = m.regions[0]
+    assert r.program.ways == 2
+    kind, dev, dpa, node = m.resolve(r.hpa_base + 256)
+    assert kind == "cxl" and dev.name == "m1" and dpa == 0 and node == 1
+
+
+def test_resolve_unmapped_raises():
+    _, m, _ = topo.build_default_system()
+    with pytest.raises(topo.TopologyError):
+        m.resolve(2**60)
+
+
+@settings(max_examples=50, deadline=None)
+@given(ways=st.sampled_from([1, 2, 4, 8]),
+       gran=st.sampled_from([256, 512, 4096]),
+       idx=st.integers(0, 10_000))
+def test_interleave_decode_encode_bijection(ways, gran, idx):
+    prog = InterleaveProgram(base=0, size=ways * gran * 1024, ways=ways,
+                             granularity=gran,
+                             targets=tuple(range(ways)))
+    hpa = (idx * 64) % prog.size
+    tgt, dpa = prog.decode(hpa)
+    assert prog.encode(tgt, dpa) == hpa
+
+
+def test_interleave_lines_match_scalar():
+    prog = InterleaveProgram(base=0, size=4 * 1024 * 2**20, ways=4,
+                             granularity=1024, targets=(0, 1, 2, 3))
+    lines = jnp.arange(4096, dtype=jnp.int32)
+    way_v, dpa_v = prog.decode_lines(lines)
+    for i in [0, 15, 16, 100, 4095]:
+        tgt, dpa = prog.decode(i * 64)
+        assert int(way_v[i]) == tgt
+        assert int(dpa_v[i]) == dpa // 64
+    # vectorized inverse
+    back = prog.encode_lines(way_v, dpa_v)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(lines))
+
+
+def test_mld_enumerates_one_region_per_ld():
+    """Beyond the paper's v1.0 scope: Multi-Logical-Device expanders.
+
+    A 16 GiB card with ld_count=4 must enumerate as 4 regions / 4 CPU-less
+    zNUMA nodes with independent (0-based) DPA spaces, committing one HDM
+    decoder per LD at both the bridge and endpoint level."""
+    GiB = 2**30
+    sys_ = topo.System(dram_size=16 * GiB)
+    dev = sys_.add_expander("mld0", 16 * GiB, ld_count=4)
+    m = topo.enumerate_system(sys_)
+    assert len(m.regions) == 4
+    assert [r.ld_id for r in m.regions] == [0, 1, 2, 3]
+    assert all(r.size == 4 * GiB for r in m.regions)
+    for r in m.regions:
+        kind, d, dpa, node = m.resolve(r.hpa_base)
+        assert kind == "cxl" and d is dev and dpa == 0
+        assert node == 1 + r.ld_id
+    # decoders committed in order at both levels
+    hb = sys_.root_complex.host_bridges[0]
+    from repro.core.registers import HdmState
+    assert [d.state for d in hb.registers.decoders[:4]] == \
+        [HdmState.COMMITTED] * 4
+    assert [d.state for d in dev.registers.component.decoders[:4]] == \
+        [HdmState.COMMITTED] * 4
+
+
+def test_mld_must_own_bridge_and_align():
+    GiB = 2**30
+    sys_ = topo.System(dram_size=16 * GiB)
+    sys_.add_expander("sld", 16 * GiB, bridge_uid=0)
+    with pytest.raises(topo.TopologyError):
+        sys_.add_expander("mld", 16 * GiB, bridge_uid=0, ld_count=2)
+    sys2 = topo.System(dram_size=16 * GiB)
+    with pytest.raises(topo.TopologyError):
+        sys2.add_expander("mld", 3 * 256 * 2**20, ld_count=2)  # misaligned

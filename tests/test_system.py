@@ -1,0 +1,84 @@
+"""End-to-end behaviour tests: build -> enumerate -> online -> characterize."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CXLRAMSim, SimConfig
+from repro.core import cache as cache_mod
+from repro.core import numa
+from repro.core.machine import CPUModel
+
+
+@pytest.fixture(scope="module")
+def sim():
+    s = CXLRAMSim(SimConfig(
+        dram_gib=16, expander_gib=(16,),
+        cache=cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                                    l2_bytes=128 * 1024, l2_ways=8)))
+    s.online("znuma")
+    return s
+
+
+def test_enumeration_exposes_znuma_node(sim):
+    stat = sim.numastat()
+    assert 0 in stat and 1 in stat
+    assert stat[1]["cpuless"] and stat[1]["kind"] == "cxl"
+    assert stat[1]["bytes"] == 16 * 2**30
+
+
+def test_memdev_identify_via_mailbox(sim):
+    devs = sim.memdevs()
+    assert len(devs) == 1
+    assert devs[0]["capacity_bytes"] == 16 * 2**30
+
+
+def test_cxl_idle_latency_exceeds_dram(sim):
+    t = sim.config.timing
+    assert t.idle_latency_ns("cxl") > 2 * t.idle_latency_ns("dram")
+    br = sim.latency_breakdown()
+    assert br["idle_total_ns"] == pytest.approx(
+        2 * (br["rc_packetize_ns"] + br["link_prop_ns"]
+             + br["ep_depacketize_ns"]) + br["backend_ns"] + 45.0)
+
+
+def test_stream_on_cxl_slower_than_dram(sim):
+    fp = 2 * sim.config.cache.l2_bytes
+    on_dram = sim.run_stream("triad", fp, numa.ZNuma(cxl_fraction=0.0))
+    on_cxl = sim.run_stream("triad", fp, numa.ZNuma(cxl_fraction=1.0))
+    assert on_cxl.time_ns > on_dram.time_ns
+    assert on_cxl.achieved_gbps["total"] < on_dram.achieved_gbps["total"]
+    # miss behaviour identical — only the backing tier changed
+    assert on_cxl.miss_rates["l2_miss_rate"] == pytest.approx(
+        on_dram.miss_rates["l2_miss_rate"])
+
+
+def test_interleave_between_extremes(sim):
+    fp = 2 * sim.config.cache.l2_bytes
+    dram = sim.run_stream("triad", fp, numa.ZNuma(0.0)).time_ns
+    cxl = sim.run_stream("triad", fp, numa.ZNuma(1.0)).time_ns
+    mix = sim.run_stream("triad", fp, numa.WeightedInterleave(1, 1)).time_ns
+    assert dram < mix < cxl
+
+
+def test_o3_faster_than_inorder(sim):
+    fp = 2 * sim.config.cache.l2_bytes
+    pol = numa.ZNuma(1.0)
+    t_in = sim.run_stream("triad", fp, pol,
+                          cpu=CPUModel(kind="inorder")).time_ns
+    t_o3 = sim.run_stream("triad", fp, pol, cpu=CPUModel(kind="o3")).time_ns
+    assert t_o3 < t_in / 2
+
+
+def test_stream_suite_shape(sim):
+    rows = sim.stream_suite(footprint_factors=(2, 4))
+    assert len(rows) == 2
+    assert rows[1]["footprint_x_l2"] == 4
+    assert all(r["l2_miss_rate"] > 0.5 for r in rows)  # streaming: no reuse
+
+
+def test_flat_mode_merges_into_node0():
+    s = CXLRAMSim(SimConfig(dram_gib=16, expander_gib=(16,)))
+    s.online("flat")
+    stat = s.numastat()
+    assert list(stat.keys()) == [0]
+    assert stat[0]["bytes"] == 32 * 2**30
