@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs import get_config, get_smoke
 from repro.core import CXLRAMSim, SimConfig
 from repro.core import cache as cache_mod
+from repro.core import engine as engine_mod
 from repro.core import numa
 from repro.core.machine import CPUModel
 from repro.core.timing import TimingConfig, latency_bandwidth_curve
@@ -211,6 +212,119 @@ def kernels_micro() -> None:
     print(f"cache_sim {us:.0f}us")
 
 
+def engine() -> None:
+    """Batched trace engine vs the seed's sequential per-config loop.
+
+    Runs the default §IV suite (4 footprints x 2 policies x 2 CPU models):
+    once as the sequential Python loop (one scan dispatch per
+    configuration, as the seed did) and once through
+    `repro.core.engine.run_sweep` (one vmapped device program).  Reports
+    trace throughput and sweep wall-clock, verifies the stats are
+    bitwise-equal, and writes `BENCH_engine.json` at the repo root.
+    """
+    print("\n== engine (batched trace engine vs sequential loop) ==")
+    sim = _sim(l2_kib=64)
+    fps = (2, 4, 6, 8)
+    policies = (numa.ZNuma(1.0), numa.WeightedInterleave(1, 1))
+    cpus = (CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8))
+
+    # --- sequential baseline: the seed loop — one `lax.scan` dispatch
+    # (and per-trace-length compile) per configuration, plain ungated step,
+    # scalar Picard per config.  Run twice: cold (with its 4 compiles) and
+    # warm, so both speedup numbers are like-for-like. ---
+    from repro.core import stream as stream_mod
+    from repro.core.machine import Machine
+
+    def sequential() -> List[Dict]:
+        rows: List[Dict] = []
+        for cpu in cpus:
+            machine = Machine(sim.config.cache, sim.config.timing, cpu)
+            for pol in policies:
+                for k in fps:
+                    layout = stream_mod.layout_for_footprint(
+                        k * sim.config.cache.l2_bytes)
+                    addr, is_write = stream_mod.stream_trace("triad", layout)
+                    tier = numa.tier_of_lines(pol, addr, layout.n_pages)
+                    stats, _ = machine.simulate(addr, is_write, tier)
+                    r = machine._time(stats)
+                    rows.append({"footprint_x_l2": k,
+                                 "policy": numa.describe(pol),
+                                 "cpu": r.cpu, "stats": r.stats})
+        return rows
+
+    t0 = time.time()
+    seq_rows = sequential()
+    t_seq_cold = time.time() - t0
+    t0 = time.time()
+    seq_rows = sequential()
+    t_seq = time.time() - t0          # warm: scan executions only
+
+    # --- batched engine: the whole grid as one device program ---
+    spec = engine_mod.SweepSpec(footprint_factors=fps, policies=policies,
+                                cpus=cpus)
+    run = lambda: engine_mod.run_sweep(spec, sim.config.cache,
+                                       sim.config.timing)
+    t0 = time.time()
+    bat_rows = run()
+    t_cold = time.time() - t0          # includes the single compilation
+    t0 = time.time()
+    bat_rows = run()
+    t_warm = time.time() - t0
+
+    # --- bitwise stats check (sequential vs batched row-by-row) ---
+    key = lambda r: (r["footprint_x_l2"], r["policy"], r["cpu"])
+    seq_by, bat_by = ({key(r): r["stats"] for r in rows}
+                      for rows in (seq_rows, bat_rows))
+    assert seq_by.keys() == bat_by.keys()
+    stats_equal = all(seq_by[k] == bat_by[k] for k in seq_by)
+    assert stats_equal, "batched stats diverged from the sequential path"
+
+    # accesses actually simulated: one per (footprint, policy) cell — CPU
+    # models share the cell's stats (sequential re-simulates per CPU)
+    cells = {(r["footprint_x_l2"], r["policy"]):
+             r["stats"]["l1_hit"] + r["stats"]["l1_miss"]
+             for r in bat_rows}
+    n_acc = sum(cells.values())
+    n_acc_seq = n_acc * len(cpus)
+    seq_rate = n_acc_seq / t_seq / 1e6
+    cold_rate = n_acc / t_cold / 1e6
+    warm_rate = n_acc / t_warm / 1e6
+    report = {
+        "suite": {"footprint_factors": list(fps),
+                  "policies": [numa.describe(p) for p in policies],
+                  "cpus": [c.kind for c in cpus],
+                  "l2_kib": sim.config.cache.l2_bytes // 1024,
+                  "rows": len(bat_rows), "accesses": n_acc,
+                  "accesses_sequential": n_acc_seq},
+        "sequential_cold_s": round(t_seq_cold, 4),
+        "sequential_warm_s": round(t_seq, 4),
+        "batched_cold_s": round(t_cold, 4),
+        "batched_warm_s": round(t_warm, 4),
+        # headline: steady-state sweep vs steady-state loop (both warm)
+        "speedup": round(t_seq / t_warm, 2),
+        "speedup_cold": round(t_seq_cold / t_cold, 2),
+        "speedup_warm": round(t_seq / t_warm, 2),
+        "seq_maccess_per_s": round(seq_rate, 3),
+        "batched_cold_maccess_per_s": round(cold_rate, 3),
+        "batched_warm_maccess_per_s": round(warm_rate, 3),
+        "stats_bitwise_equal": stats_equal,
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_engine.json"
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"sequential cold {t_seq_cold:.2f}s warm {t_seq:.2f}s "
+          f"({seq_rate:.2f} Macc/s) | batched cold {t_cold:.2f}s "
+          f"({cold_rate:.2f} Macc/s) warm {t_warm:.2f}s "
+          f"({warm_rate:.2f} Macc/s)")
+    print(f"speedup: {report['speedup_cold']}x cold/cold / "
+          f"{report['speedup_warm']}x warm/warm; bitwise stats equal: "
+          f"{stats_equal}  -> {out.name}")
+    emit("engine_sequential", t_seq * 1e6 / len(seq_rows),
+         f"Maccess/s={seq_rate:.2f}")
+    emit("engine_batched", t_warm * 1e6 / len(bat_rows),
+         f"Maccess/s={warm_rate:.2f};speedup={report['speedup_warm']:.2f}x")
+
+
 def roofline_summary() -> None:
     """Digest of the dry-run-derived roofline (experiments/roofline)."""
     print("\n== roofline_summary (from multi-pod dry-run) ==")
@@ -246,6 +360,7 @@ BENCHES: Dict[str, Callable[[], None]] = {
     "programming_models": programming_models,
     "kv_tiering": kv_tiering,
     "kernels_micro": kernels_micro,
+    "engine": engine,
     "roofline_summary": roofline_summary,
 }
 

@@ -38,3 +38,28 @@ curve = latency_bandwidth_curve(cfg, "cxl", n=6)
 print("\ncalibrated banana curve (offered GB/s, achieved, latency ns):")
 for offered, achieved, lat in curve:
     print(f"  {offered:6.1f} {achieved:8.1f} {lat:8.1f}")
+
+# --- characterize the calibrated card: the §IV grid as ONE device program ---
+# The batched trace engine stacks every (footprint, policy) cell and runs
+# the exact MESI cache model under a single vmapped scan; CPU models ride
+# the vectorized timing fixed point on top.
+from repro.core import cache as cache_mod
+from repro.core import engine, numa
+from repro.core.machine import CPUModel
+
+spec = engine.SweepSpec(
+    footprint_factors=(2, 4, 8),
+    policies=(numa.ZNuma(0.0), numa.WeightedInterleave(1, 1),
+              numa.ZNuma(1.0)),
+    cpus=(CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8)))
+cache = cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                              l2_bytes=64 * 1024, l2_ways=8)
+rows = engine.run_sweep(spec, cache, cfg)
+print(f"\nSTREAM triad on the calibrated card "
+      f"({len(spec.sim_cells)} cells -> {len(rows)} rows, one device call):")
+print(f"{'kxL2':>5} {'policy':>18} {'cpu':>8} {'bw_GB/s':>8} "
+      f"{'lat_cxl_ns':>10} {'llc_miss':>9}")
+for r in rows:
+    print(f"{r['footprint_x_l2']:>5} {r['policy']:>18} {r['cpu']:>8} "
+          f"{r['bw_total_gbps']:>8.2f} {r['lat_cxl_ns']:>10.1f} "
+          f"{r['l2_miss_rate']:>9.3f}")

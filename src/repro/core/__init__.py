@@ -1,6 +1,7 @@
 """CXLRAMSim core: the paper's contribution, JAX-native.
 
 Layers (bottom-up): spec -> packet -> registers -> hdm -> topology ->
-timing -> numa -> cache -> stream -> machine -> simulator.
+timing -> numa -> cache -> stream -> machine -> engine -> simulator.
 """
+from repro.core.engine import SweepSpec, run_sweep, run_traces  # noqa: F401
 from repro.core.simulator import CXLRAMSim, SimConfig  # noqa: F401

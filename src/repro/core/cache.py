@@ -34,6 +34,12 @@ Array = jax.Array
 # MESI states
 I, S, E, M = 0, 1, 2, 3
 
+# Sentinel-padding convention: padded trace entries carry this address
+# (real line addresses are >= 0); gated steps and the Pallas kernels skip
+# all state/stat updates for them.  Single source of truth — the engine and
+# the kernels import it from here.
+SENTINEL = -1
+
 # ---- stats indices ---------------------------------------------------------
 L1_HIT, L1_MISS, L2_HIT, L2_MISS = 0, 1, 2, 3
 MEM_READ_DRAM, MEM_READ_CXL = 4, 5
@@ -106,12 +112,30 @@ def _l2_lookup(st: CacheState, addr: Array, p: CacheParams):
     return set2, hit, jnp.where(hit, way, victim).astype(jnp.int32)
 
 
-def _step(p: CacheParams, carry, x):
+def _step(p: CacheParams, carry, x, valid=None):
+    """One access through the two-level MESI hierarchy.
+
+    `valid` (optional scalar bool) gates every state write and stat
+    increment: when False the access is a sentinel-padding entry (see
+    :data:`repro.core.engine.SENTINEL`) and must leave the carry untouched.
+    The gate folds into the existing update conditions (`& valid` on masks,
+    `* valid` on counter amounts), so for valid accesses the integer
+    arithmetic is bitwise-identical to the ungated step — at ~zero extra
+    cost compared to a post-hoc select over the full state arrays.
+    """
     st, stats, t = carry
     addr, is_write, core, tier = x
     addr = addr.astype(jnp.int32)
     core = core.astype(jnp.int32)
-    inc = lambda s, idx, amt=1: s.at[idx].add(amt)
+    if valid is None:
+        gate = lambda cond: cond
+        put = lambda old, new: new
+        inc = lambda s, idx, amt=1: s.at[idx].add(amt)
+    else:
+        vi = valid.astype(jnp.int32)
+        gate = lambda cond: cond & valid
+        put = lambda old, new: jnp.where(valid, new, old)
+        inc = lambda s, idx, amt=1: s.at[idx].add(amt * vi)
 
     # ---------------- L1 lookup ----------------
     set1 = addr & (p.l1_sets - 1)
@@ -138,7 +162,7 @@ def _step(p: CacheParams, carry, x):
                 jnp.where(is_write, n_other, 0).astype(jnp.int32))
 
     # invalidate other copies on any write (upgrade or RFO fill)
-    inval_mask = other & is_write
+    inval_mask = gate(other & is_write)
     new_l1_state = jnp.where(
         inval_mask, I, st.l1_state[:, set1])        # (cores, ways)
     st = st._replace(l1_state=st.l1_state.at[:, set1].set(new_l1_state))
@@ -149,12 +173,12 @@ def _step(p: CacheParams, carry, x):
     evict_dirty = evict_valid & (st.l1_state[core, set1, way1] == M)
     # inclusive L2: evicted line is present; mark M (dirty) there, drop sharer
     eset2, ehit, eway2 = _l2_lookup(st, evict_tag, p)
-    do_wb = evict_dirty & ehit
+    do_wb = gate(evict_dirty & ehit)
     st = st._replace(
         l2_state=st.l2_state.at[eset2, eway2].set(
             jnp.where(do_wb, M, st.l2_state[eset2, eway2])),
         l2_sharers=st.l2_sharers.at[eset2, eway2].set(
-            jnp.where(evict_valid & ehit,
+            jnp.where(gate(evict_valid & ehit),
                       st.l2_sharers[eset2, eway2] & ~(1 << core),
                       st.l2_sharers[eset2, eway2])))
     stats = inc(stats, WRITEBACKS_L1, evict_dirty.astype(jnp.int32))
@@ -177,7 +201,7 @@ def _step(p: CacheParams, carry, x):
     v_copies = (st.l1_tag[:, vset1] == v_tag) & (st.l1_state[:, vset1] != I)
     v_l1_dirty = (v_copies & (st.l1_state[:, vset1] == M)).any()
     st = st._replace(l1_state=st.l1_state.at[:, vset1].set(
-        jnp.where(v_copies & v_valid, I, st.l1_state[:, vset1])))
+        jnp.where(v_copies & gate(v_valid), I, st.l1_state[:, vset1])))
     stats = inc(stats, BACK_INVALIDATIONS,
                 jnp.where(v_valid, v_copies.sum(), 0).astype(jnp.int32))
     v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
@@ -187,8 +211,8 @@ def _step(p: CacheParams, carry, x):
     stats = inc(stats, MEM_READ_DRAM + tier, l2_miss.astype(jnp.int32))
 
     # ---- install / update line in L2 ----
-    fill2 = l2_miss
-    touch2 = l2_hit | l2_miss
+    fill2 = gate(l2_miss)
+    touch2 = gate(l2_hit | l2_miss)
     st = st._replace(
         l2_tag=st.l2_tag.at[set2, way2].set(
             jnp.where(fill2, addr, st.l2_tag[set2, way2])),
@@ -200,7 +224,7 @@ def _step(p: CacheParams, carry, x):
             jnp.where(touch2, t, st.l2_use[set2, way2])),
         l2_sharers=st.l2_sharers.at[set2, way2].set(
             jnp.where(fill2, 1 << core,
-                      jnp.where(l2_hit,
+                      jnp.where(gate(l2_hit),
                                 st.l2_sharers[set2, way2] | (1 << core),
                                 st.l2_sharers[set2, way2]))))
 
@@ -211,11 +235,176 @@ def _step(p: CacheParams, carry, x):
     hit_state = jnp.where(is_write, M, cur_state).astype(jnp.int32)
     new_state = jnp.where(l1_hit, hit_state, fill_state)
     st = st._replace(
-        l1_tag=st.l1_tag.at[core, set1, way1].set(addr),
-        l1_state=st.l1_state.at[core, set1, way1].set(new_state),
-        l1_use=st.l1_use.at[core, set1, way1].set(t))
+        l1_tag=st.l1_tag.at[core, set1, way1].set(
+            put(st.l1_tag[core, set1, way1], addr)),
+        l1_state=st.l1_state.at[core, set1, way1].set(
+            put(st.l1_state[core, set1, way1], new_state)),
+        l1_use=st.l1_use.at[core, set1, way1].set(
+            put(st.l1_use[core, set1, way1], t)))
 
     return (st, stats, t + 1), None
+
+
+def _gated_step(p: CacheParams, carry, x):
+    """`_step` with a per-access validity gate (sentinel-padding support).
+
+    `x` carries a fifth element `valid`; when it is False the access is a
+    sentinel (see :data:`repro.core.engine.SENTINEL`) and neither the cache
+    state nor the stats vector changes — the gate folds into the step's own
+    update masks (sentinel addresses index safely: `-1 & (sets-1)` is in
+    range), so for valid accesses the arithmetic — and therefore the
+    stats — is bitwise identical to the ungated `_step`.  The logical time
+    `t` advances regardless, matching the position-based timestamps of the
+    Pallas backend; padding must therefore only ever be appended at the
+    *end* of a trace.
+    """
+    addr, is_write, core, tier, valid = x
+    return _step(p, carry, (addr, is_write, core, tier), valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# Packed-state step: the batched engine's fast path
+# ---------------------------------------------------------------------------
+# Under `jax.vmap`, every `.at[...]` state write becomes a batched scatter —
+# ~0.5 us each on CPU, and `_step` issues ~24 of them (12 are the stats
+# counter bumps).  The packed representation stacks the per-line planes into
+# trailing axes — L1 (cores, sets, ways, 3)=[tag,use,state], L2 (sets, ways,
+# 5)=[tag,use,state,tier,sharers] — so each hierarchy update is ONE write of
+# a small block, and the stats vector accumulates by a single vector add of
+# the 12 per-access increments.  Same state machine, same intra-step
+# read/write order, integer-for-integer the same arithmetic: stats and final
+# state are bitwise-equal to `_step` (enforced by tests/test_engine.py).
+
+def pack_state(st: CacheState):
+    l1p = jnp.stack([st.l1_tag, st.l1_use, st.l1_state], axis=-1)
+    l2p = jnp.stack([st.l2_tag, st.l2_use, st.l2_state, st.l2_tier,
+                     st.l2_sharers], axis=-1)
+    return l1p, l2p
+
+
+def unpack_state(l1p, l2p) -> CacheState:
+    return CacheState(
+        l1_tag=l1p[..., 0], l1_use=l1p[..., 1], l1_state=l1p[..., 2],
+        l2_tag=l2p[..., 0], l2_use=l2p[..., 1], l2_state=l2p[..., 2],
+        l2_tier=l2p[..., 3], l2_sharers=l2p[..., 4])
+
+
+def _packed_step(p: CacheParams, carry, x):
+    """One (optionally sentinel-gated) access over packed state.
+
+    Mirrors `_step` operation-for-operation; `valid=False` entries leave
+    state and stats untouched.  When `p.cores == 1` the cross-core MESI
+    traffic (other-copy probe, write-invalidations) is statically absent —
+    `other` is identically false — and is elided at trace time.
+    """
+    l1p, l2p, stats, t = carry
+    addr, is_write, core, tier, valid = x
+    addr = addr.astype(jnp.int32)
+    core = core.astype(jnp.int32)
+    vi = valid.astype(jnp.int32)
+
+    # ---------------- L1 lookup ----------------
+    set1 = addr & (p.l1_sets - 1)
+    all1 = l1p[:, set1]                           # (cores, ways, 3)
+    row_t, row_u, row_s = (all1[core, :, 0], all1[core, :, 1],
+                           all1[core, :, 2])
+    hits = (row_t == addr) & (row_s != I)
+    l1_hit = hits.any()
+    way1 = jnp.where(l1_hit, jnp.argmax(hits),
+                     jnp.argmin(row_u)).astype(jnp.int32)
+    cur_state = row_s[way1]
+    needs_upgrade = l1_hit & is_write & (cur_state == S)
+
+    if p.cores == 1:
+        n_other = jnp.int32(0)
+    else:
+        copies = (all1[:, :, 0] == addr) & (all1[:, :, 2] != I)
+        other = copies & (jnp.arange(p.cores, dtype=jnp.int32)[:, None]
+                          != core)
+        n_other = other.sum()
+        # invalidate other copies on any write (upgrade or RFO fill)
+        inval_mask = other & is_write & valid
+        l1p = l1p.at[:, set1, :, 2].set(
+            jnp.where(inval_mask, I, all1[:, :, 2]))
+
+    # ---------------- L1 victim writeback (on miss) ----------------
+    evict_valid = (~l1_hit) & (cur_state != I)
+    evict_tag = row_t[way1]
+    evict_dirty = evict_valid & (cur_state == M)
+    eset2 = evict_tag & (p.l2_sets - 1)
+    erow = l2p[eset2]                             # (ways, 5)
+    ehits = erow[:, 0] == evict_tag
+    ehit = ehits.any()
+    eway = jnp.where(ehit, jnp.argmax(ehits),
+                     jnp.argmin(erow[:, 1])).astype(jnp.int32)
+    ecell = erow[eway]
+    ecell = ecell.at[2].set(jnp.where(evict_dirty & ehit & valid,
+                                      M, ecell[2]))
+    ecell = ecell.at[4].set(jnp.where(evict_valid & ehit & valid,
+                                      ecell[4] & ~(1 << core), ecell[4]))
+    l2p = l2p.at[eset2, eway].set(ecell)
+
+    # ---------------- L2 lookup (only meaningful on L1 miss) --------------
+    set2 = addr & (p.l2_sets - 1)
+    row2 = l2p[set2]
+    hits2 = row2[:, 0] == addr
+    l2_hit_raw = hits2.any()
+    way2 = jnp.where(l2_hit_raw, jnp.argmax(hits2),
+                     jnp.argmin(row2[:, 1])).astype(jnp.int32)
+    l2_hit = l2_hit_raw & (~l1_hit)
+    l2_miss = (~l2_hit_raw) & (~l1_hit)
+
+    # ---- L2 victim handling on fill: back-invalidate + writeback ----
+    v_cell = l2p[set2, way2]
+    v_tag, v_state, v_tier = v_cell[0], v_cell[2], v_cell[3]
+    v_valid = l2_miss & (v_state != I) & (v_tag != addr)
+    vset1 = v_tag & (p.l1_sets - 1)
+    vall = l1p[:, vset1]
+    v_copies = (vall[:, :, 0] == v_tag) & (vall[:, :, 2] != I)
+    v_l1_dirty = (v_copies & (vall[:, :, 2] == M)).any()
+    l1p = l1p.at[:, vset1, :, 2].set(
+        jnp.where(v_copies & (v_valid & valid), I, vall[:, :, 2]))
+    v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
+
+    # ---- install / update line in L2 ----
+    fill2 = l2_miss & valid
+    touch2 = (l2_hit | l2_miss) & valid
+    me = jnp.int32(1) << core
+    l2p = l2p.at[set2, way2].set(jnp.stack([
+        jnp.where(fill2, addr, v_cell[0]),
+        jnp.where(touch2, t, v_cell[1]),
+        jnp.where(fill2, E, v_cell[2]),
+        jnp.where(fill2, tier, v_cell[3]),
+        jnp.where(fill2, me,
+                  jnp.where(l2_hit & valid, v_cell[4] | me, v_cell[4])),
+    ]))
+
+    # ---------------- install / update line in L1 ----------------
+    sole = n_other == 0
+    fill_state = jnp.where(is_write, M,
+                           jnp.where(sole, E, S)).astype(jnp.int32)
+    hit_state = jnp.where(is_write, M, cur_state).astype(jnp.int32)
+    new_state = jnp.where(l1_hit, hit_state, fill_state)
+    old1 = l1p[core, set1, way1]
+    l1p = l1p.at[core, set1, way1].set(
+        jnp.where(valid, jnp.stack([addr, t, new_state]), old1))
+
+    # ---- stats: one vector add, rows ordered as STAT_NAMES ----
+    z = jnp.int32(0)
+    incs = jnp.stack([
+        l1_hit.astype(jnp.int32), (~l1_hit).astype(jnp.int32),
+        l2_hit.astype(jnp.int32), l2_miss.astype(jnp.int32),
+        (l2_miss & (tier == 0)).astype(jnp.int32),
+        (l2_miss & (tier == 1)).astype(jnp.int32),
+        (v_dirty & (v_tier == 0)).astype(jnp.int32),
+        (v_dirty & (v_tier == 1)).astype(jnp.int32),
+        needs_upgrade.astype(jnp.int32),
+        jnp.where(is_write, n_other, z).astype(jnp.int32),
+        jnp.where(v_valid, v_copies.sum(), z).astype(jnp.int32),
+        evict_dirty.astype(jnp.int32),
+    ])
+    stats = stats + incs * vi
+    return (l1p, l2p, stats, t + 1), None
 
 
 @functools.partial(jax.jit, static_argnums=0)

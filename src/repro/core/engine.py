@@ -1,0 +1,260 @@
+"""Batched trace engine: multi-config characterization as ONE device program.
+
+The paper's §IV suite sweeps STREAM footprints x page-placement policies x
+CPU models.  The seed drove that sweep from Python — one `lax.scan` dispatch
+(and one XLA compilation per trace length) per configuration.  This engine
+stacks every (footprint, policy) configuration into a leading batch
+dimension, pads the traces to a common length with sentinel entries, and
+runs the *exact* two-level MESI model of :mod:`repro.core.cache` under a
+single ``jax.vmap``-over-``lax.scan`` jitted program: one compilation, one
+device call for the whole suite.  CPU models do not touch cache state, so
+the engine simulates each (footprint, policy) cell once and broadcasts the
+stats across the CPU axis before closing the vectorized Picard timing fixed
+point (:func:`repro.core.machine.time_batch`).
+
+Sentinel convention
+-------------------
+Padded trace entries carry ``addr == SENTINEL`` (= -1).  The masked step
+(:func:`repro.core.cache._gated_step`) and both Pallas kernels skip all
+state/stat updates for them, so stats over a padded trace are **bitwise
+equal** to the unpadded sequential run.  Padding is only ever appended at
+the end of a trace (logical time still advances across sentinels).
+
+Backends
+--------
+``reference``
+    vmapped `lax.scan` over :func:`repro.core.cache._gated_step` — the
+    oracle, and the fast path on CPU hosts.
+``pallas``
+    :func:`repro.kernels.ops.mesi_cache_sim` — the full two-level MESI +
+    tier state machine with VMEM-resident tags, a (batch, chunks) grid and
+    chunked HBM->VMEM trace streaming.  Compiled on TPU backends;
+    interpret mode elsewhere (validation only — keep geometries small).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_mod
+from repro.core import numa as numa_mod
+from repro.core import stream as stream_mod
+from repro.core.machine import CPUModel, RunResult, time_batch
+from repro.core.timing import TimingConfig
+
+Array = jax.Array
+
+SENTINEL = cache_mod.SENTINEL   # padded trace entries: addr == SENTINEL
+BACKENDS = ("reference", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Sweep specification
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """The §IV characterization grid, batched into one device program.
+
+    `footprint_factors` are multiples of the machine's L2 size (the paper
+    runs STREAM at {2,4,6,8} x L2).  The cache model runs once per
+    (footprint, policy) cell; `cpus` only vary the analytic timing layer.
+    """
+    footprint_factors: Tuple[int, ...] = (2, 4, 6, 8)
+    policies: Tuple[numa_mod.Policy, ...] = (numa_mod.ZNuma(1.0),)
+    cpus: Tuple[CPUModel, ...] = (CPUModel(kind="o3"),)
+    kernel: str = "triad"
+    backend: str = "reference"
+
+    @property
+    def sim_cells(self) -> List[Tuple[int, numa_mod.Policy]]:
+        return [(k, pol) for k in self.footprint_factors
+                for pol in self.policies]
+
+
+# ---------------------------------------------------------------------------
+# Trace batching
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TraceBatch:
+    """Stacked per-config traces, sentinel-padded to a common length.
+
+    All arrays are (B, N) int32; `n_valid[b]` real entries per row, the rest
+    sentinel-padded (`addr == SENTINEL`, other fields zero).
+    """
+    addr: np.ndarray
+    is_write: np.ndarray
+    core: np.ndarray
+    tier: np.ndarray
+    n_valid: np.ndarray
+
+    @property
+    def batch(self) -> int:
+        return self.addr.shape[0]
+
+    @property
+    def length(self) -> int:
+        return self.addr.shape[1]
+
+    @property
+    def total_accesses(self) -> int:
+        return int(self.n_valid.sum())
+
+
+def stack_traces(traces: Sequence[Tuple[np.ndarray, np.ndarray,
+                                        Optional[np.ndarray],
+                                        Optional[np.ndarray]]],
+                 pad_to_multiple: int = 1) -> TraceBatch:
+    """Stack (addr, is_write[, core[, tier]]) traces of unequal length.
+
+    Rows are padded at the end with `SENTINEL` addresses (zero for the other
+    fields); the common length is rounded up to `pad_to_multiple` so the
+    Pallas backend can stream fixed-size chunks without a remainder.
+    """
+    if not traces:
+        raise ValueError("no traces to stack (empty sweep grid?)")
+    n_valid = np.asarray([np.asarray(t[0]).shape[0] for t in traces],
+                         np.int64)
+    n_max = int(n_valid.max())
+    n_max = -(-n_max // pad_to_multiple) * pad_to_multiple
+    b = len(traces)
+    addr = np.full((b, n_max), SENTINEL, np.int32)
+    is_write = np.zeros((b, n_max), np.int32)
+    core = np.zeros((b, n_max), np.int32)
+    tier = np.zeros((b, n_max), np.int32)
+    for i, t in enumerate(traces):
+        a = np.asarray(t[0], np.int32)
+        n = a.shape[0]
+        addr[i, :n] = a
+        is_write[i, :n] = np.asarray(t[1], np.int32)
+        if len(t) > 2 and t[2] is not None:
+            core[i, :n] = np.asarray(t[2], np.int32)
+        if len(t) > 3 and t[3] is not None:
+            tier[i, :n] = np.asarray(t[3], np.int32)
+    return TraceBatch(addr=addr, is_write=is_write, core=core, tier=tier,
+                      n_valid=n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Batched simulation
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=0)
+def _run_batch_reference(p: cache_mod.CacheParams, addr: Array,
+                         is_write: Array, core: Array, tier: Array):
+    """vmap-over-scan: the whole batch in one XLA program.
+
+    Uses the packed-state step (`cache._packed_step`) — bitwise-equal to
+    the `_step` oracle but with one write per hierarchy update instead of
+    ~24 vmapped scatters per access, which is what makes the batched
+    program faster per access than the sequential loop on CPU.  `unroll=2`
+    shaves the scan's loop overhead (larger unrolls regress on CPU).
+    """
+    valid = addr != SENTINEL
+
+    def one(a, w, c, tr, v):
+        l1p, l2p = cache_mod.pack_state(cache_mod.init_state(p))
+        stats0 = jnp.zeros((cache_mod.NSTATS,), jnp.int32)
+        (l1p, l2p, stats, _), _ = jax.lax.scan(
+            functools.partial(cache_mod._packed_step, p),
+            (l1p, l2p, stats0, jnp.int32(1)), (a, w, c, tr, v), unroll=2)
+        return stats, cache_mod.unpack_state(l1p, l2p)
+
+    return jax.vmap(one)(addr, is_write.astype(bool),
+                         core, tier, valid)
+
+
+def run_traces(p: cache_mod.CacheParams, addr, is_write,
+               core=None, tier=None, *, backend: str = "reference",
+               chunk: int = 512,
+               ) -> Tuple[Array, cache_mod.CacheState]:
+    """Simulate a (B, N) batch of sentinel-padded traces in one device call.
+
+    Args:
+      p: cache geometry (shared across the batch — it is static state
+        layout; per-config *traces/tiers/policies* are what vary).
+      addr: (B, N) int32, `SENTINEL` marks padding.
+      is_write/core/tier: (B, N) int32 (or None for zeros).
+      backend: 'reference' (vmapped scan) or 'pallas' (MESI kernel).
+      chunk: trace elements per Pallas grid step.
+
+    Returns: (stats (B, NSTATS) int32, batched CacheState).
+    """
+    addr = jnp.asarray(addr, jnp.int32)
+    if addr.ndim != 2:
+        raise ValueError("run_traces expects a (B, N) batch; "
+                         "use addr[None] for a single trace")
+    z = jnp.zeros(addr.shape, jnp.int32)
+    is_write = z if is_write is None else jnp.asarray(is_write, jnp.int32)
+    core = z if core is None else jnp.asarray(core, jnp.int32)
+    tier = z if tier is None else jnp.asarray(tier, jnp.int32)
+    if backend == "reference":
+        return _run_batch_reference(p, addr, is_write, core, tier)
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.mesi_cache_sim(addr, is_write, core, tier,
+                                  params=p, chunk=chunk)
+    raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+
+
+# ---------------------------------------------------------------------------
+# The §IV sweep
+# ---------------------------------------------------------------------------
+def build_stream_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
+                       chunk: int = 512) -> TraceBatch:
+    """Materialize the (footprint x policy) STREAM trace batch."""
+    traces = []
+    for k, pol in spec.sim_cells:
+        layout = stream_mod.layout_for_footprint(k * cache.l2_bytes)
+        addr, is_write = stream_mod.stream_trace(spec.kernel, layout)
+        tier = numa_mod.tier_of_lines(pol, addr, layout.n_pages)
+        traces.append((np.asarray(addr), np.asarray(is_write), None,
+                       np.asarray(tier)))
+    return stack_traces(traces, pad_to_multiple=chunk)
+
+
+def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
+              timing: TimingConfig, *, chunk: int = 512) -> List[Dict]:
+    """Run the whole characterization suite as one batched device program.
+
+    Returns one row dict per (footprint, policy, cpu) — the same schema as
+    `CXLRAMSim.stream_suite` rows, plus the raw `stats` counters.  Stats are
+    bitwise-equal to running each configuration through the sequential
+    per-config path.
+    """
+    results = sweep_results(spec, cache, timing, chunk=chunk)
+    rows: List[Dict] = []
+    i = 0
+    for k, pol in spec.sim_cells:
+        for _cpu in spec.cpus:
+            r = results[i]
+            rows.append({"footprint_x_l2": k, "kernel": spec.kernel,
+                         "policy": numa_mod.describe(pol), "cpu": r.cpu,
+                         **r.row(), "stats": r.stats})
+            i += 1
+    return rows
+
+
+def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
+                  timing: TimingConfig, *, chunk: int = 512
+                  ) -> List[RunResult]:
+    """`run_sweep` returning full RunResults (row order identical).
+
+    One device call simulates every (footprint, policy) cell; each cell's
+    stats are then broadcast across the CPU-model axis (CPU models never
+    touch cache state) and the Picard timing fixed point closes vectorized
+    over all rows.
+    """
+    if spec.backend not in BACKENDS:
+        raise ValueError(f"unknown backend {spec.backend!r}")
+    batch = build_stream_batch(spec, cache, chunk=chunk)
+    stats, _ = run_traces(cache, batch.addr, batch.is_write,
+                          core=None, tier=batch.tier,
+                          backend=spec.backend, chunk=chunk)
+    stats = np.asarray(jax.block_until_ready(stats), np.int64)
+    rows_stats = np.repeat(stats, len(spec.cpus), axis=0)
+    rows_cpus = list(spec.cpus) * len(spec.sim_cells)
+    return time_batch(timing, rows_cpus, rows_stats)

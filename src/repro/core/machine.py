@@ -18,7 +18,7 @@ iterations converge (monotone curve).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -84,51 +84,114 @@ class Machine:
 
     # -- timing fixed point -------------------------------------------------
     def _time(self, stats: Dict[str, int]) -> RunResult:
-        cpu = self.cpu
-        n_acc = stats["l1_hit"] + stats["l1_miss"]
-        reads = {"dram": stats["mem_read_dram"], "cxl": stats["mem_read_cxl"]}
-        writes = {"dram": stats["mem_write_dram"], "cxl": stats["mem_write_cxl"]}
-        lines = {k: reads[k] + writes[k] for k in ("dram", "cxl")}
-        bytes_ = {k: v * CACHELINE_BYTES for k, v in lines.items()}
-
-        base_ns = (n_acc / (cpu.ipc_core * cpu.freq_ghz)        # issue
-                   + stats["l1_hit"] * 0.0                      # hidden
-                   + stats["l2_hit"] * cpu.l2_hit_ns / cpu.effective_mlp)
-        t = max(base_ns, 1.0)
-        lat = {"dram": self.timing.idle_latency_ns("dram"),
-               "cxl": self.timing.idle_latency_ns("cxl")}
-        for _ in range(8):  # Picard iteration on the loaded-latency curve
-            stall = 0.0
-            for k in ("dram", "cxl"):
-                if lines[k] == 0:
-                    continue
-                offered = bytes_[k] / max(t, 1.0)                # B/ns == GB/s
-                rf = reads[k] / max(lines[k], 1)
-                lat[k] = float(np.asarray(
-                    self.timing.loaded_latency_ns(k, offered, rf)
-                    if k == "cxl" else self.timing.loaded_latency_ns(k, offered)))
-                # MLP-overlapped stalls, floored by the bandwidth bound
-                t_lat = lines[k] * lat[k] / cpu.effective_mlp
-                t_bw = bytes_[k] / self.timing.peak_gbps(k, rf)
-                stall += max(t_lat, t_bw)
-            t_new = base_ns + stall
-            if abs(t_new - t) / max(t, 1.0) < 1e-6:
-                t = t_new
-                break
-            t = t_new
-
-        ach = {k: bytes_[k] / t for k in ("dram", "cxl")}
-        ach["total"] = sum(ach.values())
-        mr = {"l1_miss_rate": stats["l1_miss"] / max(n_acc, 1),
-              "l2_miss_rate": stats["l2_miss"] /
-              max(stats["l2_hit"] + stats["l2_miss"], 1),
-              "llc_mpki": 1000.0 * stats["l2_miss"] / max(n_acc, 1)}
-        return RunResult(stats=stats, miss_rates=mr, time_ns=t,
-                         achieved_gbps=ach, loaded_latency_ns=lat,
-                         cpu=cpu.kind)
+        vec = np.asarray([[stats[n] for n in cache_sim.STAT_NAMES]], np.int64)
+        return time_batch(self.timing, [self.cpu], vec)[0]
 
     def run_trace(self, addr, is_write, policy: numa_mod.Policy,
-                  n_pages: int, core=None) -> RunResult:
-        tier = numa_mod.tier_of_lines(policy, jnp.asarray(addr), n_pages)
-        stats, _ = self.simulate(addr, is_write, tier, core=core)
-        return self._time(stats)
+                  n_pages: int, core=None, backend: str = "reference"
+                  ) -> RunResult:
+        """One trace through the batched engine (B=1) + timing fixed point."""
+        from repro.core import engine  # deferred: engine builds on machine
+        addr = jnp.asarray(addr, jnp.int32)
+        tier = numa_mod.tier_of_lines(policy, addr, n_pages)
+        stats, _ = engine.run_traces(
+            self.cache_params, addr[None], jnp.asarray(is_write)[None],
+            core=None if core is None else jnp.asarray(core)[None],
+            tier=tier[None], backend=backend)
+        return self._time(cache_sim.stats_dict(stats[0]))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized timing fixed point (used by the batched trace engine)
+# ---------------------------------------------------------------------------
+_TIERS = ("dram", "cxl")
+
+
+def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
+               stats: np.ndarray) -> List[RunResult]:
+    """Close the Picard timing fixed point for a whole batch at once.
+
+    The loaded-latency curve is monotone, so a handful of Picard iterations
+    converge; here every iteration updates all `B` configurations with
+    vectorized numpy instead of a Python loop per configuration.  Elements
+    freeze (both `t` and the per-tier latencies) the iteration they converge,
+    so each element's trajectory is independent of what else shares the batch.
+
+    Guards (satellite of the batched-engine PR):
+      * zero memory accesses => `time_ns == 0.0` and idle per-tier latencies,
+        rather than the issue-time floor leaking into the result;
+      * a tier with zero lines keeps its *idle* latency untouched in
+        `RunResult.loaded_latency_ns` — the queueing curve is never evaluated
+        for traffic that does not exist.
+
+    Args:
+      timing: the per-tier timing model.
+      cpus:   one CPUModel per batch row.
+      stats:  (B, NSTATS) int counter matrix, rows ordered as STAT_NAMES.
+
+    Returns one RunResult per row.
+    """
+    stats = np.asarray(stats, np.int64)
+    if stats.ndim != 2 or stats.shape[1] != cache_sim.NSTATS:
+        raise ValueError(f"stats must be (B, {cache_sim.NSTATS})")
+    b = stats.shape[0]
+    if len(cpus) != b:
+        raise ValueError("need one CPUModel per stats row")
+
+    ipc = np.asarray([c.ipc_core for c in cpus])
+    freq = np.asarray([c.freq_ghz for c in cpus])
+    l2_hit_ns = np.asarray([c.l2_hit_ns for c in cpus])
+    mlp = np.asarray([float(c.effective_mlp) for c in cpus])
+
+    n_acc = stats[:, cache_sim.L1_HIT] + stats[:, cache_sim.L1_MISS]
+    reads = {"dram": stats[:, cache_sim.MEM_READ_DRAM].astype(np.float64),
+             "cxl": stats[:, cache_sim.MEM_READ_CXL].astype(np.float64)}
+    writes = {"dram": stats[:, cache_sim.MEM_WRITE_DRAM].astype(np.float64),
+              "cxl": stats[:, cache_sim.MEM_WRITE_CXL].astype(np.float64)}
+    lines = {k: reads[k] + writes[k] for k in _TIERS}
+    bytes_ = {k: v * CACHELINE_BYTES for k, v in lines.items()}
+
+    base_ns = (n_acc / (ipc * freq)                       # issue
+               + stats[:, cache_sim.L2_HIT] * l2_hit_ns / mlp)
+    t = np.maximum(base_ns, 1.0)
+    lat = {k: np.full(b, timing.idle_latency_ns(k)) for k in _TIERS}
+    done = np.zeros(b, bool)
+    for _ in range(8):  # Picard iteration on the loaded-latency curve
+        stall = np.zeros(b)
+        for k in _TIERS:
+            has = lines[k] > 0
+            offered = bytes_[k] / np.maximum(t, 1.0)      # B/ns == GB/s
+            rf = reads[k] / np.maximum(lines[k], 1.0)
+            loaded = np.asarray(
+                timing.loaded_latency_ns(k, offered, rf) if k == "cxl"
+                else timing.loaded_latency_ns(k, offered), np.float64)
+            lat[k] = np.where(done | ~has, lat[k], loaded)
+            # MLP-overlapped stalls, floored by the bandwidth bound
+            t_lat = lines[k] * lat[k] / mlp
+            t_bw = bytes_[k] / timing.peak_gbps(k, rf)
+            stall += np.where(has, np.maximum(t_lat, t_bw), 0.0)
+        t_new = base_ns + stall
+        newly = ~done & (np.abs(t_new - t) / np.maximum(t, 1.0) < 1e-6)
+        t = np.where(done, t, t_new)
+        done |= newly
+        if done.all():
+            break
+
+    t_rep = np.where(n_acc > 0, t, 0.0)
+    ach = {k: bytes_[k] / np.maximum(t, 1.0) for k in _TIERS}
+    results: List[RunResult] = []
+    for i in range(b):
+        s = {n: int(stats[i, j]) for j, n in enumerate(cache_sim.STAT_NAMES)}
+        na = max(int(n_acc[i]), 1)
+        l2a = max(s["l2_hit"] + s["l2_miss"], 1)
+        mr = {"l1_miss_rate": s["l1_miss"] / na,
+              "l2_miss_rate": s["l2_miss"] / l2a,
+              "llc_mpki": 1000.0 * s["l2_miss"] / na}
+        a = {k: float(ach[k][i]) for k in _TIERS}
+        a["total"] = a["dram"] + a["cxl"]
+        results.append(RunResult(
+            stats=s, miss_rates=mr, time_ns=float(t_rep[i]),
+            achieved_gbps=a,
+            loaded_latency_ns={k: float(lat[k][i]) for k in _TIERS},
+            cpu=cpus[i].kind))
+    return results

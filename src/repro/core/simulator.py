@@ -13,6 +13,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from repro.core import cache as cache_sim
+from repro.core import engine as engine_mod
 from repro.core import numa as numa_mod
 from repro.core import stream as stream_mod
 from repro.core import topology as topo
@@ -59,12 +60,15 @@ class CXLRAMSim:
         return self.cli.numastat()
 
     # ---- characterization -------------------------------------------------
+    def _check_policy(self, policy: numa_mod.Policy) -> None:
+        if not self._onlined and not isinstance(policy, numa_mod.ZNuma):
+            raise RuntimeError("online() the CXL region first")
+
     def run_stream(self, kernel: str, footprint_bytes: int,
                    policy: numa_mod.Policy,
                    cpu: Optional[CPUModel] = None) -> RunResult:
         """One STREAM kernel pass through the cache/tier machine."""
-        if not self._onlined and not isinstance(policy, numa_mod.ZNuma):
-            raise RuntimeError("online() the CXL region first")
+        self._check_policy(policy)
         layout = stream_mod.layout_for_footprint(footprint_bytes)
         addr, is_write = stream_mod.stream_trace(kernel, layout)
         machine = self.machine if cpu is None else Machine(
@@ -74,8 +78,52 @@ class CXLRAMSim:
     def stream_suite(self, footprint_factors: Sequence[int] = (2, 4, 6, 8),
                      policy: Optional[numa_mod.Policy] = None,
                      kernel: str = "triad",
-                     cpu: Optional[CPUModel] = None) -> List[Dict]:
-        """The paper's §IV sweep: STREAM at k x L2 footprints."""
+                     cpu: Optional[CPUModel] = None,
+                     backend: str = "reference") -> List[Dict]:
+        """The paper's §IV sweep: STREAM at k x L2 footprints.
+
+        All footprints run as ONE batched device program (one compilation,
+        one dispatch) through :mod:`repro.core.engine`; stats are
+        bitwise-equal to :meth:`stream_suite_sequential`.
+        """
+        policy = policy or numa_mod.ZNuma(cxl_fraction=1.0)
+        return self.sweep(footprint_factors, policies=(policy,),
+                          cpus=(cpu or self.config.cpu,), kernel=kernel,
+                          backend=backend)
+
+    def sweep(self, footprint_factors: Sequence[int] = (2, 4, 6, 8),
+              policies: Optional[Sequence[numa_mod.Policy]] = None,
+              cpus: Optional[Sequence[CPUModel]] = None,
+              kernel: str = "triad",
+              backend: str = "reference") -> List[Dict]:
+        """The full §IV grid — (footprint x policy x CPU model) — batched.
+
+        Every (footprint, policy) cell is simulated in one vmapped device
+        call; CPU models vary only the vectorized timing fixed point.
+        """
+        policies = tuple(policies) if policies else (
+            numa_mod.ZNuma(cxl_fraction=1.0),)
+        for p in policies:
+            self._check_policy(p)
+        cpus = tuple(cpus) if cpus else (self.config.cpu,)
+        spec = engine_mod.SweepSpec(
+            footprint_factors=tuple(footprint_factors), policies=policies,
+            cpus=cpus, kernel=kernel, backend=backend)
+        return engine_mod.run_sweep(spec, self.config.cache,
+                                    self.config.timing)
+
+    def stream_suite_sequential(self,
+                                footprint_factors: Sequence[int]
+                                = (2, 4, 6, 8),
+                                policy: Optional[numa_mod.Policy] = None,
+                                kernel: str = "triad",
+                                cpu: Optional[CPUModel] = None
+                                ) -> List[Dict]:
+        """Per-config sequential path (one dispatch + compile per footprint).
+
+        Kept as the oracle/baseline the batched engine is tested and
+        benchmarked against (`benchmarks/run.py --only engine`).
+        """
         policy = policy or numa_mod.ZNuma(cxl_fraction=1.0)
         rows = []
         for k in footprint_factors:
@@ -83,7 +131,7 @@ class CXLRAMSim:
             r = self.run_stream(kernel, fp, policy, cpu=cpu)
             rows.append({"footprint_x_l2": k, "kernel": kernel,
                          "policy": numa_mod.describe(policy),
-                         "cpu": r.cpu, **r.row()})
+                         "cpu": r.cpu, **r.row(), "stats": r.stats})
         return rows
 
     def latency_breakdown(self) -> Dict[str, float]:

@@ -1,33 +1,88 @@
-"""Pallas TPU kernel: set-associative LRU cache simulation over a trace.
+"""Pallas TPU kernels: cache simulation over address traces.
 
 This is the compute hot-spot of CXLRAMSim's vectorized re-think of gem5
-(DESIGN.md §2): simulating a cache over a multi-million-access trace.  The
-TPU-native design:
+(DESIGN.md §2): simulating a cache over a multi-million-access trace.  Two
+kernels live here:
 
-  * the **tag store and LRU timestamps live in VMEM scratch** — (sets, ways)
-    int32 arrays, <=1 MiB for realistic geometries, persistent across the
-    sequential TPU grid;
+  * :func:`cache_sim` — the original single-level set-associative LRU cache
+    (hit/miss trace), kept as the micro-benchmark kernel;
+  * :func:`mesi_cache_sim` — the **full two-level MESI + tier state
+    machine** of :mod:`repro.core.cache`: per-core L1 tag/state/LRU arrays,
+    a shared inclusive L2 with directory sharer bitmasks and per-line
+    backing tier, and the 12-counter stats vector — everything VMEM-resident
+    across the grid.  It is the `pallas` backend of the batched trace engine
+    (:mod:`repro.core.engine`); the `lax.scan` model in `repro.core.cache`
+    is its bitwise oracle.
+
+The TPU-native design shared by both:
+
+  * **state lives in VMEM scratch** — int32 arrays, <=1 MiB for realistic
+    geometries, persistent across the sequential TPU grid;
   * the **trace streams HBM -> VMEM in chunks** via the BlockSpec index_map,
     one grid step per chunk (double-buffered by the Pallas pipeline);
   * within a chunk the state machine is a `fori_loop` (trace order is a true
-    dependency), but each iteration's tag compare / LRU victim select is a
-    vectorized op across `ways` lanes.
+    dependency), but each iteration's tag compare / LRU victim select /
+    directory probe is a vectorized op across `ways` lanes;
+  * `mesi_cache_sim` adds a leading **batch grid dimension**: the engine
+    stacks B configurations and the kernel re-initializes its VMEM state at
+    each row's first chunk, so a whole multi-config sweep is one kernel
+    launch.
 
-Semantics match :func:`repro.kernels.ref.cache_sim` exactly (tested across
-shape sweeps in interpret mode; `interpret=False` is the TPU target).
+Sentinel padding convention
+---------------------------
+Traces need not be a multiple of the chunk size: :func:`pad_trace` appends
+entries with ``addr == SENTINEL`` (= -1; real line addresses are >= 0) and
+zeros elsewhere.  Both kernel bodies gate *every* state write and stat
+increment on ``addr >= 0``, so padded entries leave the tag stores, LRU
+clocks, MESI states and stats untouched — stats over a padded trace are
+bitwise-equal to the unpadded run, and no post-hoc stripping of stats is
+needed (per-access outputs such as `hits` are simply sliced back to the
+original length).  Padding must only be appended at the end of a trace:
+logical time advances across sentinels, matching the reference scan.
+
+Semantics match the pure-JAX references exactly (tested across geometry
+sweeps in interpret mode; `interpret=False` is the TPU target).
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.cache import (
+    NSTATS, L1_HIT, L1_MISS, L2_HIT, L2_MISS,
+    MEM_READ_DRAM, MEM_READ_CXL, MEM_WRITE_DRAM, MEM_WRITE_CXL,
+    UPGRADES, INVALIDATIONS, BACK_INVALIDATIONS, WRITEBACKS_L1,
+    I, S, E, M, SENTINEL, CacheParams, CacheState,
+)
+
 Array = jax.Array
 
 
+def pad_trace(chunk: int, addr: Array, *fields: Array) -> Tuple[Array, ...]:
+    """Pad a trace to a multiple of `chunk` with sentinel entries.
+
+    `addr` is padded with :data:`SENTINEL`; every extra field (is_write,
+    core, tier, ...) with zeros.  Works on 1-D traces and (B, N) batches
+    (padding along the last axis).  Returns the padded arrays.
+    """
+    n = addr.shape[-1]
+    pad = (-n) % chunk
+    if pad == 0:
+        return (addr, *fields)
+    widths = [(0, 0)] * (addr.ndim - 1) + [(0, pad)]
+    out = [jnp.pad(addr.astype(jnp.int32), widths, constant_values=SENTINEL)]
+    out += [jnp.pad(f.astype(jnp.int32), widths) for f in fields]
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Single-level LRU kernel (micro-benchmark path)
+# ---------------------------------------------------------------------------
 def _cache_sim_kernel(addr_ref, hits_ref, tags_ref, use_ref,
                       tag_scratch, use_scratch, *, chunk: int,
                       n_sets: int, n_ways: int, n_chunks: int):
@@ -43,14 +98,16 @@ def _cache_sim_kernel(addr_ref, hits_ref, tags_ref, use_ref,
 
     def body(i, carry):
         a = addr_ref[i]
-        s = a & (n_sets - 1)
+        valid = a >= 0                                 # sentinel padding
+        s = jnp.where(valid, a, 0) & (n_sets - 1)
         row = tag_scratch[s, :]                        # (ways,) lanes
         hit_mask = row == a
-        hit = jnp.any(hit_mask)
+        hit = jnp.any(hit_mask) & valid
         way = jnp.where(hit, jnp.argmax(hit_mask),
                         jnp.argmin(use_scratch[s, :])).astype(jnp.int32)
-        tag_scratch[s, way] = a
-        use_scratch[s, way] = base_t + i
+        tag_scratch[s, way] = jnp.where(valid, a, tag_scratch[s, way])
+        use_scratch[s, way] = jnp.where(valid, base_t + i,
+                                        use_scratch[s, way])
         hits_ref[i] = hit.astype(jnp.int32)
         return carry
 
@@ -67,11 +124,12 @@ def _cache_sim_kernel(addr_ref, hits_ref, tags_ref, use_ref,
                    static_argnames=("n_sets", "n_ways", "chunk", "interpret"))
 def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
               chunk: int = 512, interpret: bool = True):
-    """Run the cache-simulation kernel.
+    """Run the single-level cache-simulation kernel.
 
     Args:
-      addr: (N,) int32 cacheline-index trace; N must be a multiple of
-        `chunk` (callers pad with a sentinel the stats layer strips).
+      addr: (N,) int32 cacheline-index trace; any length — automatically
+        sentinel-padded to a multiple of `chunk` (see module docstring),
+        padded entries never touch tags/LRU state.
       n_sets, n_ways: cache geometry (n_sets a power of two).
       chunk: trace elements per grid step (VMEM tile of the trace).
       interpret: run the kernel body in Python (CPU validation mode).
@@ -79,9 +137,9 @@ def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
     Returns: (hits (N,) int32, tags (n_sets, n_ways) int32, use int32).
     """
     n = addr.shape[0]
-    assert n % chunk == 0, "pad trace to a multiple of `chunk`"
     assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
-    n_chunks = n // chunk
+    (addr,) = pad_trace(chunk, addr)
+    n_chunks = addr.shape[0] // chunk
 
     kernel = functools.partial(_cache_sim_kernel, chunk=chunk,
                                n_sets=n_sets, n_ways=n_ways,
@@ -96,7 +154,7 @@ def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
             pl.BlockSpec((n_sets, n_ways), lambda i: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((addr.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
             jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
         ],
@@ -106,4 +164,254 @@ def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
         ],
         interpret=interpret,
     )(addr.astype(jnp.int32))
-    return hits, tags, use
+    return hits[:n], tags, use
+
+
+# ---------------------------------------------------------------------------
+# Full two-level MESI + tier kernel (batched engine backend)
+# ---------------------------------------------------------------------------
+def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
+                 stats_ref, l1t_ref, l1u_ref, l1s_ref,
+                 l2t_ref, l2u_ref, l2s_ref, l2tier_ref, l2sh_ref,
+                 l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                 *, chunk: int, cores: int, l1_sets: int, l1_ways: int,
+                 l2_sets: int, l2_ways: int, n_chunks: int):
+    """One (batch-row, chunk) grid step of the two-level MESI state machine.
+
+    L1 state is flattened to (cores * l1_sets, l1_ways) so every row access
+    is a 2-D dynamic-slice; the per-core directory probes unroll over the
+    (static, small) `cores` dimension.  The update sequence mirrors
+    `repro.core.cache._step` operation-for-operation, so stats and final
+    state are bitwise-identical to the scan reference.
+    """
+    j = pl.program_id(1)
+
+    # fresh state at the first chunk of every batch row
+    @pl.when(j == 0)
+    def _init():
+        l1t[...] = jnp.full((cores * l1_sets, l1_ways), -1, jnp.int32)
+        l1u[...] = jnp.zeros((cores * l1_sets, l1_ways), jnp.int32)
+        l1s[...] = jnp.zeros((cores * l1_sets, l1_ways), jnp.int32)
+        l2t[...] = jnp.full((l2_sets, l2_ways), -1, jnp.int32)
+        l2u[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
+        l2s[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
+        l2tier[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
+        l2sh[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
+        stats[...] = jnp.zeros((NSTATS,), jnp.int32)
+
+    base_t = j * chunk + 1
+    core_ids = jnp.arange(cores, dtype=jnp.int32)
+
+    def body(i, carry):
+        a_raw = addr_ref[0, i]
+        w = w_ref[0, i] != 0
+        c = core_ref[0, i]
+        tr = tier_ref[0, i]
+        valid = a_raw >= 0                    # sentinel padding gate
+        vi = valid.astype(jnp.int32)
+        a = jnp.where(valid, a_raw, 0)
+        t = base_t + i
+
+        def bump(idx, amount):
+            stats[idx] = stats[idx] + amount.astype(jnp.int32) * vi
+
+        # ---------------- L1 lookup ----------------
+        set1 = a & (l1_sets - 1)
+        r1 = c * l1_sets + set1
+        row_t = l1t[r1, :]                    # (l1_ways,) lanes
+        row_s = l1s[r1, :]
+        row_u = l1u[r1, :]
+        hits = (row_t == a) & (row_s != I)
+        l1_hit = hits.any()
+        way1 = jnp.where(l1_hit, jnp.argmax(hits),
+                         jnp.argmin(row_u)).astype(jnp.int32)
+        cur_state = row_s[way1]
+        needs_upgrade = l1_hit & w & (cur_state == S)
+
+        # directory-equivalent probe: all cores' copies of this line
+        copies_s = jnp.stack([l1s[k * l1_sets + set1, :]
+                              for k in range(cores)])       # (cores, ways)
+        copies_t = jnp.stack([l1t[k * l1_sets + set1, :]
+                              for k in range(cores)])
+        copies = (copies_t == a) & (copies_s != I)
+        other = copies & (core_ids[:, None] != c)
+        n_other = other.sum()
+
+        bump(L1_HIT, l1_hit)
+        bump(L1_MISS, ~l1_hit)
+        bump(UPGRADES, needs_upgrade)
+        bump(INVALIDATIONS, jnp.where(w, n_other, 0))
+
+        # invalidate other copies on any write (upgrade or RFO fill)
+        inval = other & w & valid
+        for k in range(cores):
+            l1s[k * l1_sets + set1, :] = jnp.where(inval[k], I, copies_s[k])
+
+        # ---------------- L1 victim writeback (on miss) ----------------
+        evict_valid = (~l1_hit) & (cur_state != I)
+        evict_tag = row_t[way1]
+        evict_dirty = evict_valid & (cur_state == M)
+        eset2 = evict_tag & (l2_sets - 1)
+        erow = l2t[eset2, :]
+        ehits = erow == evict_tag
+        ehit = ehits.any()
+        eway = jnp.where(ehit, jnp.argmax(ehits),
+                         jnp.argmin(l2u[eset2, :])).astype(jnp.int32)
+        # inclusive L2: mark dirty there on dirty eviction, drop the sharer
+        l2s[eset2, eway] = jnp.where(evict_dirty & ehit & valid,
+                                     M, l2s[eset2, eway])
+        l2sh[eset2, eway] = jnp.where(
+            evict_valid & ehit & valid,
+            l2sh[eset2, eway] & ~(jnp.int32(1) << c), l2sh[eset2, eway])
+        bump(WRITEBACKS_L1, evict_dirty)
+
+        # ---------------- L2 lookup (only meaningful on L1 miss) --------
+        set2 = a & (l2_sets - 1)
+        row2 = l2t[set2, :]
+        hits2 = row2 == a
+        l2_hit_raw = hits2.any()
+        way2 = jnp.where(l2_hit_raw, jnp.argmax(hits2),
+                         jnp.argmin(l2u[set2, :])).astype(jnp.int32)
+        l2_hit = l2_hit_raw & (~l1_hit)
+        l2_miss = (~l2_hit_raw) & (~l1_hit)
+        bump(L2_HIT, l2_hit)
+        bump(L2_MISS, l2_miss)
+
+        # ---- L2 victim handling on fill: back-invalidate + writeback ----
+        v_tag = l2t[set2, way2]
+        v_state = l2s[set2, way2]
+        v_tier = l2tier[set2, way2]
+        v_valid = l2_miss & (v_state != I) & (v_tag != a)
+        vset1 = v_tag & (l1_sets - 1)
+        vc_s = jnp.stack([l1s[k * l1_sets + vset1, :]
+                          for k in range(cores)])
+        vc_t = jnp.stack([l1t[k * l1_sets + vset1, :]
+                          for k in range(cores)])
+        v_copies = (vc_t == v_tag) & (vc_s != I)
+        v_l1_dirty = (v_copies & (vc_s == M)).any()
+        for k in range(cores):
+            l1s[k * l1_sets + vset1, :] = jnp.where(
+                v_copies[k] & v_valid & valid, I, vc_s[k])
+        bump(BACK_INVALIDATIONS, jnp.where(v_valid, v_copies.sum(), 0))
+        v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
+        bump(MEM_WRITE_DRAM, v_dirty & (v_tier == 0))
+        bump(MEM_WRITE_CXL, v_dirty & (v_tier == 1))
+
+        # ---- memory read on L2 miss ----
+        bump(MEM_READ_DRAM, l2_miss & (tr == 0))
+        bump(MEM_READ_CXL, l2_miss & (tr == 1))
+
+        # ---- install / update line in L2 ----
+        fill2 = l2_miss & valid
+        touch2 = (l2_hit | l2_miss) & valid
+        l2t[set2, way2] = jnp.where(fill2, a, l2t[set2, way2])
+        l2tier[set2, way2] = jnp.where(fill2, tr, l2tier[set2, way2])
+        l2s[set2, way2] = jnp.where(fill2, E, l2s[set2, way2])
+        l2u[set2, way2] = jnp.where(touch2, t, l2u[set2, way2])
+        me = jnp.int32(1) << c
+        l2sh[set2, way2] = jnp.where(
+            fill2, me,
+            jnp.where(l2_hit & valid, l2sh[set2, way2] | me,
+                      l2sh[set2, way2]))
+
+        # ---------------- install / update line in L1 ----------------
+        sole = n_other == 0
+        fill_state = jnp.where(w, M, jnp.where(sole, E, S)).astype(jnp.int32)
+        hit_state = jnp.where(w, M, cur_state).astype(jnp.int32)
+        new_state = jnp.where(l1_hit, hit_state, fill_state)
+        l1t[r1, way1] = jnp.where(valid, a, l1t[r1, way1])
+        l1s[r1, way1] = jnp.where(valid, new_state, l1s[r1, way1])
+        l1u[r1, way1] = jnp.where(valid, t, l1u[r1, way1])
+        return carry
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+    # publish this batch row's stats + final state after its last chunk
+    @pl.when(j == n_chunks - 1)
+    def _out():
+        stats_ref[0, :] = stats[...]
+        l1t_ref[0] = l1t[...]
+        l1u_ref[0] = l1u[...]
+        l1s_ref[0] = l1s[...]
+        l2t_ref[0] = l2t[...]
+        l2u_ref[0] = l2u[...]
+        l2s_ref[0] = l2s[...]
+        l2tier_ref[0] = l2tier[...]
+        l2sh_ref[0] = l2sh[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "chunk", "interpret"))
+def mesi_cache_sim(addr: Array, is_write: Array, core: Array, tier: Array,
+                   *, params: CacheParams, chunk: int = 512,
+                   interpret: bool = True
+                   ) -> Tuple[Array, CacheState]:
+    """Two-level MESI + tier simulation of a (B, N) trace batch.
+
+    The grid is (B, n_chunks): chunks stream sequentially per batch row and
+    the VMEM-resident state re-initializes at each row's first chunk, so a
+    whole multi-configuration sweep is a single kernel launch.
+
+    VMEM budget per row: ``4 B * (3 * cores * l1_sets * l1_ways +
+    5 * l2_sets * l2_ways)`` for state plus two ``4 * chunk`` trace tiles —
+    ~0.7 MiB for the paper's Table-I host (4 cores, 64 KiB L1, 2 MiB L2).
+
+    Args:
+      addr: (B, N) int32 line addresses; `SENTINEL` (-1) marks padding
+        (appended automatically if N is not a multiple of `chunk`).
+      is_write/core/tier: (B, N) int32.
+      params: cache geometry (static).
+      chunk: trace elements per grid step.
+      interpret: interpret mode (CPU validation; TPU target is False).
+
+    Returns: (stats (B, NSTATS) int32, batched CacheState) — bitwise-equal
+    to running `repro.core.cache.simulate_trace` per row on the unpadded
+    traces.
+    """
+    if addr.ndim != 2:
+        raise ValueError("mesi_cache_sim expects a (B, N) batch")
+    b = addr.shape[0]
+    addr, is_write, core, tier = pad_trace(chunk, addr, is_write, core, tier)
+    n = addr.shape[1]
+    n_chunks = n // chunk
+    cores, s1, w1 = params.cores, params.l1_sets, params.l1_ways
+    s2, w2 = params.l2_sets, params.l2_ways
+
+    kernel = functools.partial(
+        _mesi_kernel, chunk=chunk, cores=cores, l1_sets=s1, l1_ways=w1,
+        l2_sets=s2, l2_ways=w2, n_chunks=n_chunks)
+    trace_spec = pl.BlockSpec((1, chunk), lambda b_, j: (b_, j))
+    state_specs = [
+        pl.BlockSpec((1, NSTATS), lambda b_, j: (b_, 0)),
+        pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0)),
+        pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0)),
+        pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0)),
+    ] + [pl.BlockSpec((1, s2, w2), lambda b_, j: (b_, 0, 0))] * 5
+    state_shapes = [
+        jax.ShapeDtypeStruct((b, NSTATS), jnp.int32),
+        jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32),
+        jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32),
+        jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32),
+    ] + [jax.ShapeDtypeStruct((b, s2, w2), jnp.int32)] * 5
+    scratch = [pltpu.VMEM((cores * s1, w1), jnp.int32)] * 3 \
+        + [pltpu.VMEM((s2, w2), jnp.int32)] * 5 \
+        + [pltpu.VMEM((NSTATS,), jnp.int32)]
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),
+        in_specs=[trace_spec] * 4,
+        out_specs=state_specs,
+        out_shape=state_shapes,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(addr.astype(jnp.int32), is_write.astype(jnp.int32),
+      core.astype(jnp.int32), tier.astype(jnp.int32))
+
+    stats, l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh = outs
+    shape1 = (b, cores, s1, w1)
+    state = CacheState(
+        l1_tag=l1t.reshape(shape1), l1_use=l1u.reshape(shape1),
+        l1_state=l1s.reshape(shape1), l2_tag=l2t, l2_use=l2u,
+        l2_state=l2s, l2_tier=l2tier, l2_sharers=l2sh)
+    return stats, state

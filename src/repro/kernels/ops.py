@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.cache_sim import cache_sim as _cache_sim_kernel
+from repro.kernels.cache_sim import mesi_cache_sim as _mesi_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.paged_attention import paged_attention as _paged_kernel
 from repro.kernels.stream_triad import stream_triad as _triad_kernel
@@ -27,15 +28,17 @@ def _interpret() -> bool:
 
 
 def cache_sim(addr: Array, *, n_sets: int, n_ways: int, chunk: int = 512):
-    n = addr.shape[0]
-    pad = (-n) % chunk
-    if pad:
-        # sentinel addresses that can never hit (distinct huge lines)
-        sentinel = jnp.arange(pad, dtype=jnp.int32) + jnp.int32(2**30)
-        addr = jnp.concatenate([addr.astype(jnp.int32), sentinel])
-    hits, tags, use = _cache_sim_kernel(addr, n_sets=n_sets, n_ways=n_ways,
-                                        chunk=chunk, interpret=_interpret())
-    return hits[:n], tags, use
+    # sentinel padding to a chunk multiple happens inside the kernel wrapper
+    return _cache_sim_kernel(addr.astype(jnp.int32), n_sets=n_sets,
+                             n_ways=n_ways, chunk=chunk,
+                             interpret=_interpret())
+
+
+def mesi_cache_sim(addr: Array, is_write: Array, core: Array, tier: Array,
+                   *, params, chunk: int = 512):
+    """Batched two-level MESI + tier simulation (engine `pallas` backend)."""
+    return _mesi_kernel(addr, is_write, core, tier, params=params,
+                        chunk=chunk, interpret=_interpret())
 
 
 def stream_triad(b: Array, c: Array, s) -> Array:

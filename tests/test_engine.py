@@ -1,0 +1,222 @@
+"""Batched trace engine: backend parity, sentinel padding, sweep equality.
+
+The contract under test (ISSUE acceptance): the batched engine — reference
+(vmapped scan) and `pallas` (two-level MESI kernel, interpret mode on CPU)
+backends alike — produces stats **bitwise equal** to the sequential
+per-config path, across cache geometries and trace lengths that are not
+chunk multiples.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CXLRAMSim, SimConfig
+from repro.core import cache as C
+from repro.core import engine, numa
+from repro.core.machine import CPUModel, Machine, time_batch
+from repro.core.timing import TimingConfig
+from repro.kernels import ops
+from repro.kernels.cache_sim import SENTINEL, pad_trace
+
+RNG = np.random.default_rng(7)
+
+
+def params(l1_sets, l1_ways, cores, l2_sets=16, l2_ways=4):
+    return C.CacheParams(l1_bytes=l1_sets * l1_ways * 64, l1_ways=l1_ways,
+                         l2_bytes=l2_sets * l2_ways * 64, l2_ways=l2_ways,
+                         cores=cores)
+
+
+def rand_trace(n, cores, addr_hi=256):
+    return (RNG.integers(0, addr_hi, n).astype(np.int32),
+            RNG.integers(0, 2, n).astype(np.int32),
+            RNG.integers(0, cores, n).astype(np.int32),
+            RNG.integers(0, 2, n).astype(np.int32))
+
+
+def sequential_stats(p, traces):
+    out = []
+    for addr, wr, core, tier in traces:
+        st0 = C.init_state(p)
+        st, stats = C.simulate_trace(p, st0, jnp.asarray(addr),
+                                     jnp.asarray(wr, bool),
+                                     core=jnp.asarray(core),
+                                     tier=jnp.asarray(tier))
+        out.append((np.asarray(stats), st))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pad_trace / sentinel convention
+# ---------------------------------------------------------------------------
+def test_pad_trace_appends_sentinels():
+    addr = jnp.arange(10, dtype=jnp.int32)
+    wr = jnp.ones(10, jnp.int32)
+    pa, pw = pad_trace(8, addr, wr)
+    assert pa.shape == (16,) and pw.shape == (16,)
+    assert (np.asarray(pa[:10]) == np.arange(10)).all()
+    assert (np.asarray(pa[10:]) == SENTINEL).all()
+    assert (np.asarray(pw[10:]) == 0).all()
+
+
+def test_pad_trace_noop_on_multiple_and_batched():
+    addr = jnp.zeros((2, 16), jnp.int32)
+    (pa,) = pad_trace(8, addr)
+    assert pa.shape == (2, 16)
+    pa, = pad_trace(32, addr)
+    assert pa.shape == (2, 32)
+    assert (np.asarray(pa[:, 16:]) == SENTINEL).all()
+
+
+def test_stack_traces_pads_to_chunk_multiple():
+    traces = [(np.arange(10, dtype=np.int32), np.zeros(10, np.int32)),
+              (np.arange(25, dtype=np.int32), np.ones(25, np.int32))]
+    batch = engine.stack_traces(traces, pad_to_multiple=16)
+    assert batch.addr.shape == (2, 32)
+    assert batch.total_accesses == 35
+    assert (batch.addr[0, 10:] == SENTINEL).all()
+    assert (batch.is_write[1, 25:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# backend parity across geometries (bitwise)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("l1_sets,l1_ways,cores,l2_sets,l2_ways,chunk", [
+    (4, 2, 1, 16, 4, 32),
+    (8, 2, 2, 16, 4, 64),
+    (4, 4, 2, 8, 2, 16),
+    (16, 1, 4, 32, 8, 128),
+])
+def test_pallas_mesi_matches_scan_reference(l1_sets, l1_ways, cores,
+                                            l2_sets, l2_ways, chunk):
+    p = params(l1_sets, l1_ways, cores, l2_sets, l2_ways)
+    # unequal, non-chunk-multiple lengths exercise the sentinel path
+    traces = [rand_trace(n, cores) for n in (chunk - 5, 2 * chunk + 17)]
+    batch = engine.stack_traces(traces, pad_to_multiple=chunk)
+    stats_p, st_p = ops.mesi_cache_sim(
+        jnp.asarray(batch.addr), jnp.asarray(batch.is_write),
+        jnp.asarray(batch.core), jnp.asarray(batch.tier),
+        params=p, chunk=chunk)
+    for i, (want_stats, want_st) in enumerate(sequential_stats(p, traces)):
+        np.testing.assert_array_equal(np.asarray(stats_p[i]), want_stats)
+        for f in want_st._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_p, f)[i]),
+                np.asarray(getattr(want_st, f)), err_msg=f)
+
+
+@pytest.mark.parametrize("cores,n", [(1, 100), (2, 333), (4, 200)])
+def test_reference_backend_matches_sequential(cores, n):
+    p = params(8, 2, cores)
+    traces = [rand_trace(n, cores), rand_trace(n // 2, cores)]
+    batch = engine.stack_traces(traces, pad_to_multiple=64)
+    stats_b, _ = engine.run_traces(p, batch.addr, batch.is_write,
+                                   batch.core, batch.tier)
+    for i, (want, _) in enumerate(sequential_stats(p, traces)):
+        np.testing.assert_array_equal(np.asarray(stats_b[i]), want)
+
+
+def test_extra_padding_is_inert():
+    p = params(8, 2, 1)
+    addr, wr, core, tier = rand_trace(50, 1)
+    row = lambda x, n: np.asarray(pad_trace(n, jnp.asarray(x)))[0][None]
+    stats_a, _ = engine.run_traces(
+        p, addr[None], wr[None], core[None], tier[None])
+    padded = pad_trace(128, *(jnp.asarray(x) for x in (addr, wr, core, tier)))
+    stats_b, _ = engine.run_traces(p, *(jnp.asarray(x)[None] for x in padded))
+    np.testing.assert_array_equal(np.asarray(stats_a), np.asarray(stats_b))
+
+
+# ---------------------------------------------------------------------------
+# run_sweep vs per-config sequential (bitwise stats)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_sim():
+    s = CXLRAMSim(SimConfig(
+        dram_gib=16, expander_gib=(16,),
+        cache=C.CacheParams(l1_bytes=8 * 1024, l1_ways=2,
+                            l2_bytes=16 * 1024, l2_ways=8)))
+    s.online("znuma")
+    return s
+
+
+def test_run_sweep_bitwise_equals_sequential(small_sim):
+    sim = small_sim
+    fps = (1, 2)
+    policies = (numa.ZNuma(1.0), numa.WeightedInterleave(1, 1))
+    cpus = (CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8))
+    rows = sim.sweep(fps, policies, cpus)
+    assert len(rows) == len(fps) * len(policies) * len(cpus)
+    seq = {}
+    for cpu in cpus:
+        for pol in policies:
+            for r in sim.stream_suite_sequential(fps, pol, cpu=cpu):
+                seq[(r["footprint_x_l2"], r["policy"], r["cpu"])] = r
+    assert len(seq) == len(rows)
+    for r in rows:
+        s = seq[(r["footprint_x_l2"], r["policy"], r["cpu"])]
+        assert r["stats"] == s["stats"]          # bitwise-equal counters
+        for key in ("time_ns", "bw_total_gbps", "lat_cxl_ns"):
+            assert r[key] == pytest.approx(s[key], rel=1e-9)
+
+
+def test_run_sweep_pallas_backend_matches_reference(small_sim):
+    sim = small_sim
+    ref = sim.sweep((1,), backend="reference")
+    pal = sim.sweep((1,), backend="pallas")
+    assert [r["stats"] for r in ref] == [r["stats"] for r in pal]
+
+
+def test_stream_suite_single_compile_shape(small_sim):
+    rows = small_sim.stream_suite(footprint_factors=(1, 2))
+    assert [r["footprint_x_l2"] for r in rows] == [1, 2]
+    assert all(r["l2_miss_rate"] > 0 and r["time_ns"] > 0 for r in rows)
+    assert all(r["stats"]["l1_hit"] + r["stats"]["l1_miss"] > 0
+               for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# vectorized timing fixed point
+# ---------------------------------------------------------------------------
+def test_time_batch_zero_access_guard():
+    m = Machine(params(4, 2, 1), TimingConfig(), CPUModel())
+    r = m._time({n: 0 for n in C.STAT_NAMES})
+    assert r.time_ns == 0.0
+    assert r.achieved_gbps["total"] == 0.0
+    assert r.loaded_latency_ns["dram"] == pytest.approx(
+        TimingConfig().idle_latency_ns("dram"))
+    assert r.loaded_latency_ns["cxl"] == pytest.approx(
+        TimingConfig().idle_latency_ns("cxl"))
+
+
+def test_time_batch_zero_line_tier_keeps_idle_latency():
+    # heavy DRAM traffic, zero CXL lines: the CXL latency must stay idle
+    stats = {n: 0 for n in C.STAT_NAMES}
+    stats.update(l1_hit=1000, l1_miss=4000, l2_hit=100, l2_miss=3900,
+                 mem_read_dram=3900, mem_write_dram=2000)
+    m = Machine(params(4, 2, 1), TimingConfig(), CPUModel())
+    r = m._time(stats)
+    assert r.loaded_latency_ns["cxl"] == pytest.approx(
+        TimingConfig().idle_latency_ns("cxl"))
+    assert r.loaded_latency_ns["dram"] > TimingConfig().idle_latency_ns(
+        "dram")
+    assert r.achieved_gbps["cxl"] == 0.0
+
+
+def test_time_batch_rows_independent():
+    # batching must not change any row's trajectory (per-row freeze)
+    t = TimingConfig()
+    cpus = [CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8),
+            CPUModel(kind="o3", mlp=2)]
+    rows = []
+    for i in range(3):
+        s = {n: 0 for n in C.STAT_NAMES}
+        s.update(l1_hit=100 * (i + 1), l1_miss=5000, l2_hit=40 * i,
+                 l2_miss=5000 - 40 * i,
+                 mem_read_dram=2500, mem_read_cxl=2500 - 40 * i)
+        rows.append([s[n] for n in C.STAT_NAMES])
+    batched = time_batch(t, cpus, np.asarray(rows))
+    for i, cpu in enumerate(cpus):
+        alone = time_batch(t, [cpu], np.asarray(rows[i])[None])[0]
+        assert batched[i].time_ns == alone.time_ns
+        assert batched[i].loaded_latency_ns == alone.loaded_latency_ns
