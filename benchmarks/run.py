@@ -10,6 +10,8 @@ human-readable block per benchmark.
   programming_models  — paper §IV: zNUMA vs flat vs weighted interleave
   kv_tiering          — paper §I use-case: KV-cache spill plan + paged pool
   kernels_micro       — Pallas kernel micro-bench (interpret mode on CPU)
+  topology            — multi-expander target routing: direct / interleaved
+                        / switched topologies in one device program
   roofline_summary    — reads experiments/roofline JSON (dry-run derived)
 """
 from __future__ import annotations
@@ -28,6 +30,8 @@ from repro.core import CXLRAMSim, SimConfig
 from repro.core import cache as cache_mod
 from repro.core import engine as engine_mod
 from repro.core import numa
+from repro.core import route as route_mod
+from repro.core import machine as machine_mod
 from repro.core.machine import CPUModel
 from repro.core.timing import TimingConfig, latency_bandwidth_curve
 from repro.kernels import ops
@@ -325,6 +329,76 @@ def engine() -> None:
          f"Maccess/s={warm_rate:.2f};speedup={report['speedup_warm']:.2f}x")
 
 
+def topology() -> None:
+    """Multi-expander target routing: >=3 topologies, one device program.
+
+    Sweeps {1x direct, 2x interleaved direct, 4x behind one switch} x
+    footprints x policies through the batched engine — a single vmapped
+    cache-sim dispatch covers every cell (stats padded to the widest
+    target count) — and reports per-target achieved GB/s + loaded latency.
+    Verifies the direct1 rows are bitwise-equal to the binary-tier path
+    and writes `BENCH_topology.json` at the repo root.
+    """
+    print("\n== topology (multi-expander target routing) ==")
+    cache = cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                                  l2_bytes=64 * 1024, l2_ways=8)
+    timing = TimingConfig()
+    fps = (2, 4, 8)
+    policies = (numa.ZNuma(1.0), numa.WeightedInterleave(1, 1))
+    cpus = (CPUModel(kind="o3", mlp=8),)
+    topos = (route_mod.direct(1), route_mod.direct(2), route_mod.switched(4))
+
+    spec = engine_mod.SweepSpec(footprint_factors=fps, policies=policies,
+                                cpus=cpus, topologies=topos)
+    run = lambda: engine_mod.run_sweep(spec, cache, timing)
+    t0 = time.time()
+    rows = run()
+    t_cold = time.time() - t0
+    t0 = time.time()
+    rows = run()
+    t_warm = time.time() - t0
+
+    # parity: direct1 rows vs the binary-tier path (no topology axis)
+    binary = engine_mod.run_sweep(
+        engine_mod.SweepSpec(footprint_factors=fps, policies=policies,
+                             cpus=cpus), cache, timing)
+    d1 = [r for r in rows if r["topology"] == "direct1"]
+    parity = all(a["stats"] == b["stats"] for a, b in zip(d1, binary))
+    assert parity, "direct1 topology diverged from the binary-tier path"
+
+    print(f"{'topology':>10} {'kxL2':>5} {'policy':>18} {'bw_cxl':>7} "
+          f"{'lat_cxl':>8}  per-target GB/s")
+    for r in rows:
+        per = [f"{r[k]:.2f}" for k in machine_mod.per_target_bw_columns(r)]
+        print(f"{r['topology']:>10} {r['footprint_x_l2']:>5} "
+              f"{r['policy']:>18} {r['bw_cxl_gbps']:>7.2f} "
+              f"{r['lat_cxl_ns']:>8.1f}  [{', '.join(per)}]")
+
+    n_acc = sum(r["stats"]["l1_hit"] + r["stats"]["l1_miss"] for r in rows)
+    report = {
+        "suite": {"topologies": [t.name for t in topos],
+                  "footprint_factors": list(fps),
+                  "policies": [numa.describe(p) for p in policies],
+                  "cpus": [c.kind for c in cpus],
+                  "rows": len(rows), "accesses": n_acc,
+                  "one_device_program": True},
+        "cold_s": round(t_cold, 4),
+        "warm_s": round(t_warm, 4),
+        "direct1_bitwise_equals_binary_tier": parity,
+        "rows": [{k: v for k, v in r.items() if k != "stats"}
+                 for r in rows],
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_topology.json"
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"{len(topos)} topologies x {len(fps)} footprints x "
+          f"{len(policies)} policies in one program: cold {t_cold:.2f}s "
+          f"warm {t_warm:.2f}s; direct1 bitwise==binary: {parity} "
+          f"-> {out.name}")
+    emit("topology_sweep", t_warm * 1e6 / len(rows),
+         f"topos={len(topos)};parity={parity}")
+
+
 def roofline_summary() -> None:
     """Digest of the dry-run-derived roofline (experiments/roofline)."""
     print("\n== roofline_summary (from multi-pod dry-run) ==")
@@ -361,6 +435,7 @@ BENCHES: Dict[str, Callable[[], None]] = {
     "kv_tiering": kv_tiering,
     "kernels_micro": kernels_micro,
     "engine": engine,
+    "topology": topology,
     "roofline_summary": roofline_summary,
 }
 

@@ -63,3 +63,26 @@ for r in rows:
     print(f"{r['footprint_x_l2']:>5} {r['policy']:>18} {r['cpu']:>8} "
           f"{r['bw_total_gbps']:>8.2f} {r['lat_cxl_ns']:>10.1f} "
           f"{r['l2_miss_rate']:>9.3f}")
+
+# --- topology exploration: how many cards, and where on the bus? ------------
+# The same calibrated card, deployed three ways: one direct-attach, two
+# interleaved under one host bridge, four pooled behind a CXL switch.  Each
+# topology's HDM decoders are programmed + committed by the driver-equivalent
+# enumeration pass and every access routes through them to a concrete
+# endpoint; all three topologies still run as ONE vmapped device program.
+from repro.core import route
+
+topo_spec = engine.SweepSpec(
+    footprint_factors=(4,),
+    policies=(numa.ZNuma(1.0),),
+    cpus=(CPUModel(kind="o3", mlp=8),),
+    topologies=(route.direct(1), route.direct(2), route.switched(4)))
+from repro.core.machine import per_target_bw_columns
+
+topo_rows = engine.run_sweep(topo_spec, cache, cfg)
+print(f"\nsame card, three topologies (per-target achieved GB/s):")
+print(f"{'topology':>10} {'bw_cxl':>7} {'lat_cxl_ns':>10}  per-target")
+for r in topo_rows:
+    per = [f"{r[k]:.2f}" for k in per_target_bw_columns(r)]
+    print(f"{r['topology']:>10} {r['bw_cxl_gbps']:>7.2f} "
+          f"{r['lat_cxl_ns']:>10.1f}  [{', '.join(per)}]")

@@ -1,7 +1,12 @@
 """CXLRAMSim core: the paper's contribution, JAX-native.
 
 Layers (bottom-up): spec -> packet -> registers -> hdm -> topology ->
-timing -> numa -> cache -> stream -> machine -> engine -> simulator.
+timing -> numa -> cache -> stream -> machine -> route -> engine ->
+simulator.
 """
 from repro.core.engine import SweepSpec, run_sweep, run_traces  # noqa: F401
+from repro.core.route import (  # noqa: F401
+    RouteMap, TopologySpec, build_route, build_route_from_system, direct,
+    switched,
+)
 from repro.core.simulator import CXLRAMSim, SimConfig  # noqa: F401

@@ -9,9 +9,12 @@ array op.  The Pallas kernel in :mod:`repro.kernels.cache_sim` runs the same
 state machine with the tag store resident in VMEM; this module is its oracle
 (`ref`).
 
-The simulator tracks, per access, which tier (DRAM=0 / CXL=1) backs the
-line — supplied by the page-placement policy (:mod:`repro.core.numa`) — so
-misses/writebacks are priced per tier by :mod:`repro.core.machine` and the
+The simulator tracks, per access, which memory *target* backs the line —
+0 = local DRAM, 1..n_targets-1 = CXL expander endpoints, as routed by the
+page-placement policy (:mod:`repro.core.numa`) through the committed HDM
+interleave programs (:mod:`repro.core.route`); the binary DRAM/CXL machine
+is the `n_targets == 2` special case.  Misses/writebacks are priced per
+target by :mod:`repro.core.machine` and the
 **cache pollution** effect of CXL traffic (CXL-destined lines evicting
 DRAM-destined ones) falls out of the LRU state, exactly the effect the paper
 highlights.
@@ -40,28 +43,73 @@ I, S, E, M = 0, 1, 2, 3
 # the kernels import it from here.
 SENTINEL = -1
 
-# ---- stats indices ---------------------------------------------------------
+# ---- stats layout ----------------------------------------------------------
+# The layout is parameterized by the number of memory *targets* the routed
+# lines can hit (target 0 = local DRAM, targets 1..T-1 = CXL expanders, see
+# repro.core.route): 4 base counters, then T per-target memory reads, then T
+# per-target memory writes, then 4 coherence counters.  For the binary-tier
+# case (T == 2: DRAM + one CXL pool) this is exactly the historical 12-slot
+# layout, so the legacy module-level constants stay valid.
 L1_HIT, L1_MISS, L2_HIT, L2_MISS = 0, 1, 2, 3
+MEM_READ = 4                       # base of the per-target read counters
+
+
+def mem_write_base(n_targets: int = 2) -> int:
+    """First index of the per-target memory-write counters."""
+    return MEM_READ + n_targets
+
+
+def coherence_base(n_targets: int = 2) -> int:
+    """Index of `upgrades` (first of the 4 coherence counters)."""
+    return MEM_READ + 2 * n_targets
+
+
+def nstats(n_targets: int = 2) -> int:
+    return 8 + 2 * n_targets
+
+
+def stat_names(n_targets: int = 2) -> Tuple[str, ...]:
+    """Counter names for a `n_targets`-wide stats vector.
+
+    T == 2 keeps the historical dram/cxl names; T > 2 names the CXL targets
+    `cxl0..cxl{T-2}` (target ids 1..T-1).
+    """
+    if n_targets == 2:
+        mem = ("mem_read_dram", "mem_read_cxl",
+               "mem_write_dram", "mem_write_cxl")
+    else:
+        cxl = [f"cxl{k}" for k in range(n_targets - 1)]
+        mem = tuple([f"mem_read_dram"] + [f"mem_read_{c}" for c in cxl]
+                    + ["mem_write_dram"] + [f"mem_write_{c}" for c in cxl])
+    return ("l1_hit", "l1_miss", "l2_hit", "l2_miss", *mem,
+            "upgrades", "invalidations", "back_invalidations",
+            "writebacks_l1")
+
+
+# Legacy binary-tier (T == 2) indices — single source of truth for every
+# consumer of the 12-slot layout (machine, kernels, tests).
 MEM_READ_DRAM, MEM_READ_CXL = 4, 5
 MEM_WRITE_DRAM, MEM_WRITE_CXL = 6, 7
 UPGRADES, INVALIDATIONS, BACK_INVALIDATIONS, WRITEBACKS_L1 = 8, 9, 10, 11
-NSTATS = 12
-STAT_NAMES = (
-    "l1_hit", "l1_miss", "l2_hit", "l2_miss",
-    "mem_read_dram", "mem_read_cxl", "mem_write_dram", "mem_write_cxl",
-    "upgrades", "invalidations", "back_invalidations", "writebacks_l1",
-)
+NSTATS = nstats(2)
+STAT_NAMES = stat_names(2)
 
 
 @dataclasses.dataclass(frozen=True)
 class CacheParams:
-    """Geometry: sizes in bytes; sets derived (power of two enforced)."""
+    """Geometry: sizes in bytes; sets derived (power of two enforced).
+
+    `n_targets` sizes the stats vector (see the stats-layout block above):
+    the `tier` trace field carries target ids in [0, n_targets).  The
+    default 2 is the binary DRAM/CXL machine.
+    """
     l1_bytes: int = 64 * 1024
     l1_ways: int = 8
     l2_bytes: int = 2 * 1024 * 1024
     l2_ways: int = 16
     line_bytes: int = 64
     cores: int = 1
+    n_targets: int = 2
 
     @property
     def l1_sets(self) -> int:
@@ -127,6 +175,9 @@ def _step(p: CacheParams, carry, x, valid=None):
     addr, is_write, core, tier = x
     addr = addr.astype(jnp.int32)
     core = core.astype(jnp.int32)
+    wbase = mem_write_base(p.n_targets)
+    upg, inval, binval, wb1 = (coherence_base(p.n_targets) + k
+                               for k in range(4))
     if valid is None:
         gate = lambda cond: cond
         put = lambda old, new: new
@@ -157,8 +208,8 @@ def _step(p: CacheParams, carry, x, valid=None):
 
     stats = inc(stats, L1_HIT, l1_hit.astype(jnp.int32))
     stats = inc(stats, L1_MISS, (~l1_hit).astype(jnp.int32))
-    stats = inc(stats, UPGRADES, (needs_upgrade).astype(jnp.int32))
-    stats = inc(stats, INVALIDATIONS,
+    stats = inc(stats, upg, (needs_upgrade).astype(jnp.int32))
+    stats = inc(stats, inval,
                 jnp.where(is_write, n_other, 0).astype(jnp.int32))
 
     # invalidate other copies on any write (upgrade or RFO fill)
@@ -181,7 +232,7 @@ def _step(p: CacheParams, carry, x, valid=None):
             jnp.where(gate(evict_valid & ehit),
                       st.l2_sharers[eset2, eway2] & ~(1 << core),
                       st.l2_sharers[eset2, eway2])))
-    stats = inc(stats, WRITEBACKS_L1, evict_dirty.astype(jnp.int32))
+    stats = inc(stats, wb1, evict_dirty.astype(jnp.int32))
 
     # ---------------- L2 lookup (only meaningful on L1 miss) --------------
     set2, l2_hit_raw, way2 = _l2_lookup(st, addr, p)
@@ -202,13 +253,13 @@ def _step(p: CacheParams, carry, x, valid=None):
     v_l1_dirty = (v_copies & (st.l1_state[:, vset1] == M)).any()
     st = st._replace(l1_state=st.l1_state.at[:, vset1].set(
         jnp.where(v_copies & gate(v_valid), I, st.l1_state[:, vset1])))
-    stats = inc(stats, BACK_INVALIDATIONS,
+    stats = inc(stats, binval,
                 jnp.where(v_valid, v_copies.sum(), 0).astype(jnp.int32))
     v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
-    stats = inc(stats, MEM_WRITE_DRAM + v_tier, v_dirty.astype(jnp.int32))
+    stats = inc(stats, wbase + v_tier, v_dirty.astype(jnp.int32))
 
     # ---- memory read on L2 miss ----
-    stats = inc(stats, MEM_READ_DRAM + tier, l2_miss.astype(jnp.int32))
+    stats = inc(stats, MEM_READ + tier, l2_miss.astype(jnp.int32))
 
     # ---- install / update line in L2 ----
     fill2 = gate(l2_miss)
@@ -389,20 +440,19 @@ def _packed_step(p: CacheParams, carry, x):
     l1p = l1p.at[core, set1, way1].set(
         jnp.where(valid, jnp.stack([addr, t, new_state]), old1))
 
-    # ---- stats: one vector add, rows ordered as STAT_NAMES ----
+    # ---- stats: one vector add, rows ordered as stat_names(n_targets) ----
     z = jnp.int32(0)
-    incs = jnp.stack([
-        l1_hit.astype(jnp.int32), (~l1_hit).astype(jnp.int32),
-        l2_hit.astype(jnp.int32), l2_miss.astype(jnp.int32),
-        (l2_miss & (tier == 0)).astype(jnp.int32),
-        (l2_miss & (tier == 1)).astype(jnp.int32),
-        (v_dirty & (v_tier == 0)).astype(jnp.int32),
-        (v_dirty & (v_tier == 1)).astype(jnp.int32),
-        needs_upgrade.astype(jnp.int32),
-        jnp.where(is_write, n_other, z).astype(jnp.int32),
-        jnp.where(v_valid, v_copies.sum(), z).astype(jnp.int32),
-        evict_dirty.astype(jnp.int32),
-    ])
+    incs = jnp.stack(
+        [l1_hit.astype(jnp.int32), (~l1_hit).astype(jnp.int32),
+         l2_hit.astype(jnp.int32), l2_miss.astype(jnp.int32)]
+        + [(l2_miss & (tier == k)).astype(jnp.int32)
+           for k in range(p.n_targets)]
+        + [(v_dirty & (v_tier == k)).astype(jnp.int32)
+           for k in range(p.n_targets)]
+        + [needs_upgrade.astype(jnp.int32),
+           jnp.where(is_write, n_other, z).astype(jnp.int32),
+           jnp.where(v_valid, v_copies.sum(), z).astype(jnp.int32),
+           evict_dirty.astype(jnp.int32)])
     stats = stats + incs * vi
     return (l1p, l2p, stats, t + 1), None
 
@@ -419,22 +469,26 @@ def simulate_trace(p: CacheParams, state: CacheState,
       addr:     (N,) int32 cacheline indices (window-relative).
       is_write: (N,) bool.
       core:     (N,) int32 issuing core (default 0).
-      tier:     (N,) int32 backing tier per access (0=DRAM, 1=CXL; default 0).
+      tier:     (N,) int32 backing target per access (0=DRAM, 1..=CXL
+                targets; default 0).
 
-    Returns: (final_state, stats[NSTATS] int32) — see STAT_NAMES.
+    Returns: (final_state, stats[nstats(p.n_targets)] int32) — see
+    `stat_names(p.n_targets)`.
     """
     n = addr.shape[0]
     core = jnp.zeros(n, jnp.int32) if core is None else core.astype(jnp.int32)
     tier = jnp.zeros(n, jnp.int32) if tier is None else tier.astype(jnp.int32)
     xs = (addr.astype(jnp.int32), is_write.astype(bool), core, tier)
-    stats0 = jnp.zeros((NSTATS,), jnp.int32)
+    stats0 = jnp.zeros((nstats(p.n_targets),), jnp.int32)
     (st, stats, _), _ = jax.lax.scan(
         functools.partial(_step, p), (state, stats0, jnp.int32(1)), xs)
     return st, stats
 
 
 def stats_dict(stats: Array) -> Dict[str, int]:
-    return {n: int(v) for n, v in zip(STAT_NAMES, stats)}
+    """Counter dict; the target count is inferred from the vector width."""
+    t = (len(stats) - 8) // 2
+    return {n: int(v) for n, v in zip(stat_names(t), stats)}
 
 
 def miss_rates(stats: Array) -> Dict[str, float]:

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import cache as cache_mod
 from repro.core import numa as numa_mod
+from repro.core import route as route_mod
 from repro.core import stream as stream_mod
 from repro.core.machine import CPUModel, RunResult, time_batch
 from repro.core.timing import TimingConfig
@@ -62,18 +63,34 @@ class SweepSpec:
 
     `footprint_factors` are multiples of the machine's L2 size (the paper
     runs STREAM at {2,4,6,8} x L2).  The cache model runs once per
-    (footprint, policy) cell; `cpus` only vary the analytic timing layer.
+    (topology, footprint, policy) cell; `cpus` only vary the analytic
+    timing layer.
+
+    `topologies` is the scenario-diversity axis: each
+    :class:`~repro.core.route.TopologySpec` is enumerated (committed HDM
+    decoders) and its N-target route map drives per-access routing — e.g.
+    one direct-attach card, two interleaved cards, four endpoints behind a
+    switch, all in the same vmapped device program (stats padded to the
+    widest target count).  Empty `topologies` keeps the legacy binary
+    DRAM/CXL tier path, which is bitwise-identical to a single
+    direct-attach expander (test-enforced).
     """
     footprint_factors: Tuple[int, ...] = (2, 4, 6, 8)
     policies: Tuple[numa_mod.Policy, ...] = (numa_mod.ZNuma(1.0),)
     cpus: Tuple[CPUModel, ...] = (CPUModel(kind="o3"),)
     kernel: str = "triad"
     backend: str = "reference"
+    topologies: Tuple[route_mod.TopologySpec, ...] = ()
 
     @property
     def sim_cells(self) -> List[Tuple[int, numa_mod.Policy]]:
         return [(k, pol) for k in self.footprint_factors
                 for pol in self.policies]
+
+    @property
+    def topology_axis(self) -> Tuple[Optional[route_mod.TopologySpec], ...]:
+        """The topology loop: `(None,)` = legacy binary-tier path."""
+        return self.topologies if self.topologies else (None,)
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +174,7 @@ def _run_batch_reference(p: cache_mod.CacheParams, addr: Array,
 
     def one(a, w, c, tr, v):
         l1p, l2p = cache_mod.pack_state(cache_mod.init_state(p))
-        stats0 = jnp.zeros((cache_mod.NSTATS,), jnp.int32)
+        stats0 = jnp.zeros((cache_mod.nstats(p.n_targets),), jnp.int32)
         (l1p, l2p, stats, _), _ = jax.lax.scan(
             functools.partial(cache_mod._packed_step, p),
             (l1p, l2p, stats0, jnp.int32(1)), (a, w, c, tr, v), unroll=2)
@@ -181,7 +198,7 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
       backend: 'reference' (vmapped scan) or 'pallas' (MESI kernel).
       chunk: trace elements per Pallas grid step.
 
-    Returns: (stats (B, NSTATS) int32, batched CacheState).
+    Returns: (stats (B, nstats(p.n_targets)) int32, batched CacheState).
     """
     addr = jnp.asarray(addr, jnp.int32)
     if addr.ndim != 2:
@@ -204,37 +221,77 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
 # The §IV sweep
 # ---------------------------------------------------------------------------
 def build_stream_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
-                       chunk: int = 512) -> TraceBatch:
-    """Materialize the (footprint x policy) STREAM trace batch."""
+                       chunk: int = 512,
+                       routes: Optional[Sequence[
+                           Optional[route_mod.RouteMap]]] = None
+                       ) -> TraceBatch:
+    """Materialize the (topology x footprint x policy) STREAM trace batch.
+
+    `routes` holds one route map per topology-axis entry (`None` = binary
+    tier path); the `tier` field of the result then carries *target ids*.
+    """
+    if routes is None:
+        routes = [None] * len(spec.topology_axis)
+    # the trace itself depends only on the footprint; routes/policies only
+    # relabel each access's target — generate it once per footprint
+    cell_traces = {}
+    for k, _ in spec.sim_cells:
+        if k not in cell_traces:
+            layout = stream_mod.layout_for_footprint(k * cache.l2_bytes)
+            addr, is_write = stream_mod.stream_trace(spec.kernel, layout)
+            cell_traces[k] = (layout, np.asarray(addr), np.asarray(is_write))
     traces = []
-    for k, pol in spec.sim_cells:
-        layout = stream_mod.layout_for_footprint(k * cache.l2_bytes)
-        addr, is_write = stream_mod.stream_trace(spec.kernel, layout)
-        tier = numa_mod.tier_of_lines(pol, addr, layout.n_pages)
-        traces.append((np.asarray(addr), np.asarray(is_write), None,
-                       np.asarray(tier)))
+    for route in routes:
+        for k, pol in spec.sim_cells:
+            layout, addr, is_write = cell_traces[k]
+            if route is None:
+                tier = numa_mod.tier_of_lines(pol, addr, layout.n_pages)
+            else:
+                tier = route.target_of_lines(pol, addr, layout.n_pages)
+            traces.append((addr, is_write, None, np.asarray(tier)))
     return stack_traces(traces, pad_to_multiple=chunk)
+
+
+def _narrow_stats(stats: np.ndarray, t_max: int, t_route: int) -> np.ndarray:
+    """Drop the (all-zero) per-target columns a narrower route never hit.
+
+    The batched program sizes every row's stats for the widest topology
+    (`t_max` targets); a route with `t_route < t_max` targets only ever
+    routed ids `< t_route`, so the dropped read/write columns are zero.
+    """
+    if t_route == t_max:
+        return stats
+    idx = (list(range(4)) + list(range(4, 4 + t_route))
+           + list(range(4 + t_max, 4 + t_max + t_route))
+           + list(range(4 + 2 * t_max, 8 + 2 * t_max)))
+    return stats[:, idx]
 
 
 def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
               timing: TimingConfig, *, chunk: int = 512) -> List[Dict]:
     """Run the whole characterization suite as one batched device program.
 
-    Returns one row dict per (footprint, policy, cpu) — the same schema as
-    `CXLRAMSim.stream_suite` rows, plus the raw `stats` counters.  Stats are
-    bitwise-equal to running each configuration through the sequential
-    per-config path.
+    Returns one row dict per (topology, footprint, policy, cpu) — the same
+    schema as `CXLRAMSim.stream_suite` rows, plus the raw `stats` counters
+    (and a `topology` label when the spec sweeps topologies; multi-target
+    rows carry per-target `bw_cxl{k}_gbps` / `lat_cxl{k}_ns` columns).
+    Stats are bitwise-equal to running each configuration through the
+    sequential per-config path.
     """
     results = sweep_results(spec, cache, timing, chunk=chunk)
     rows: List[Dict] = []
     i = 0
-    for k, pol in spec.sim_cells:
-        for _cpu in spec.cpus:
-            r = results[i]
-            rows.append({"footprint_x_l2": k, "kernel": spec.kernel,
-                         "policy": numa_mod.describe(pol), "cpu": r.cpu,
-                         **r.row(), "stats": r.stats})
-            i += 1
+    for topo in spec.topology_axis:
+        for k, pol in spec.sim_cells:
+            for _cpu in spec.cpus:
+                r = results[i]
+                row = {"footprint_x_l2": k, "kernel": spec.kernel,
+                       "policy": numa_mod.describe(pol), "cpu": r.cpu,
+                       **r.row(), "stats": r.stats}
+                if topo is not None:
+                    row["topology"] = topo.name
+                rows.append(row)
+                i += 1
     return rows
 
 
@@ -243,18 +300,33 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
                   ) -> List[RunResult]:
     """`run_sweep` returning full RunResults (row order identical).
 
-    One device call simulates every (footprint, policy) cell; each cell's
-    stats are then broadcast across the CPU-model axis (CPU models never
-    touch cache state) and the Picard timing fixed point closes vectorized
-    over all rows.
+    One device call simulates every (topology, footprint, policy) cell —
+    topologies with different target counts share the program by padding
+    the stats width to the widest route (unused per-target counters stay
+    zero and are dropped again before timing).  Each cell's stats are then
+    broadcast across the CPU-model axis (CPU models never touch cache
+    state) and the Picard timing fixed point closes vectorized per
+    topology group, with each group's own route (switch coupling included).
     """
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}")
-    batch = build_stream_batch(spec, cache, chunk=chunk)
-    stats, _ = run_traces(cache, batch.addr, batch.is_write,
+    routes = [None if tp is None else route_mod.build_route(tp, timing)
+              for tp in spec.topology_axis]
+    t_max = max(2 if r is None else r.n_targets for r in routes)
+    p = dataclasses.replace(cache, n_targets=t_max)
+    batch = build_stream_batch(spec, cache, chunk=chunk, routes=routes)
+    stats, _ = run_traces(p, batch.addr, batch.is_write,
                           core=None, tier=batch.tier,
                           backend=spec.backend, chunk=chunk)
     stats = np.asarray(jax.block_until_ready(stats), np.int64)
-    rows_stats = np.repeat(stats, len(spec.cpus), axis=0)
-    rows_cpus = list(spec.cpus) * len(spec.sim_cells)
-    return time_batch(timing, rows_cpus, rows_stats)
+    n_cells = len(spec.sim_cells)
+    results: List[RunResult] = []
+    for ti, route in enumerate(routes):
+        block = stats[ti * n_cells:(ti + 1) * n_cells]
+        t_route = 2 if route is None else route.n_targets
+        block = _narrow_stats(block, t_max, t_route)
+        rows_stats = np.repeat(block, len(spec.cpus), axis=0)
+        rows_cpus = list(spec.cpus) * n_cells
+        results.extend(time_batch(timing, rows_cpus, rows_stats,
+                                  route=route))
+    return results

@@ -18,7 +18,7 @@ iterations converge (monotone curve).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -26,7 +26,11 @@ import numpy as np
 from repro.core import cache as cache_sim
 from repro.core import numa as numa_mod
 from repro.core.spec import CACHELINE_BYTES
+from repro.core.switch import shared_usp_latency_ns
 from repro.core.timing import TimingConfig
+
+if TYPE_CHECKING:  # import cycle: route builds on timing, machine on route
+    from repro.core.route import RouteMap
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,12 +52,18 @@ class RunResult:
     stats: Dict[str, int]
     miss_rates: Dict[str, float]
     time_ns: float
-    achieved_gbps: Dict[str, float]      # per tier + total
+    achieved_gbps: Dict[str, float]      # per target + 'cxl' aggregate+total
     loaded_latency_ns: Dict[str, float]
     cpu: str
 
+    def per_target_keys(self) -> List[str]:
+        """Ordered per-target CXL labels ('cxl0', 'cxl1', ...) if routed."""
+        per = [k for k in self.achieved_gbps
+               if k.startswith("cxl") and k != "cxl"]
+        return sorted(per, key=lambda s: (len(s), s))
+
     def row(self) -> Dict[str, float]:
-        return {
+        out = {
             "time_ns": self.time_ns,
             "bw_total_gbps": self.achieved_gbps["total"],
             "bw_dram_gbps": self.achieved_gbps["dram"],
@@ -62,6 +72,11 @@ class RunResult:
             "lat_dram_ns": self.loaded_latency_ns["dram"],
             "lat_cxl_ns": self.loaded_latency_ns["cxl"],
         }
+        # per-target columns (multi-expander routes: cxl0, cxl1, ...)
+        for k in self.per_target_keys():
+            out[f"bw_{k}_gbps"] = self.achieved_gbps[k]
+            out[f"lat_{k}_ns"] = self.loaded_latency_ns[k]
+        return out
 
 
 class Machine:
@@ -83,57 +98,104 @@ class Machine:
         return cache_sim.stats_dict(stats), cache_sim.miss_rates(stats)
 
     # -- timing fixed point -------------------------------------------------
-    def _time(self, stats: Dict[str, int]) -> RunResult:
-        vec = np.asarray([[stats[n] for n in cache_sim.STAT_NAMES]], np.int64)
-        return time_batch(self.timing, [self.cpu], vec)[0]
+    def _time(self, stats: Dict[str, int],
+              route: "Optional[RouteMap]" = None) -> RunResult:
+        t = 2 if route is None else route.n_targets
+        vec = np.asarray([[stats[n] for n in cache_sim.stat_names(t)]],
+                         np.int64)
+        return time_batch(self.timing, [self.cpu], vec, route=route)[0]
 
     def run_trace(self, addr, is_write, policy: numa_mod.Policy,
-                  n_pages: int, core=None, backend: str = "reference"
-                  ) -> RunResult:
-        """One trace through the batched engine (B=1) + timing fixed point."""
+                  n_pages: int, core=None, backend: str = "reference",
+                  route: "Optional[RouteMap]" = None) -> RunResult:
+        """One trace through the batched engine (B=1) + timing fixed point.
+
+        `route` switches from the binary DRAM/CXL tier map to N-target
+        routing through the route map's committed HDM programs.
+        """
         from repro.core import engine  # deferred: engine builds on machine
         addr = jnp.asarray(addr, jnp.int32)
-        tier = numa_mod.tier_of_lines(policy, addr, n_pages)
+        if route is None:
+            tier = numa_mod.tier_of_lines(policy, addr, n_pages)
+            p = self.cache_params
+        else:
+            tier = route.target_of_lines(policy, addr, n_pages)
+            p = dataclasses.replace(self.cache_params,
+                                    n_targets=route.n_targets)
         stats, _ = engine.run_traces(
-            self.cache_params, addr[None], jnp.asarray(is_write)[None],
+            p, addr[None], jnp.asarray(is_write)[None],
             core=None if core is None else jnp.asarray(core)[None],
             tier=tier[None], backend=backend)
-        return self._time(cache_sim.stats_dict(stats[0]))
+        return self._time(cache_sim.stats_dict(stats[0]), route=route)
+
+
+def per_target_bw_columns(row: Dict) -> List[str]:
+    """Ordered per-target bandwidth columns (`bw_cxl{k}_gbps`) of a sweep
+    row dict — the reporting-side companion of `RunResult.per_target_keys`.
+    """
+    per = [k for k in row if k.startswith("bw_cxl") and k != "bw_cxl_gbps"]
+    return sorted(per, key=lambda s: (len(s), s))
 
 
 # ---------------------------------------------------------------------------
 # Vectorized timing fixed point (used by the batched trace engine)
 # ---------------------------------------------------------------------------
-_TIERS = ("dram", "cxl")
-
-
 def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
-               stats: np.ndarray) -> List[RunResult]:
+               stats: np.ndarray,
+               route: "Optional[RouteMap]" = None) -> List[RunResult]:
     """Close the Picard timing fixed point for a whole batch at once.
 
     The loaded-latency curve is monotone, so a handful of Picard iterations
     converge; here every iteration updates all `B` configurations with
     vectorized numpy instead of a Python loop per configuration.  Elements
-    freeze (both `t` and the per-tier latencies) the iteration they converge,
-    so each element's trajectory is independent of what else shares the batch.
+    freeze (both `t` and the per-target latencies) the iteration they
+    converge, so each element's trajectory is independent of what else
+    shares the batch.
 
-    Guards (satellite of the batched-engine PR):
-      * zero memory accesses => `time_ns == 0.0` and idle per-tier latencies,
+    Targets: without `route`, the classic two-target machine — target 0 is
+    local DRAM (`timing.dram`), target 1 the CXL pool (`timing.cxl`).  With
+    a :class:`~repro.core.route.RouteMap`, one target per routed endpoint
+    with its *effective* (possibly switch-derived) timing; targets sharing
+    an upstream switch port (`Target.group`) are coupled: their loaded
+    latency is the shared-USP queue evaluated at the *aggregate* group
+    utilization, and the group's bandwidth floor is the stricter of
+    aggregate bytes over the USP payload and the busiest member's
+    own-device ceiling — head-of-line coupling that makes switched pools
+    slower than per-device curves suggest.
+
+    Guards:
+      * zero memory accesses => `time_ns == 0.0` and idle latencies,
         rather than the issue-time floor leaking into the result;
-      * a tier with zero lines keeps its *idle* latency untouched in
-        `RunResult.loaded_latency_ns` — the queueing curve is never evaluated
-        for traffic that does not exist.
+      * a target with zero lines keeps its *idle* latency untouched in
+        `RunResult.loaded_latency_ns` — the queueing curve is never
+        evaluated for traffic that does not exist.
 
     Args:
-      timing: the per-tier timing model.
+      timing: the per-tier timing model (DRAM path; CXL path when no route).
       cpus:   one CPUModel per batch row.
-      stats:  (B, NSTATS) int counter matrix, rows ordered as STAT_NAMES.
+      stats:  (B, nstats(T)) int counter matrix, rows ordered as
+              `cache.stat_names(T)` with T the number of targets.
+      route:  optional route map supplying per-target timings + groups.
 
     Returns one RunResult per row.
     """
     stats = np.asarray(stats, np.int64)
-    if stats.ndim != 2 or stats.shape[1] != cache_sim.NSTATS:
-        raise ValueError(f"stats must be (B, {cache_sim.NSTATS})")
+    if route is None:
+        kinds = ["dram", "cxl"]
+        timings = [timing.dram, timing.cxl]
+        groups = [-1, -1]
+        group_payload = [0.0, 0.0]
+        device_payload = [0.0, 0.0]
+    else:
+        kinds = [tg.kind for tg in route.targets]
+        timings = [tg.timing for tg in route.targets]
+        groups = [tg.group for tg in route.targets]
+        group_payload = [tg.group_payload_gbps for tg in route.targets]
+        device_payload = [tg.device_payload_gbps for tg in route.targets]
+    n_t = len(timings)
+    if stats.ndim != 2 or stats.shape[1] != cache_sim.nstats(n_t):
+        raise ValueError(f"stats must be (B, {cache_sim.nstats(n_t)}) "
+                         f"for {n_t} targets, got {stats.shape}")
     b = stats.shape[0]
     if len(cpus) != b:
         raise ValueError("need one CPUModel per stats row")
@@ -144,32 +206,65 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
     mlp = np.asarray([float(c.effective_mlp) for c in cpus])
 
     n_acc = stats[:, cache_sim.L1_HIT] + stats[:, cache_sim.L1_MISS]
-    reads = {"dram": stats[:, cache_sim.MEM_READ_DRAM].astype(np.float64),
-             "cxl": stats[:, cache_sim.MEM_READ_CXL].astype(np.float64)}
-    writes = {"dram": stats[:, cache_sim.MEM_WRITE_DRAM].astype(np.float64),
-              "cxl": stats[:, cache_sim.MEM_WRITE_CXL].astype(np.float64)}
-    lines = {k: reads[k] + writes[k] for k in _TIERS}
-    bytes_ = {k: v * CACHELINE_BYTES for k, v in lines.items()}
+    wbase = cache_sim.mem_write_base(n_t)
+    reads = [stats[:, cache_sim.MEM_READ + k].astype(np.float64)
+             for k in range(n_t)]
+    writes = [stats[:, wbase + k].astype(np.float64) for k in range(n_t)]
+    lines = [reads[k] + writes[k] for k in range(n_t)]
+    bytes_ = [v * CACHELINE_BYTES for v in lines]
+    gids = sorted({g for g in groups if g >= 0})
+    gpay = {g: next(group_payload[k] for k in range(n_t) if groups[k] == g)
+            for g in gids}
+    gbytes = {g: sum(bytes_[k] for k in range(n_t) if groups[k] == g)
+              for g in gids}
 
     base_ns = (n_acc / (ipc * freq)                       # issue
                + stats[:, cache_sim.L2_HIT] * l2_hit_ns / mlp)
     t = np.maximum(base_ns, 1.0)
-    lat = {k: np.full(b, timing.idle_latency_ns(k)) for k in _TIERS}
+    lat = [np.full(b, timings[k].idle_ns) for k in range(n_t)]
     done = np.zeros(b, bool)
     for _ in range(8):  # Picard iteration on the loaded-latency curve
         stall = np.zeros(b)
-        for k in _TIERS:
+        offered = [bytes_[k] / np.maximum(t, 1.0)         # B/ns == GB/s
+                   for k in range(n_t)]
+        goff = {g: sum(offered[k] for k in range(n_t) if groups[k] == g)
+                for g in gids}
+        glat = {g: np.zeros(b) for g in gids}
+        gbw = {g: np.zeros(b) for g in gids}      # per-device floors, max
+        for k in range(n_t):
             has = lines[k] > 0
-            offered = bytes_[k] / np.maximum(t, 1.0)      # B/ns == GB/s
             rf = reads[k] / np.maximum(lines[k], 1.0)
-            loaded = np.asarray(
-                timing.loaded_latency_ns(k, offered, rf) if k == "cxl"
-                else timing.loaded_latency_ns(k, offered), np.float64)
+            if groups[k] >= 0:
+                # shared USP: the queue sees the whole group's load
+                loaded = shared_usp_latency_ns(
+                    timings[k], gpay[groups[k]], goff[groups[k]])
+            elif kinds[k] == "cxl":
+                loaded = np.asarray(
+                    timings[k].loaded_latency_ns(offered[k], rf), np.float64)
+            else:
+                loaded = np.asarray(
+                    timings[k].loaded_latency_ns(offered[k]), np.float64)
             lat[k] = np.where(done | ~has, lat[k], loaded)
             # MLP-overlapped stalls, floored by the bandwidth bound
             t_lat = lines[k] * lat[k] / mlp
-            t_bw = bytes_[k] / timing.peak_gbps(k, rf)
-            stall += np.where(has, np.maximum(t_lat, t_bw), 0.0)
+            if groups[k] >= 0:
+                glat[groups[k]] = glat[groups[k]] + np.where(has, t_lat, 0.0)
+                # this endpoint's own link/media ceiling (devices drain in
+                # parallel, so the group keeps the max member floor)
+                t_bw = bytes_[k] / device_payload[k]
+                gbw[groups[k]] = np.maximum(gbw[groups[k]],
+                                            np.where(has, t_bw, 0.0))
+            else:
+                peak = (timings[k].peak_gbps if kinds[k] == "dram"
+                        else timings[k].payload_gbps(rf))
+                t_bw = bytes_[k] / peak
+                stall += np.where(has, np.maximum(t_lat, t_bw), 0.0)
+        for g in gids:
+            # group bandwidth floor: aggregate bytes over the USP payload,
+            # or the busiest member's own-device floor if that is stricter
+            floor = np.maximum(gbytes[g] / gpay[g], gbw[g])
+            stall += np.where(gbytes[g] > 0,
+                              np.maximum(glat[g], floor), 0.0)
         t_new = base_ns + stall
         newly = ~done & (np.abs(t_new - t) / np.maximum(t, 1.0) < 1e-6)
         t = np.where(done, t, t_new)
@@ -178,20 +273,33 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
             break
 
     t_rep = np.where(n_acc > 0, t, 0.0)
-    ach = {k: bytes_[k] / np.maximum(t, 1.0) for k in _TIERS}
+    ach = [bytes_[k] / np.maximum(t, 1.0) for k in range(n_t)]
+    labels = (["dram", "cxl"] if n_t == 2
+              else ["dram"] + [f"cxl{k}" for k in range(n_t - 1)])
+    names = cache_sim.stat_names(n_t)
     results: List[RunResult] = []
     for i in range(b):
-        s = {n: int(stats[i, j]) for j, n in enumerate(cache_sim.STAT_NAMES)}
+        s = {n: int(stats[i, j]) for j, n in enumerate(names)}
         na = max(int(n_acc[i]), 1)
         l2a = max(s["l2_hit"] + s["l2_miss"], 1)
         mr = {"l1_miss_rate": s["l1_miss"] / na,
               "l2_miss_rate": s["l2_miss"] / l2a,
               "llc_mpki": 1000.0 * s["l2_miss"] / na}
-        a = {k: float(ach[k][i]) for k in _TIERS}
+        a = {labels[k]: float(ach[k][i]) for k in range(n_t)}
+        latd = {labels[k]: float(lat[k][i]) for k in range(n_t)}
+        if n_t != 2:
+            # aggregates over all CXL targets: total bw, line-weighted lat
+            a["cxl"] = float(sum(ach[k][i] for k in range(1, n_t)))
+            cxl_lines = float(sum(lines[k][i] for k in range(1, n_t)))
+            cxl_lats = [lat[k][i] for k in range(1, n_t)]
+            if cxl_lines > 0:
+                latd["cxl"] = float(sum(lines[k][i] * lat[k][i]
+                                        for k in range(1, n_t))) / cxl_lines
+            else:
+                latd["cxl"] = float(np.mean(cxl_lats)) if cxl_lats else 0.0
         a["total"] = a["dram"] + a["cxl"]
         results.append(RunResult(
             stats=s, miss_rates=mr, time_ns=float(t_rep[i]),
-            achieved_gbps=a,
-            loaded_latency_ns={k: float(lat[k][i]) for k in _TIERS},
+            achieved_gbps=a, loaded_latency_ns=latd,
             cpu=cpus[i].kind))
     return results

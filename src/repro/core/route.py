@@ -1,0 +1,201 @@
+"""Per-access target routing: placement policy + committed HDM decode.
+
+The paper's headline is modeling CXL devices "at their correct position on
+the I/O bus" with "true interleaving with system DRAM" — which means the
+simulator's hot path cannot collapse memory into a binary DRAM/CXL tier.
+This module closes the gap between :mod:`repro.core.topology` (whose
+enumeration pass commits :class:`~repro.core.hdm.InterleaveProgram`s into a
+:class:`~repro.core.topology.SystemMap`) and the batched trace engine:
+
+  1. the OS page-placement policy (:mod:`repro.core.numa`) decides, per
+     page, whether an access lands in local DRAM or in the CXL window;
+  2. CXL-destined lines are pushed through the region's committed HDM
+     interleave program — (line -> way -> endpoint), the CXL 2.0 §8.2.5.12
+     decode — yielding a global **target id**: 0 = local DRAM, 1..K = the
+     K expander endpoints;
+  3. each target carries its *effective* timing: the direct-attach
+     :class:`~repro.core.timing.CXLTiming`, or the switch-derived one
+     (:func:`repro.core.switch.fanout_timing`) for endpoints below a shared
+     upstream switch port.  Targets below the same switch share a **group**;
+     the timing fixed point (:func:`repro.core.machine.time_batch`) couples
+     their loaded latency through the aggregate USP utilization.
+
+With one direct-attach expander the routed targets are *identical arrays*
+to the binary `numa.tier_of_lines` tiers and the per-target stats layout
+coincides with the historical 12-slot one — the binary path is the K=1
+special case, bitwise (test-enforced in tests/test_topology_routing.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numa as numa_mod
+from repro.core import topology as topo
+from repro.core.hdm import InterleaveProgram
+from repro.core.switch import SwitchConfig, fanout_timing, usp_payload_gbps
+from repro.core.timing import CXLTiming, DramTiming, TimingConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Topology shorthands (the sweepable axis)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """A sweepable expander topology: K cards, optionally behind one switch.
+
+    All expanders attach below one host bridge, so enumeration commits one
+    K-way interleaved region (the firmware CFMWS covers their combined
+    capacity).  `switch` places every endpoint behind a single CXL 2.0
+    switch: +2 hop latency and a shared-USP bandwidth group.
+    """
+    name: str
+    expander_gib: Tuple[int, ...] = (16,)
+    switch: Optional[SwitchConfig] = None
+    dram_gib: int = 16
+
+    @property
+    def n_expanders(self) -> int:
+        return len(self.expander_gib)
+
+
+def direct(n: int = 1, gib: int = 16) -> TopologySpec:
+    """`n` direct-attach expanders, n-way interleaved under one bridge."""
+    return TopologySpec(name=f"direct{n}", expander_gib=(gib,) * n)
+
+
+def switched(n: int = 4, gib: int = 16,
+             switch: Optional[SwitchConfig] = None) -> TopologySpec:
+    """`n` expanders pooled behind one CXL switch (shared USP)."""
+    sw = switch or SwitchConfig(n_downstream=n)
+    return TopologySpec(name=f"switch{n}", expander_gib=(gib,) * n,
+                        switch=sw)
+
+
+# ---------------------------------------------------------------------------
+# Routed targets
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """One memory target: local DRAM or a CXL expander endpoint.
+
+    `timing` is the *effective* path timing (switch-derived for grouped
+    targets).  `group >= 0` marks targets sharing an upstream switch port;
+    `group_payload_gbps` is that USP's payload bandwidth — the shared
+    bottleneck the timing fixed point couples the group through — and
+    `device_payload_gbps` the endpoint's own link/media ceiling through an
+    otherwise-idle switch (its individual bandwidth floor; the effective
+    timing's payload is fair-share-capped and would over-throttle bursts).
+    """
+    tid: int
+    name: str
+    kind: str                                  # 'dram' | 'cxl'
+    timing: Union[DramTiming, CXLTiming]
+    group: int = -1
+    group_payload_gbps: float = 0.0
+    device_payload_gbps: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteMap:
+    """Targets + the committed interleave programs that select among them.
+
+    `programs[i].targets` hold *global* target ids (not region-local way
+    indices), so decode output indexes `targets` directly.
+    """
+    name: str
+    targets: Tuple[Target, ...]
+    programs: Tuple[InterleaveProgram, ...]
+
+    @property
+    def n_targets(self) -> int:
+        return len(self.targets)
+
+    @property
+    def cxl_targets(self) -> Tuple[Target, ...]:
+        return tuple(t for t in self.targets if t.kind == "cxl")
+
+    def target_of_lines(self, policy: numa_mod.Policy, line_addr: Array,
+                        n_pages: int) -> Array:
+        """Per-access target id for a line-granular trace.
+
+        The policy maps pages to {DRAM, CXL}; CXL lines then decode through
+        the committed HDM program(s).  With several regions (one per host
+        bridge) pages round-robin across regions — the OS interleaving its
+        allocations over multiple zNUMA nodes — and the HDM program
+        interleaves lines *within* each region.
+        """
+        tier = numa_mod.tier_of_lines(policy, line_addr, n_pages)
+        if not self.programs:              # no CXL capacity: all DRAM
+            return jnp.zeros_like(tier)
+        line = jnp.asarray(line_addr, jnp.int32)
+        if len(self.programs) == 1:
+            way, _ = self.programs[0].decode_lines(line)
+            cxl_t = jnp.asarray(self.programs[0].targets, jnp.int32)[way]
+        else:
+            page = line // numa_mod.LINES_PER_PAGE
+            region = page % len(self.programs)
+            cxl_t = jnp.zeros_like(line)
+            for i, prog in enumerate(self.programs):
+                way, _ = prog.decode_lines(line)
+                tgt = jnp.asarray(prog.targets, jnp.int32)[way]
+                cxl_t = jnp.where(region == i, tgt, cxl_t)
+        return jnp.where(tier == 0, 0, cxl_t).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+def build_route_from_system(sysmap: topo.SystemMap, timing: TimingConfig,
+                            switch: Optional[SwitchConfig] = None,
+                            name: str = "system") -> RouteMap:
+    """Route map over an enumerated system's committed decode chains.
+
+    Target 0 is local DRAM (`timing.dram`); every endpoint of every region
+    becomes a CXL target in enumeration order.  `switch` (optional) places
+    *all* endpoints behind one switch: their timing becomes the
+    switch-derived effective path and they share one USP bandwidth group.
+    """
+    targets: List[Target] = [Target(0, "dram", "dram", timing.dram)]
+    programs: List[InterleaveProgram] = []
+    if switch is not None:
+        eff = fanout_timing(timing.cxl, switch)
+        usp = usp_payload_gbps(switch)
+    for region in sysmap.regions:
+        tids = []
+        for dev in region.devices:
+            tid = len(targets)
+            if switch is None:
+                targets.append(Target(tid, dev.name, "cxl", timing.cxl))
+            else:
+                targets.append(Target(
+                    tid, dev.name, "cxl", eff, group=0,
+                    group_payload_gbps=usp,
+                    device_payload_gbps=min(timing.cxl.payload_read_gbps,
+                                            usp)))
+            tids.append(tid)
+        programs.append(dataclasses.replace(region.program,
+                                            targets=tuple(tids)))
+    return RouteMap(name=name, targets=tuple(targets),
+                    programs=tuple(programs))
+
+
+def build_route(spec: TopologySpec, timing: TimingConfig) -> RouteMap:
+    """Build + enumerate `spec`'s system, then derive its route map.
+
+    Runs the full driver-equivalent pass (bind checks, HDM decoder
+    programming + commit) of :func:`repro.core.topology.enumerate_system` —
+    the routed targets come from *committed* decoders, not an ad-hoc table.
+    """
+    sys_ = topo.System(dram_size=spec.dram_gib * topo.GiB)
+    for i, gib in enumerate(spec.expander_gib):
+        sys_.add_expander(f"{spec.name}.mem{i}", gib * topo.GiB,
+                          bridge_uid=0)
+    sysmap = topo.enumerate_system(sys_)
+    return build_route_from_system(sysmap, timing, switch=spec.switch,
+                                   name=spec.name)

@@ -15,9 +15,11 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import cache as cache_sim
 from repro.core import engine as engine_mod
 from repro.core import numa as numa_mod
+from repro.core import route as route_mod
 from repro.core import stream as stream_mod
 from repro.core import topology as topo
 from repro.core.machine import CPUModel, Machine, RunResult
+from repro.core.switch import SwitchConfig
 from repro.core.timing import TimingConfig
 
 
@@ -59,6 +61,17 @@ class CXLRAMSim:
     def numastat(self) -> Dict[int, Dict]:
         return self.cli.numastat()
 
+    # ---- routing ----------------------------------------------------------
+    def route(self, switch: Optional[SwitchConfig] = None
+              ) -> route_mod.RouteMap:
+        """N-target route map over this system's committed HDM decoders.
+
+        Target 0 = local DRAM, 1..K = this system's expander endpoints;
+        pass a `SwitchConfig` to model all endpoints behind one switch.
+        """
+        return route_mod.build_route_from_system(
+            self.map, self.config.timing, switch=switch)
+
     # ---- characterization -------------------------------------------------
     def _check_policy(self, policy: numa_mod.Policy) -> None:
         if not self._onlined and not isinstance(policy, numa_mod.ZNuma):
@@ -79,27 +92,36 @@ class CXLRAMSim:
                      policy: Optional[numa_mod.Policy] = None,
                      kernel: str = "triad",
                      cpu: Optional[CPUModel] = None,
-                     backend: str = "reference") -> List[Dict]:
+                     backend: str = "reference",
+                     topologies: Optional[Sequence[
+                         route_mod.TopologySpec]] = None) -> List[Dict]:
         """The paper's §IV sweep: STREAM at k x L2 footprints.
 
         All footprints run as ONE batched device program (one compilation,
         one dispatch) through :mod:`repro.core.engine`; stats are
-        bitwise-equal to :meth:`stream_suite_sequential`.
+        bitwise-equal to :meth:`stream_suite_sequential`.  `topologies`
+        adds the multi-expander axis: rows then carry per-target
+        `bw_cxl{k}_gbps` / `lat_cxl{k}_ns` columns and a `topology` label.
         """
         policy = policy or numa_mod.ZNuma(cxl_fraction=1.0)
         return self.sweep(footprint_factors, policies=(policy,),
                           cpus=(cpu or self.config.cpu,), kernel=kernel,
-                          backend=backend)
+                          backend=backend, topologies=topologies)
 
     def sweep(self, footprint_factors: Sequence[int] = (2, 4, 6, 8),
               policies: Optional[Sequence[numa_mod.Policy]] = None,
               cpus: Optional[Sequence[CPUModel]] = None,
               kernel: str = "triad",
-              backend: str = "reference") -> List[Dict]:
-        """The full §IV grid — (footprint x policy x CPU model) — batched.
+              backend: str = "reference",
+              topologies: Optional[Sequence[route_mod.TopologySpec]] = None
+              ) -> List[Dict]:
+        """The full §IV grid — (topology x footprint x policy x CPU) —
+        batched.
 
-        Every (footprint, policy) cell is simulated in one vmapped device
-        call; CPU models vary only the vectorized timing fixed point.
+        Every (topology, footprint, policy) cell is simulated in one
+        vmapped device call; CPU models vary only the vectorized timing
+        fixed point.  Without `topologies` the legacy binary DRAM/CXL path
+        runs (bitwise-equal to a single direct-attach expander).
         """
         policies = tuple(policies) if policies else (
             numa_mod.ZNuma(cxl_fraction=1.0),)
@@ -108,7 +130,8 @@ class CXLRAMSim:
         cpus = tuple(cpus) if cpus else (self.config.cpu,)
         spec = engine_mod.SweepSpec(
             footprint_factors=tuple(footprint_factors), policies=policies,
-            cpus=cpus, kernel=kernel, backend=backend)
+            cpus=cpus, kernel=kernel, backend=backend,
+            topologies=tuple(topologies) if topologies else ())
         return engine_mod.run_sweep(spec, self.config.cache,
                                     self.config.timing)
 

@@ -37,6 +37,14 @@ class SwitchConfig:
     service_ns: float = 40.0       # USP arbitration service quantum
 
 
+def usp_payload_gbps(sw: SwitchConfig) -> float:
+    """Payload bandwidth of the upstream switch port (wire-only: the USP
+    has no media backend of its own) — the shared ceiling every consumer
+    of the switch model prices contention against."""
+    return CXLTiming(lanes=sw.usp_lanes, pcie_gen=sw.usp_pcie_gen,
+                     backend_gbps=1e9).payload_read_gbps
+
+
 def fanout_timing(base: CXLTiming, sw: SwitchConfig) -> CXLTiming:
     """Effective endpoint timing when attached through the switch.
 
@@ -46,10 +54,7 @@ def fanout_timing(base: CXLTiming, sw: SwitchConfig) -> CXLTiming:
     still reaches the device's own bandwidth — the queue model covers the
     region in between.
     """
-    usp = CXLTiming(lanes=sw.usp_lanes, pcie_gen=sw.usp_pcie_gen,
-                    backend_gbps=1e9)     # wire-only reference
-    usp_payload = usp.payload_read_gbps
-    share = usp_payload / max(sw.n_downstream, 1)
+    share = usp_payload_gbps(sw) / max(sw.n_downstream, 1)
     return dataclasses.replace(
         base,
         link_prop_ns=base.link_prop_ns + 2 * sw.hop_ns,
@@ -58,22 +63,29 @@ def fanout_timing(base: CXLTiming, sw: SwitchConfig) -> CXLTiming:
     )
 
 
+def shared_usp_latency_ns(eff: CXLTiming, usp_payload: float,
+                          aggregate_offered_gbps) -> np.ndarray:
+    """Loaded latency of a switched endpoint at aggregate USP utilization.
+
+    The shared USP queue sees the whole group's load: the endpoint's
+    latency is its switched idle path plus the queue delay at
+    `aggregate / usp_payload` utilization — the head-of-line coupling that
+    makes switched pools slower than per-device curves suggest.  This is
+    the single formula both :func:`usp_loaded_latency_ns` and the
+    machine-model fixed point (`machine.time_batch`) price groups with.
+    """
+    rho = np.asarray(aggregate_offered_gbps, np.float64) / usp_payload
+    q = QueueModel(idle_ns=eff.idle_ns, service_ns=eff.service_ns)
+    return np.asarray(q.latency_ns(rho), np.float64)
+
+
 def usp_loaded_latency_ns(base: CXLTiming, sw: SwitchConfig,
                           per_endpoint_gbps: List[float]) -> np.ndarray:
-    """Loaded latency per endpoint when all of them offer load at once.
-
-    The shared USP queue sees the *aggregate*; each endpoint's latency is
-    the switched idle path plus the shared-queue delay at total utilization
-    — the head-of-line coupling that makes switched pools slower than the
-    per-device curves suggest.
-    """
+    """Loaded latency per endpoint when all of them offer load at once."""
     eff = fanout_timing(base, sw)
-    usp = CXLTiming(lanes=sw.usp_lanes, pcie_gen=sw.usp_pcie_gen,
-                    backend_gbps=1e9)
     total = float(np.sum(per_endpoint_gbps))
-    rho = total / usp.payload_read_gbps
-    q = QueueModel(idle_ns=eff.idle_ns, service_ns=eff.service_ns)
-    return np.asarray([float(q.latency_ns(rho))] * len(per_endpoint_gbps))
+    lat = shared_usp_latency_ns(eff, usp_payload_gbps(sw), total)
+    return np.asarray([float(lat)] * len(per_endpoint_gbps))
 
 
 def pooled_capacity_per_node(capacities: List[int]) -> int:

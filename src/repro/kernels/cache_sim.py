@@ -9,7 +9,8 @@ kernels live here:
   * :func:`mesi_cache_sim` — the **full two-level MESI + tier state
     machine** of :mod:`repro.core.cache`: per-core L1 tag/state/LRU arrays,
     a shared inclusive L2 with directory sharer bitmasks and per-line
-    backing tier, and the 12-counter stats vector — everything VMEM-resident
+    backing target, and the (8 + 2*n_targets)-counter stats vector
+    (per-target memory reads/writes) — everything VMEM-resident
     across the grid.  It is the `pallas` backend of the batched trace engine
     (:mod:`repro.core.engine`); the `lax.scan` model in `repro.core.cache`
     is its bitwise oracle.
@@ -54,10 +55,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.cache import (
-    NSTATS, L1_HIT, L1_MISS, L2_HIT, L2_MISS,
-    MEM_READ_DRAM, MEM_READ_CXL, MEM_WRITE_DRAM, MEM_WRITE_CXL,
-    UPGRADES, INVALIDATIONS, BACK_INVALIDATIONS, WRITEBACKS_L1,
+    L1_HIT, L1_MISS, L2_HIT, L2_MISS, MEM_READ,
     I, S, E, M, SENTINEL, CacheParams, CacheState,
+    coherence_base, mem_write_base, nstats,
 )
 
 Array = jax.Array
@@ -175,7 +175,8 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
                  l2t_ref, l2u_ref, l2s_ref, l2tier_ref, l2sh_ref,
                  l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
                  *, chunk: int, cores: int, l1_sets: int, l1_ways: int,
-                 l2_sets: int, l2_ways: int, n_chunks: int):
+                 l2_sets: int, l2_ways: int, n_chunks: int,
+                 n_targets: int):
     """One (batch-row, chunk) grid step of the two-level MESI state machine.
 
     L1 state is flattened to (cores * l1_sets, l1_ways) so every row access
@@ -197,10 +198,13 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
         l2s[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
         l2tier[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
         l2sh[...] = jnp.zeros((l2_sets, l2_ways), jnp.int32)
-        stats[...] = jnp.zeros((NSTATS,), jnp.int32)
+        stats[...] = jnp.zeros((nstats(n_targets),), jnp.int32)
 
     base_t = j * chunk + 1
     core_ids = jnp.arange(cores, dtype=jnp.int32)
+    mem_write = mem_write_base(n_targets)
+    upgrades, invalidations, back_invalidations, writebacks_l1 = (
+        coherence_base(n_targets) + k for k in range(4))
 
     def body(i, carry):
         a_raw = addr_ref[0, i]
@@ -239,8 +243,8 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
 
         bump(L1_HIT, l1_hit)
         bump(L1_MISS, ~l1_hit)
-        bump(UPGRADES, needs_upgrade)
-        bump(INVALIDATIONS, jnp.where(w, n_other, 0))
+        bump(upgrades, needs_upgrade)
+        bump(invalidations, jnp.where(w, n_other, 0))
 
         # invalidate other copies on any write (upgrade or RFO fill)
         inval = other & w & valid
@@ -263,7 +267,7 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
         l2sh[eset2, eway] = jnp.where(
             evict_valid & ehit & valid,
             l2sh[eset2, eway] & ~(jnp.int32(1) << c), l2sh[eset2, eway])
-        bump(WRITEBACKS_L1, evict_dirty)
+        bump(writebacks_l1, evict_dirty)
 
         # ---------------- L2 lookup (only meaningful on L1 miss) --------
         set2 = a & (l2_sets - 1)
@@ -292,14 +296,15 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
         for k in range(cores):
             l1s[k * l1_sets + vset1, :] = jnp.where(
                 v_copies[k] & v_valid & valid, I, vc_s[k])
-        bump(BACK_INVALIDATIONS, jnp.where(v_valid, v_copies.sum(), 0))
+        bump(back_invalidations, jnp.where(v_valid, v_copies.sum(), 0))
         v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
-        bump(MEM_WRITE_DRAM, v_dirty & (v_tier == 0))
-        bump(MEM_WRITE_CXL, v_dirty & (v_tier == 1))
+        # per-target attribution unrolls over the (static) target count
+        for tgt in range(n_targets):
+            bump(mem_write + tgt, v_dirty & (v_tier == tgt))
 
         # ---- memory read on L2 miss ----
-        bump(MEM_READ_DRAM, l2_miss & (tr == 0))
-        bump(MEM_READ_CXL, l2_miss & (tr == 1))
+        for tgt in range(n_targets):
+            bump(MEM_READ + tgt, l2_miss & (tr == tgt))
 
         # ---- install / update line in L2 ----
         fill2 = l2_miss & valid
@@ -364,9 +369,9 @@ def mesi_cache_sim(addr: Array, is_write: Array, core: Array, tier: Array,
       chunk: trace elements per grid step.
       interpret: interpret mode (CPU validation; TPU target is False).
 
-    Returns: (stats (B, NSTATS) int32, batched CacheState) — bitwise-equal
-    to running `repro.core.cache.simulate_trace` per row on the unpadded
-    traces.
+    Returns: (stats (B, nstats(params.n_targets)) int32, batched
+    CacheState) — bitwise-equal to running
+    `repro.core.cache.simulate_trace` per row on the unpadded traces.
     """
     if addr.ndim != 2:
         raise ValueError("mesi_cache_sim expects a (B, N) batch")
@@ -376,26 +381,28 @@ def mesi_cache_sim(addr: Array, is_write: Array, core: Array, tier: Array,
     n_chunks = n // chunk
     cores, s1, w1 = params.cores, params.l1_sets, params.l1_ways
     s2, w2 = params.l2_sets, params.l2_ways
+    ns = nstats(params.n_targets)
 
     kernel = functools.partial(
         _mesi_kernel, chunk=chunk, cores=cores, l1_sets=s1, l1_ways=w1,
-        l2_sets=s2, l2_ways=w2, n_chunks=n_chunks)
+        l2_sets=s2, l2_ways=w2, n_chunks=n_chunks,
+        n_targets=params.n_targets)
     trace_spec = pl.BlockSpec((1, chunk), lambda b_, j: (b_, j))
     state_specs = [
-        pl.BlockSpec((1, NSTATS), lambda b_, j: (b_, 0)),
+        pl.BlockSpec((1, ns), lambda b_, j: (b_, 0)),
         pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0)),
         pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0)),
         pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0)),
     ] + [pl.BlockSpec((1, s2, w2), lambda b_, j: (b_, 0, 0))] * 5
     state_shapes = [
-        jax.ShapeDtypeStruct((b, NSTATS), jnp.int32),
+        jax.ShapeDtypeStruct((b, ns), jnp.int32),
         jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32),
         jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32),
         jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32),
     ] + [jax.ShapeDtypeStruct((b, s2, w2), jnp.int32)] * 5
     scratch = [pltpu.VMEM((cores * s1, w1), jnp.int32)] * 3 \
         + [pltpu.VMEM((s2, w2), jnp.int32)] * 5 \
-        + [pltpu.VMEM((NSTATS,), jnp.int32)]
+        + [pltpu.VMEM((ns,), jnp.int32)]
 
     outs = pl.pallas_call(
         kernel,

@@ -201,7 +201,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             lowered = fn.lower(*args)
             compiled = lowered.compile()
         mem = compiled.memory_analysis()
+        # cost_analysis() returns a dict in older JAX and a per-module list
+        # of dicts in newer releases — normalize to one dict either way
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         if save_hlo:
             save_hlo.parent.mkdir(parents=True, exist_ok=True)

@@ -104,6 +104,11 @@ class PagedKVCache:
     def append_tokens(self, seq_id: int, layer: int, k_new, v_new) -> None:
         """Append (T, K, hd) keys/values for `seq_id` (layer-local)."""
         t = k_new.shape[0]
+        # scatter requires matching dtypes (float32 -> bf16 pages is a
+        # FutureWarning today, an error in future JAX): cast to the page dtype
+        dt = self.k_pool[layer].dtype
+        k_new = jnp.asarray(k_new, dt)
+        v_new = jnp.asarray(v_new, dt)
         table = self.block_tables[seq_id]
         pos = self.seq_lens[seq_id]
         self.clock += 1

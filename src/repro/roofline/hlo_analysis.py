@@ -32,6 +32,7 @@ _COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
 _CALL_ATTR = re.compile(
     r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
 _CONST = re.compile(r"constant\((\d+)\)")
+_KNOWN_TRIPS = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)"?')
 _GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
@@ -182,12 +183,15 @@ def _dot_flops(ins: Instr, comp: Computation,
     out_elems = 1
     for d in out_dims:
         out_elems *= d
-    # lhs operand: first %name inside dot(...); dims via the symbol table
+    # lhs operand: inline type or first %name inside dot(...); dims via the
+    # symbol table.  The inline form is `f32[256,256]{1,0} %name, ...` — it
+    # must be matched at the start of the operand list (splitting on "," would
+    # truncate multi-dim shapes at the comma inside the brackets).
     inside = ins.rhs[ins.rhs.find("dot(") + 4:]
     lhs_dims: Optional[List[int]] = None
-    inline = _first_shape_dims(inside.split(",")[0])
+    inline = _SHAPE.match(inside.lstrip())
     if inline:                       # operand type written inline
-        lhs_dims = inline[1]
+        lhs_dims = [int(d) for d in inline.group(2).split(",") if d]
     else:
         mo = re.match(r"\s*%?([\w.\-]+)", inside)
         if mo:
@@ -291,8 +295,14 @@ def analyze(hlo: str) -> Analysis:
                     body = bm.group(1)
                 if cm:
                     cond = cm.group(1)
-                trips = _trip_count(comps[cond], warnings) if cond in comps \
-                    else 1.0
+                # prefer XLA's own annotation; fall back to the condition
+                km = _KNOWN_TRIPS.search(ins.rhs)
+                if km:
+                    trips = float(km.group(1))
+                elif cond in comps:
+                    trips = _trip_count(comps[cond], warnings)
+                else:
+                    trips = 1.0
                 if body:
                     c.add(cost_of(body, stack + (name,)), trips)
             elif op in ("fusion", "call", "custom-call", "reduce",
