@@ -12,6 +12,9 @@ human-readable block per benchmark.
   kernels_micro       — Pallas kernel micro-bench (interpret mode on CPU)
   topology            — multi-expander target routing: direct / interleaved
                         / switched topologies in one device program
+  workloads           — beyond-STREAM generators (pointer_chase, gups,
+                        kv_decode, moe_stream) x topologies, one program,
+                        + the LLC cache-pollution probe
   roofline_summary    — reads experiments/roofline JSON (dry-run derived)
 """
 from __future__ import annotations
@@ -399,6 +402,100 @@ def topology() -> None:
          f"topos={len(topos)};parity={parity}")
 
 
+def workloads() -> None:
+    """Workload generators beyond STREAM across topologies, one program.
+
+    Sweeps all four on-device generators (pointer_chase, gups, kv_decode,
+    moe_stream) x {direct1, switch4} topologies x footprints through the
+    batched engine — a single vmapped cache-sim dispatch covers every
+    cell.  Asserts the device-generated kv_decode stats are bitwise-equal
+    to the NumPy host-reference trace, measures the LLC pollution metric
+    (L2 miss-rate delta of a DRAM-resident probe with/without a
+    concurrent CXL burst), and writes `BENCH_workloads.json`.
+    """
+    import dataclasses
+
+    from repro.workloads import (Gups, KVDecode, MoEStream, PointerChase,
+                                 pollution_probe)
+
+    print("\n== workloads (beyond-STREAM generators, one device program) ==")
+    cache = cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                                  l2_bytes=64 * 1024, l2_ways=8)
+    timing = TimingConfig()
+    wls = (PointerChase(), Gups(), KVDecode(), MoEStream())
+    topos = (route_mod.direct(1), route_mod.switched(4))
+    fps = (2, 4)
+    spec = engine_mod.SweepSpec(
+        footprint_factors=fps, policies=(numa.ZNuma(1.0),),
+        cpus=(CPUModel(kind="o3", mlp=8),), workloads=wls,
+        topologies=topos)
+    run = lambda: engine_mod.run_sweep(spec, cache, timing)
+    t0 = time.time()
+    rows = run()
+    t_cold = time.time() - t0
+    t0 = time.time()
+    rows = run()
+    t_warm = time.time() - t0
+
+    # device-vs-host parity: the kv_decode trace re-derived with the NumPy
+    # reference generator, routed through the same committed decoders,
+    # must produce bitwise-equal stats
+    kv, k = wls[2], fps[0]
+    route = route_mod.build_route(topos[0], timing)
+    ht = kv.host_trace(k * cache.l2_bytes)
+    tier = route.targets_of_tiered_lines(ht.tier, ht.addr)
+    p = dataclasses.replace(cache, n_targets=route.n_targets)
+    stats, _ = engine_mod.run_traces(
+        p, jnp.asarray(ht.addr)[None], jnp.asarray(ht.is_write)[None],
+        core=None, tier=jnp.asarray(tier)[None])
+    want = cache_mod.stats_dict(np.asarray(stats[0]))
+    got = next(r["stats"] for r in rows
+               if r["workload"] == kv.name and r["footprint_x_l2"] == k
+               and r["topology"] == topos[0].name)
+    kv_parity = got == want
+    assert kv_parity, "device kv_decode stats diverged from host reference"
+
+    pollution = pollution_probe(cache)
+
+    print(f"{'workload':>14} {'topology':>9} {'kxL2':>5} {'bw_GB/s':>8} "
+          f"{'bw_cxl':>7} {'lat_cxl':>8} {'llc_miss':>9}")
+    for r in rows:
+        print(f"{r['workload']:>14} {r['topology']:>9} "
+              f"{r['footprint_x_l2']:>5} {r['bw_total_gbps']:>8.2f} "
+              f"{r['bw_cxl_gbps']:>7.2f} {r['lat_cxl_ns']:>8.1f} "
+              f"{r['l2_miss_rate']:>9.3f}")
+    print(f"LLC pollution probe: clean "
+          f"{pollution['probe_miss_rate_clean']:.3f} -> polluted "
+          f"{pollution['probe_miss_rate_polluted']:.3f} "
+          f"(delta {pollution['pollution_delta']:.3f})")
+
+    n_acc = sum(r["stats"]["l1_hit"] + r["stats"]["l1_miss"] for r in rows)
+    report = {
+        "suite": {"workloads": [w.name for w in wls],
+                  "topologies": [t.name for t in topos],
+                  "footprint_factors": list(fps),
+                  "policies": [numa.describe(p_) for p_ in spec.policies],
+                  "cpus": [c.kind for c in spec.cpus],
+                  "rows": len(rows), "accesses": n_acc,
+                  "one_device_program": True},
+        "cold_s": round(t_cold, 4),
+        "warm_s": round(t_warm, 4),
+        "kv_decode_device_bitwise_equals_host_reference": kv_parity,
+        "pollution": pollution,
+        "rows": [{k_: v for k_, v in r.items() if k_ != "stats"}
+                 for r in rows],
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_workloads.json"
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"{len(wls)} workloads x {len(topos)} topologies x {len(fps)} "
+          f"footprints in one program: cold {t_cold:.2f}s warm "
+          f"{t_warm:.2f}s; kv device==host: {kv_parity} -> {out.name}")
+    emit("workloads_sweep", t_warm * 1e6 / len(rows),
+         f"wls={len(wls)};kv_parity={kv_parity};"
+         f"pollution={pollution['pollution_delta']:.3f}")
+
+
 def roofline_summary() -> None:
     """Digest of the dry-run-derived roofline (experiments/roofline)."""
     print("\n== roofline_summary (from multi-pod dry-run) ==")
@@ -436,6 +533,7 @@ BENCHES: Dict[str, Callable[[], None]] = {
     "kernels_micro": kernels_micro,
     "engine": engine,
     "topology": topology,
+    "workloads": workloads,
     "roofline_summary": roofline_summary,
 }
 

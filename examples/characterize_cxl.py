@@ -86,3 +86,34 @@ for r in topo_rows:
     per = [f"{r[k]:.2f}" for k in per_target_bw_columns(r)]
     print(f"{r['topology']:>10} {r['bw_cxl_gbps']:>7.2f} "
           f"{r['lat_cxl_ns']:>10.1f}  [{', '.join(per)}]")
+
+# --- beyond STREAM: the calibrated card under realistic workloads ------------
+# The on-device generators of repro.workloads (docs/workloads.md): a
+# dependent-load pointer chase (idle-latency probe — MLP collapses to 1, so
+# the loaded latency IS the runtime), GUPS random updates, LLM KV-decode
+# gathers recorded from the real paged-KV serving stack, and MoE
+# expert-weight streaming.  Still ONE vmapped device program.
+from repro.workloads import Gups, KVDecode, MoEStream, PointerChase
+
+wl_spec = engine.SweepSpec(
+    footprint_factors=(4,),
+    policies=(numa.ZNuma(1.0),),
+    cpus=(CPUModel(kind="o3", mlp=8),),
+    workloads=(PointerChase(), Gups(), KVDecode(), MoEStream()))
+wl_rows = engine.run_sweep(wl_spec, cache, cfg)
+print(f"\nworkloads on the calibrated card (4x L2, CXL-bound):")
+print(f"{'workload':>14} {'bw_GB/s':>8} {'bw_cxl':>7} {'lat_cxl_ns':>10} "
+      f"{'llc_miss':>9}")
+for r in wl_rows:
+    print(f"{r['workload']:>14} {r['bw_total_gbps']:>8.2f} "
+          f"{r['bw_cxl_gbps']:>7.2f} {r['lat_cxl_ns']:>10.1f} "
+          f"{r['l2_miss_rate']:>9.3f}")
+
+# --- cache pollution: what the CXL tenant does to a DRAM-resident one --------
+from repro.workloads import pollution_probe
+
+pol = pollution_probe(cache)
+print(f"\nLLC pollution (DRAM-resident pointer-chase probe vs a CXL GUPS "
+      f"burst):\n  clean miss rate {pol['probe_miss_rate_clean']:.3f} -> "
+      f"polluted {pol['probe_miss_rate_polluted']:.3f} "
+      f"(delta {pol['pollution_delta']:.3f})")

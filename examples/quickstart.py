@@ -1,5 +1,7 @@
 """Quickstart: build a CXL system, enumerate it, online the expander, and
-characterize DRAM vs CXL with STREAM — the paper's whole flow in ~30 lines.
+characterize DRAM vs CXL with STREAM — the paper's whole flow in ~30 lines,
+driven through the batched engine (`docs/engine.md`): each suite below is
+ONE vmapped device program, not a Python loop of runs.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -22,11 +24,18 @@ print("\nCXL path latency breakdown (ns):")
 for stage, ns in sim.latency_breakdown().items():
     print(f"  {stage:>26}: {ns:.1f}")
 
-# STREAM triad at 4x the LLC, bound to DRAM vs bound to the zNUMA node
-fp = 4 * sim.config.cache.l2_bytes
-for name, policy in [("DRAM", numa.ZNuma(0.0)), ("CXL", numa.ZNuma(1.0)),
-                     ("interleave 1:1", numa.WeightedInterleave(1, 1))]:
-    r = sim.run_stream("triad", fp, policy)
-    print(f"\nSTREAM triad on {name}: {r.achieved_gbps['total']:.2f} GB/s, "
-          f"LLC miss {r.miss_rates['l2_miss_rate']:.1%}, "
-          f"loaded CXL latency {r.loaded_latency_ns['cxl']:.0f} ns")
+# §IV: STREAM triad at k x L2 on the zNUMA node — all footprints batched
+# into one compiled program by CXLRAMSim.stream_suite
+print("\nSTREAM triad bound to CXL (one device program):")
+for r in sim.stream_suite(footprint_factors=(2, 4, 8)):
+    print(f"  {r['footprint_x_l2']}x L2: {r['bw_total_gbps']:.2f} GB/s, "
+          f"LLC miss {r['l2_miss_rate']:.1%}, "
+          f"loaded CXL latency {r['lat_cxl_ns']:.0f} ns")
+
+# placement policies at a fixed 4x L2 footprint — again one vmapped sweep
+print("\npage placement at 4x L2 (one device program):")
+for r in sim.sweep(footprint_factors=(4,),
+                   policies=[numa.ZNuma(0.0), numa.WeightedInterleave(1, 1),
+                             numa.ZNuma(1.0)]):
+    print(f"  {r['policy']:>18}: {r['bw_total_gbps']:.2f} GB/s "
+          f"(dram {r['bw_dram_gbps']:.2f} / cxl {r['bw_cxl_gbps']:.2f})")

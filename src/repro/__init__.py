@@ -1,8 +1,10 @@
 """CXLRAMSim-JAX: CXL memory-expander simulation (Pathak et al., CS.AR 2026)
 as a first-class memory-tiering layer of a multi-pod JAX LLM framework.
 
-Subpackages: core (the paper's simulator), kernels (Pallas), models (10
-archs), memory (tiering/KV/offload), optim, data, checkpoint, runtime,
-serving, configs, launch, roofline.  See DESIGN.md and EXPERIMENTS.md.
+Subpackages: core (the paper's simulator), workloads (on-device trace
+generators: STREAM, pointer chase, GUPS, LLM KV-decode, MoE streaming),
+kernels (Pallas), models (10 archs), memory (tiering/KV/offload), optim,
+data, checkpoint, runtime, serving, configs, launch, roofline.  See
+README.md and docs/architecture.md.
 """
 __version__ = "1.0.0"

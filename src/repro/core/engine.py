@@ -3,14 +3,20 @@
 The paper's §IV suite sweeps STREAM footprints x page-placement policies x
 CPU models.  The seed drove that sweep from Python — one `lax.scan` dispatch
 (and one XLA compilation per trace length) per configuration.  This engine
-stacks every (footprint, policy) configuration into a leading batch
-dimension, pads the traces to a common length with sentinel entries, and
-runs the *exact* two-level MESI model of :mod:`repro.core.cache` under a
-single ``jax.vmap``-over-``lax.scan`` jitted program: one compilation, one
-device call for the whole suite.  CPU models do not touch cache state, so
-the engine simulates each (footprint, policy) cell once and broadcasts the
-stats across the CPU axis before closing the vectorized Picard timing fixed
-point (:func:`repro.core.machine.time_batch`).
+stacks every (workload, topology, footprint, policy) configuration into a
+leading batch dimension, pads the traces to a common length with sentinel
+entries, and runs the *exact* two-level MESI model of
+:mod:`repro.core.cache` under a single ``jax.vmap``-over-``lax.scan``
+jitted program: one compilation, one device call for the whole suite.  CPU
+models do not touch cache state, so the engine simulates each cell once and
+broadcasts the stats across the CPU axis before closing the vectorized
+Picard timing fixed point (:func:`repro.core.machine.time_batch`).
+
+Traces come from the on-device workload generators of
+:mod:`repro.workloads` (STREAM, pointer chase, GUPS, LLM KV-decode, MoE
+expert streaming): pure jax ops produce each `(addr, is_write[, tier])`
+stream directly on device, and :func:`stack_device_traces` pads/stacks
+them there too — the host only ever sees shape metadata.
 
 Sentinel convention
 -------------------
@@ -35,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +50,11 @@ import numpy as np
 from repro.core import cache as cache_mod
 from repro.core import numa as numa_mod
 from repro.core import route as route_mod
-from repro.core import stream as stream_mod
 from repro.core.machine import CPUModel, RunResult, time_batch
 from repro.core.timing import TimingConfig
+
+if TYPE_CHECKING:  # deferred at runtime: workloads builds on core
+    from repro.workloads.base import Workload
 
 Array = jax.Array
 
@@ -59,21 +67,40 @@ BACKENDS = ("reference", "pallas")
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """The §IV characterization grid, batched into one device program.
+    """The characterization grid, batched into one device program.
 
-    `footprint_factors` are multiples of the machine's L2 size (the paper
-    runs STREAM at {2,4,6,8} x L2).  The cache model runs once per
-    (topology, footprint, policy) cell; `cpus` only vary the analytic
-    timing layer.
+    The cache model runs once per (workload, topology, footprint, policy)
+    cell; `cpus` only vary the analytic timing layer.
 
-    `topologies` is the scenario-diversity axis: each
-    :class:`~repro.core.route.TopologySpec` is enumerated (committed HDM
-    decoders) and its N-target route map drives per-access routing — e.g.
-    one direct-attach card, two interleaved cards, four endpoints behind a
-    switch, all in the same vmapped device program (stats padded to the
-    widest target count).  Empty `topologies` keeps the legacy binary
-    DRAM/CXL tier path, which is bitwise-identical to a single
-    direct-attach expander (test-enforced).
+    Parameters
+    ----------
+    footprint_factors : tuple of int
+        Multiples of the machine's L2 size (the paper runs STREAM at
+        {2,4,6,8} x L2); each workload scales its working set to
+        ``k * l2_bytes``.
+    policies : tuple of numa.Policy
+        Page-placement policies (ignored by workloads that carry their own
+        residency map, e.g. ``kv_decode``).
+    cpus : tuple of CPUModel
+        Analytic issue models; broadcast over the simulated cells.
+    kernel : str
+        STREAM kernel of the default workload axis (legacy knob; only used
+        when `workloads` is empty).
+    backend : str
+        ``'reference'`` (vmapped scan) or ``'pallas'`` (MESI kernel).
+    topologies : tuple of route.TopologySpec
+        Scenario axis #1: each spec is enumerated (committed HDM decoders)
+        and its N-target route map drives per-access routing — e.g. one
+        direct-attach card, two interleaved cards, four endpoints behind a
+        switch, all in the same vmapped device program (stats padded to
+        the widest target count).  Empty = the legacy binary DRAM/CXL tier
+        path, bitwise-identical to a single direct-attach expander
+        (test-enforced).
+    workloads : tuple of workloads.Workload
+        Scenario axis #2: on-device trace generators
+        (:mod:`repro.workloads`) — pointer chase, GUPS, KV-decode, MoE
+        streaming, STREAM.  Empty = ``(Stream(kernel),)``, the legacy
+        STREAM-only grid (bitwise-identical rows).
     """
     footprint_factors: Tuple[int, ...] = (2, 4, 6, 8)
     policies: Tuple[numa_mod.Policy, ...] = (numa_mod.ZNuma(1.0),)
@@ -81,10 +108,21 @@ class SweepSpec:
     kernel: str = "triad"
     backend: str = "reference"
     topologies: Tuple[route_mod.TopologySpec, ...] = ()
+    workloads: Tuple["Workload", ...] = ()
 
     @property
-    def sim_cells(self) -> List[Tuple[int, numa_mod.Policy]]:
-        return [(k, pol) for k in self.footprint_factors
+    def workload_axis(self) -> Tuple["Workload", ...]:
+        """The workload loop; defaults to STREAM with `self.kernel`."""
+        if self.workloads:
+            return self.workloads
+        from repro import workloads as wl_mod  # deferred: wl builds on core
+        return (wl_mod.Stream(self.kernel),)
+
+    @property
+    def sim_cells(self) -> List[Tuple["Workload", int, numa_mod.Policy]]:
+        """All (workload, footprint-factor, policy) cells, workload-major."""
+        return [(wl, k, pol) for wl in self.workload_axis
+                for k in self.footprint_factors
                 for pol in self.policies]
 
     @property
@@ -131,6 +169,19 @@ def stack_traces(traces: Sequence[Tuple[np.ndarray, np.ndarray,
     Rows are padded at the end with `SENTINEL` addresses (zero for the other
     fields); the common length is rounded up to `pad_to_multiple` so the
     Pallas backend can stream fixed-size chunks without a remainder.
+
+    Parameters
+    ----------
+    traces : sequence of (addr, is_write[, core[, tier]]) tuples
+        Host (NumPy) per-config traces; `None` fields become zeros.
+    pad_to_multiple : int
+        Chunk granularity the common length is rounded up to.
+
+    Returns
+    -------
+    TraceBatch
+        Host-resident `(B, N)` arrays.  See :func:`stack_device_traces`
+        for the device-resident twin the workload generators use.
     """
     if not traces:
         raise ValueError("no traces to stack (empty sweep grid?)")
@@ -154,6 +205,51 @@ def stack_traces(traces: Sequence[Tuple[np.ndarray, np.ndarray,
             tier[i, :n] = np.asarray(t[3], np.int32)
     return TraceBatch(addr=addr, is_write=is_write, core=core, tier=tier,
                       n_valid=n_valid)
+
+
+def stack_device_traces(traces: Sequence[Tuple], pad_to_multiple: int = 1
+                        ) -> TraceBatch:
+    """Device-resident :func:`stack_traces`: pad + stack with `jnp` ops.
+
+    The on-device workload generators (:mod:`repro.workloads`) produce
+    their traces as `jax` arrays; this stacker keeps them on device — the
+    sentinel padding and the `(B, N)` batch are built with `jnp`
+    concatenate/stack, so no trace is ever materialized host-side.
+
+    Parameters
+    ----------
+    traces : sequence of (addr, is_write[, core[, tier]]) tuples
+        Per-config device traces (`None` fields become zeros).
+    pad_to_multiple : int
+        Chunk granularity the common length is rounded up to.
+
+    Returns
+    -------
+    TraceBatch
+        `(B, N)` device arrays; `n_valid` stays host-side (static shape
+        metadata).
+    """
+    if not traces:
+        raise ValueError("no traces to stack (empty sweep grid?)")
+    n_valid = np.asarray([int(t[0].shape[0]) for t in traces], np.int64)
+    n_max = int(n_valid.max())
+    n_max = -(-n_max // pad_to_multiple) * pad_to_multiple
+
+    def pad(x, n, fill):
+        x = jnp.asarray(x, jnp.int32)
+        if n == n_max:
+            return x
+        return jnp.concatenate([x, jnp.full((n_max - n,), fill, jnp.int32)])
+
+    def field(i, fill=0):
+        return jnp.stack([
+            pad(t[i], int(n_valid[j]), fill)
+            if len(t) > i and t[i] is not None
+            else jnp.zeros((n_max,), jnp.int32)
+            for j, t in enumerate(traces)])
+
+    return TraceBatch(addr=field(0, fill=SENTINEL), is_write=field(1),
+                      core=field(2), tier=field(3), n_valid=n_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -225,31 +321,85 @@ def build_stream_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
                        routes: Optional[Sequence[
                            Optional[route_mod.RouteMap]]] = None
                        ) -> TraceBatch:
-    """Materialize the (topology x footprint x policy) STREAM trace batch.
+    """Materialize the (topology x workload x footprint x policy) batch.
 
-    `routes` holds one route map per topology-axis entry (`None` = binary
-    tier path); the `tier` field of the result then carries *target ids*.
+    Each workload generates its trace **on device**
+    (:meth:`~repro.workloads.base.Workload.device_trace` — pure jax ops,
+    no host materialization); routes/policies only relabel each access's
+    target, so the trace is generated once per (workload, footprint) and
+    shared across the topology/policy cells.
+
+    Parameters
+    ----------
+    spec : SweepSpec
+        The grid; `spec.sim_cells` enumerates the simulated cells.
+    cache : CacheParams
+        Supplies `l2_bytes`, the footprint unit.
+    chunk : int
+        Pad granularity (Pallas chunk size).
+    routes : sequence of RouteMap or None, optional
+        One entry per topology-axis entry (`None` = binary tier path); the
+        `tier` field of the result then carries *target ids*.  Workloads
+        that emit their own per-access tier intent (``kv_decode``) route
+        through :meth:`~repro.core.route.RouteMap.targets_of_tiered_lines`
+        instead of the placement policy.
+
+    Returns
+    -------
+    TraceBatch
+        Device-resident, sentinel-padded `(B, N)` batch.
+    """
+    batch, _ = build_sweep_batch(spec, cache, chunk=chunk, routes=routes)
+    return batch
+
+
+def build_sweep_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
+                      chunk: int = 512,
+                      routes: Optional[Sequence[
+                          Optional[route_mod.RouteMap]]] = None
+                      ) -> Tuple[TraceBatch, List[int]]:
+    """:func:`build_stream_batch` plus the cell -> batch-row map.
+
+    Cells whose workload owns its residency map (``wt.tier is not None``,
+    e.g. ``kv_decode``) are policy-independent: they are simulated once
+    per (topology, workload, footprint) and every policy cell maps to
+    that single batch row — no duplicate MESI runs on bit-identical
+    inputs.
+
+    Returns
+    -------
+    (TraceBatch, list of int)
+        The deduplicated batch, and one batch-row index per logical cell
+        in ``topology-major x sim_cells`` order.
     """
     if routes is None:
         routes = [None] * len(spec.topology_axis)
-    # the trace itself depends only on the footprint; routes/policies only
-    # relabel each access's target — generate it once per footprint
+    # the trace depends only on (workload, footprint); generate once
     cell_traces = {}
-    for k, _ in spec.sim_cells:
-        if k not in cell_traces:
-            layout = stream_mod.layout_for_footprint(k * cache.l2_bytes)
-            addr, is_write = stream_mod.stream_trace(spec.kernel, layout)
-            cell_traces[k] = (layout, np.asarray(addr), np.asarray(is_write))
-    traces = []
-    for route in routes:
-        for k, pol in spec.sim_cells:
-            layout, addr, is_write = cell_traces[k]
-            if route is None:
-                tier = numa_mod.tier_of_lines(pol, addr, layout.n_pages)
-            else:
-                tier = route.target_of_lines(pol, addr, layout.n_pages)
-            traces.append((addr, is_write, None, np.asarray(tier)))
-    return stack_traces(traces, pad_to_multiple=chunk)
+    for wl, k, _ in spec.sim_cells:
+        if (wl, k) not in cell_traces:
+            cell_traces[(wl, k)] = wl.device_trace(k * cache.l2_bytes)
+    traces: List[Tuple] = []
+    row_of = {}
+    cell_rows: List[int] = []
+    for ti, route in enumerate(routes):
+        for wl, k, pol in spec.sim_cells:
+            wt = cell_traces[(wl, k)]
+            key = ((ti, wl, k) if wt.tier is not None
+                   else (ti, wl, k, pol))
+            if key not in row_of:
+                if wt.tier is not None:    # workload-owned residency map
+                    tier = (wt.tier if route is None
+                            else route.targets_of_tiered_lines(wt.tier,
+                                                               wt.addr))
+                elif route is None:
+                    tier = numa_mod.tier_of_lines(pol, wt.addr, wt.n_pages)
+                else:
+                    tier = route.target_of_lines(pol, wt.addr, wt.n_pages)
+                traces.append((wt.addr, wt.is_write, None, tier))
+                row_of[key] = len(traces) - 1
+            cell_rows.append(row_of[key])
+    return stack_device_traces(traces, pad_to_multiple=chunk), cell_rows
 
 
 def _narrow_stats(stats: np.ndarray, t_max: int, t_route: int) -> np.ndarray:
@@ -271,23 +421,41 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
               timing: TimingConfig, *, chunk: int = 512) -> List[Dict]:
     """Run the whole characterization suite as one batched device program.
 
-    Returns one row dict per (topology, footprint, policy, cpu) — the same
-    schema as `CXLRAMSim.stream_suite` rows, plus the raw `stats` counters
-    (and a `topology` label when the spec sweeps topologies; multi-target
-    rows carry per-target `bw_cxl{k}_gbps` / `lat_cxl{k}_ns` columns).
-    Stats are bitwise-equal to running each configuration through the
-    sequential per-config path.
+    Parameters
+    ----------
+    spec : SweepSpec
+        The (workload x topology x footprint x policy x cpu) grid.
+    cache : CacheParams
+        Cache geometry (stats width is adjusted to the widest route).
+    timing : TimingConfig
+        Per-tier timing model closing the Picard fixed point.
+    chunk : int
+        Trace pad/stream granularity.
+
+    Returns
+    -------
+    list of dict
+        One row per (topology, workload, footprint, policy, cpu) — the
+        same schema as `CXLRAMSim.stream_suite` rows, plus the raw
+        `stats` counters, a `workload` label, a `topology` label when the
+        spec sweeps topologies, and per-target `bw_cxl{k}_gbps` /
+        `lat_cxl{k}_ns` columns on multi-target rows.  Stats are
+        bitwise-equal to running each configuration through the
+        sequential per-config path.
     """
+    from repro.workloads.base import Stream  # deferred: wl builds on core
     results = sweep_results(spec, cache, timing, chunk=chunk)
     rows: List[Dict] = []
     i = 0
     for topo in spec.topology_axis:
-        for k, pol in spec.sim_cells:
+        for wl, k, pol in spec.sim_cells:
             for _cpu in spec.cpus:
                 r = results[i]
-                row = {"footprint_x_l2": k, "kernel": spec.kernel,
+                row = {"workload": wl.name, "footprint_x_l2": k,
                        "policy": numa_mod.describe(pol), "cpu": r.cpu,
                        **r.row(), "stats": r.stats}
+                if isinstance(wl, Stream):   # no STREAM kernel ran otherwise
+                    row["kernel"] = wl.kernel
                 if topo is not None:
                     row["topology"] = topo.name
                 rows.append(row)
@@ -300,13 +468,28 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
                   ) -> List[RunResult]:
     """`run_sweep` returning full RunResults (row order identical).
 
-    One device call simulates every (topology, footprint, policy) cell —
-    topologies with different target counts share the program by padding
-    the stats width to the widest route (unused per-target counters stay
-    zero and are dropped again before timing).  Each cell's stats are then
-    broadcast across the CPU-model axis (CPU models never touch cache
-    state) and the Picard timing fixed point closes vectorized per
-    topology group, with each group's own route (switch coupling included).
+    One device call simulates every (topology, workload, footprint,
+    policy) cell — topologies with different target counts share the
+    program by padding the stats width to the widest route (unused
+    per-target counters stay zero and are dropped again before timing).
+    Each cell's stats are then broadcast across the CPU-model axis (CPU
+    models never touch cache state) and the Picard timing fixed point
+    closes vectorized per topology group, with each group's own route
+    (switch coupling included).  Workloads with serial dependences
+    (pointer chase) collapse each CPU model's memory-level parallelism to
+    1 via :meth:`~repro.workloads.base.Workload.cpu_for` — dependent
+    loads cannot overlap.
+
+    Parameters
+    ----------
+    spec, cache, timing, chunk
+        As in :func:`run_sweep`.
+
+    Returns
+    -------
+    list of RunResult
+        One per grid row, ordered topology-major, then workload,
+        footprint, policy, cpu.
     """
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}")
@@ -314,19 +497,23 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
               for tp in spec.topology_axis]
     t_max = max(2 if r is None else r.n_targets for r in routes)
     p = dataclasses.replace(cache, n_targets=t_max)
-    batch = build_stream_batch(spec, cache, chunk=chunk, routes=routes)
+    batch, cell_rows = build_sweep_batch(spec, cache, chunk=chunk,
+                                         routes=routes)
     stats, _ = run_traces(p, batch.addr, batch.is_write,
                           core=None, tier=batch.tier,
                           backend=spec.backend, chunk=chunk)
     stats = np.asarray(jax.block_until_ready(stats), np.int64)
-    n_cells = len(spec.sim_cells)
+    cells = spec.sim_cells
+    n_cells = len(cells)
+    rows_cpus = [wl.cpu_for(cpu) for wl, _k, _pol in cells
+                 for cpu in spec.cpus]
     results: List[RunResult] = []
     for ti, route in enumerate(routes):
-        block = stats[ti * n_cells:(ti + 1) * n_cells]
+        # gather this topology's cells (policy-duplicate cells share rows)
+        block = stats[cell_rows[ti * n_cells:(ti + 1) * n_cells]]
         t_route = 2 if route is None else route.n_targets
         block = _narrow_stats(block, t_max, t_route)
         rows_stats = np.repeat(block, len(spec.cpus), axis=0)
-        rows_cpus = list(spec.cpus) * n_cells
         results.extend(time_batch(timing, rows_cpus, rows_stats,
                                   route=route))
     return results

@@ -18,7 +18,7 @@ iterations converge (monotone curve).
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +35,22 @@ if TYPE_CHECKING:  # import cycle: route builds on timing, machine on route
 
 @dataclasses.dataclass(frozen=True)
 class CPUModel:
+    """Analytic CPU issue model (the gem5 'Timing'/O3 stand-ins).
+
+    Attributes
+    ----------
+    kind : str
+        ``'inorder'`` (one outstanding miss) or ``'o3'`` (MSHR-bound
+        overlap).
+    freq_ghz : float
+        Core clock.
+    ipc_core : float
+        Non-memory instructions per cycle.
+    l1_hit_ns, l2_hit_ns : float
+        Hit service times (L1 folded into issue; L2 divided by MLP).
+    mlp : int
+        Maximum outstanding L2 misses (MSHRs) for the O3 model.
+    """
     kind: str = "o3"             # 'inorder' | 'o3'
     freq_ghz: float = 3.0
     ipc_core: float = 2.0        # non-memory IPC
@@ -44,11 +60,32 @@ class CPUModel:
 
     @property
     def effective_mlp(self) -> int:
+        """Outstanding-miss budget the timing layer actually uses."""
         return 1 if self.kind == "inorder" else self.mlp
 
 
 @dataclasses.dataclass
 class RunResult:
+    """One timed configuration: counters + the closed timing fixed point.
+
+    Attributes
+    ----------
+    stats : dict
+        Raw cache/tier counters, keys as `cache.stat_names(T)`.
+    miss_rates : dict
+        ``l1_miss_rate`` / ``l2_miss_rate`` (LLC, the paper's Fig. 5
+        metric) / ``llc_mpki``.
+    time_ns : float
+        Converged runtime (0.0 when the trace had no memory accesses).
+    achieved_gbps : dict
+        Per-target achieved bandwidth (``dram``, ``cxl0``...), plus the
+        ``cxl`` aggregate and ``total``.
+    loaded_latency_ns : dict
+        Per-target loaded latency at the converged operating point; a
+        target with no traffic keeps its *idle* latency.
+    cpu : str
+        The CPU model kind that timed this row.
+    """
     stats: Dict[str, int]
     miss_rates: Dict[str, float]
     time_ns: float
@@ -63,6 +100,8 @@ class RunResult:
         return sorted(per, key=lambda s: (len(s), s))
 
     def row(self) -> Dict[str, float]:
+        """Flatten into the sweep row schema (`bw_*`, `lat_*`, per-target
+        columns appended for multi-expander routes)."""
         out = {
             "time_ns": self.time_ns,
             "bw_total_gbps": self.achieved_gbps["total"],
@@ -90,7 +129,21 @@ class Machine:
 
     # -- cache simulation (exact) -----------------------------------------
     def simulate(self, addr, is_write, tier, core=None
-                 ) -> Dict[str, int]:
+                 ) -> "Tuple[Dict[str, int], Dict[str, float]]":
+        """Run one trace through the sequential (oracle) cache model.
+
+        Parameters
+        ----------
+        addr, is_write, tier : (N,) arrays
+            Line-granular trace; `tier` carries target ids.
+        core : (N,) array, optional
+            Issuing core per access (default 0).
+
+        Returns
+        -------
+        (stats, miss_rates) : tuple of dict
+            Counter dict (`cache.stat_names`) and derived miss rates.
+        """
         state = cache_sim.init_state(self.cache_params)
         _, stats = cache_sim.simulate_trace(
             self.cache_params, state, jnp.asarray(addr),
@@ -110,8 +163,26 @@ class Machine:
                   route: "Optional[RouteMap]" = None) -> RunResult:
         """One trace through the batched engine (B=1) + timing fixed point.
 
-        `route` switches from the binary DRAM/CXL tier map to N-target
-        routing through the route map's committed HDM programs.
+        Parameters
+        ----------
+        addr, is_write : (N,) arrays
+            Line-granular trace.
+        policy : numa.Policy
+            Page-placement policy deciding each page's DRAM/CXL intent.
+        n_pages : int
+            The policy's domain (pages the footprint spans).
+        core : (N,) array, optional
+            Issuing core per access.
+        backend : str
+            ``'reference'`` or ``'pallas'``.
+        route : RouteMap, optional
+            Switches from the binary DRAM/CXL tier map to N-target
+            routing through the route map's committed HDM programs.
+
+        Returns
+        -------
+        RunResult
+            Stats + the closed timing fixed point for this machine's CPU.
         """
         from repro.core import engine  # deferred: engine builds on machine
         addr = jnp.asarray(addr, jnp.int32)
@@ -170,14 +241,23 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
         `RunResult.loaded_latency_ns` — the queueing curve is never
         evaluated for traffic that does not exist.
 
-    Args:
-      timing: the per-tier timing model (DRAM path; CXL path when no route).
-      cpus:   one CPUModel per batch row.
-      stats:  (B, nstats(T)) int counter matrix, rows ordered as
-              `cache.stat_names(T)` with T the number of targets.
-      route:  optional route map supplying per-target timings + groups.
+    Parameters
+    ----------
+    timing : TimingConfig
+        The per-tier timing model (DRAM path; CXL path when no route).
+    cpus : sequence of CPUModel
+        One per batch row (sweeps pass workload-adjusted models, e.g.
+        MLP collapsed to 1 for dependent-load traces).
+    stats : (B, nstats(T)) int array
+        Counter matrix, rows ordered as `cache.stat_names(T)` with T the
+        number of targets.
+    route : RouteMap, optional
+        Supplies per-target timings + shared-USP groups.
 
-    Returns one RunResult per row.
+    Returns
+    -------
+    list of RunResult
+        One per row.
     """
     stats = np.asarray(stats, np.int64)
     if route is None:

@@ -19,7 +19,7 @@ cache simulator.  The same policies drive framework-object placement in
 from __future__ import annotations
 
 import dataclasses
-from typing import Union
+from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +69,26 @@ class WeightedInterleave:
                                     self.dram_weight, self.cxl_weight)
 
 
-Policy = Union[ZNuma, FlatMode, WeightedInterleave]
+@dataclasses.dataclass(frozen=True)
+class ExplicitPageMap:
+    """A literal page->tier table: placement decided by a runtime, not a
+    policy formula.
+
+    This is how tier-aware managers (e.g. the paged KV cache's LRU
+    promotion/demotion) plug their *actual* residency into the simulator:
+    `page_tiers[p]` is 0 (DRAM/HBM) or 1 (CXL) for page `p`.  Stored as a
+    tuple so the policy stays hashable (policies ride frozen sweep specs).
+    """
+    page_tiers: Tuple[int, ...]
+
+    def tiers(self, n_pages: int) -> Array:
+        if n_pages != len(self.page_tiers):
+            raise ValueError(f"page map covers {len(self.page_tiers)} "
+                             f"pages, footprint has {n_pages}")
+        return jnp.asarray(self.page_tiers, jnp.int32)
+
+
+Policy = Union[ZNuma, FlatMode, WeightedInterleave, ExplicitPageMap]
 
 
 def tier_of_lines(policy: Policy, line_addr: Array, n_pages: int) -> Array:
@@ -80,8 +99,12 @@ def tier_of_lines(policy: Policy, line_addr: Array, n_pages: int) -> Array:
 
 
 def describe(policy: Policy) -> str:
+    """Short human-readable policy label (sweep row `policy` column)."""
     if isinstance(policy, ZNuma):
         return f"znuma(cxl={policy.cxl_fraction:.0%})"
     if isinstance(policy, FlatMode):
         return f"flat(dram_pages={policy.dram_pages})"
+    if isinstance(policy, ExplicitPageMap):
+        n = len(policy.page_tiers)
+        return f"pagemap({sum(policy.page_tiers)}/{n} cxl)"
     return f"interleave({policy.dram_weight}:{policy.cxl_weight})"

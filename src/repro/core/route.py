@@ -65,13 +65,41 @@ class TopologySpec:
 
 
 def direct(n: int = 1, gib: int = 16) -> TopologySpec:
-    """`n` direct-attach expanders, n-way interleaved under one bridge."""
+    """`n` direct-attach expanders, n-way interleaved under one bridge.
+
+    Parameters
+    ----------
+    n : int
+        Expander count (HDM interleave ways).
+    gib : int
+        Capacity per expander, GiB.
+
+    Returns
+    -------
+    TopologySpec
+        Named ``direct{n}``, sweepable via `SweepSpec.topologies`.
+    """
     return TopologySpec(name=f"direct{n}", expander_gib=(gib,) * n)
 
 
 def switched(n: int = 4, gib: int = 16,
              switch: Optional[SwitchConfig] = None) -> TopologySpec:
-    """`n` expanders pooled behind one CXL switch (shared USP)."""
+    """`n` expanders pooled behind one CXL switch (shared USP).
+
+    Parameters
+    ----------
+    n : int
+        Endpoints below the switch.
+    gib : int
+        Capacity per expander, GiB.
+    switch : SwitchConfig, optional
+        Switch parameters; defaults to an `n`-downstream-port switch.
+
+    Returns
+    -------
+    TopologySpec
+        Named ``switch{n}``; its endpoints share one USP bandwidth group.
+    """
     sw = switch or SwitchConfig(n_downstream=n)
     return TopologySpec(name=f"switch{n}", expander_gib=(gib,) * n,
                         switch=sw)
@@ -125,12 +153,52 @@ class RouteMap:
         """Per-access target id for a line-granular trace.
 
         The policy maps pages to {DRAM, CXL}; CXL lines then decode through
-        the committed HDM program(s).  With several regions (one per host
-        bridge) pages round-robin across regions — the OS interleaving its
-        allocations over multiple zNUMA nodes — and the HDM program
-        interleaves lines *within* each region.
+        the committed HDM program(s) — see :meth:`targets_of_tiered_lines`.
+
+        Parameters
+        ----------
+        policy : numa.Policy
+            Page-placement policy deciding the DRAM/CXL split.
+        line_addr : (N,) int32 array
+            Window-relative cacheline indices.
+        n_pages : int
+            Pages the footprint spans (the policy's domain).
+
+        Returns
+        -------
+        (N,) int32 array
+            Global target ids: 0 = DRAM, 1..K = expander endpoints.
         """
         tier = numa_mod.tier_of_lines(policy, line_addr, n_pages)
+        return self.targets_of_tiered_lines(tier, line_addr)
+
+    def targets_of_tiered_lines(self, tier: Array, line_addr: Array
+                                ) -> Array:
+        """Route lines whose DRAM/CXL intent is already decided.
+
+        This is the attribution step shared by the policy path and by
+        workloads that carry their own residency map (e.g. ``kv_decode``,
+        whose HBM/CXL split comes from the paged KV cache's tier map
+        rather than an OS policy): CXL-destined lines are pushed through
+        the region's committed HDM interleave program(s) to a concrete
+        endpoint.  With several regions (one per host bridge) pages
+        round-robin across regions — the OS interleaving its allocations
+        over multiple zNUMA nodes — and the HDM program interleaves lines
+        *within* each region.
+
+        Parameters
+        ----------
+        tier : (N,) int32 array
+            Per-access intent: 0 = local DRAM, nonzero = the CXL window.
+        line_addr : (N,) int32 array
+            Window-relative cacheline indices.
+
+        Returns
+        -------
+        (N,) int32 array
+            Global target ids: 0 = DRAM, 1..K = expander endpoints.
+        """
+        tier = jnp.asarray(tier, jnp.int32)
         if not self.programs:              # no CXL capacity: all DRAM
             return jnp.zeros_like(tier)
         line = jnp.asarray(line_addr, jnp.int32)
@@ -156,10 +224,24 @@ def build_route_from_system(sysmap: topo.SystemMap, timing: TimingConfig,
                             name: str = "system") -> RouteMap:
     """Route map over an enumerated system's committed decode chains.
 
-    Target 0 is local DRAM (`timing.dram`); every endpoint of every region
-    becomes a CXL target in enumeration order.  `switch` (optional) places
-    *all* endpoints behind one switch: their timing becomes the
-    switch-derived effective path and they share one USP bandwidth group.
+    Parameters
+    ----------
+    sysmap : topology.SystemMap
+        The enumeration result (committed HDM decoders per region).
+    timing : TimingConfig
+        Baseline per-tier timing; each target gets its effective path.
+    switch : SwitchConfig, optional
+        Places *all* endpoints behind one switch: their timing becomes
+        the switch-derived effective path and they share one USP
+        bandwidth group.
+    name : str
+        Label carried into sweep rows.
+
+    Returns
+    -------
+    RouteMap
+        Target 0 is local DRAM (`timing.dram`); every endpoint of every
+        region becomes a CXL target in enumeration order.
     """
     targets: List[Target] = [Target(0, "dram", "dram", timing.dram)]
     programs: List[InterleaveProgram] = []
@@ -191,6 +273,18 @@ def build_route(spec: TopologySpec, timing: TimingConfig) -> RouteMap:
     Runs the full driver-equivalent pass (bind checks, HDM decoder
     programming + commit) of :func:`repro.core.topology.enumerate_system` —
     the routed targets come from *committed* decoders, not an ad-hoc table.
+
+    Parameters
+    ----------
+    spec : TopologySpec
+        Sweepable topology shorthand (:func:`direct` / :func:`switched`).
+    timing : TimingConfig
+        Baseline per-tier timing the targets derive their paths from.
+
+    Returns
+    -------
+    RouteMap
+        Routable targets + the committed interleave programs.
     """
     sys_ = topo.System(dram_size=spec.dram_gib * topo.GiB)
     for i, gib in enumerate(spec.expander_gib):

@@ -113,15 +113,19 @@ class CXLRAMSim:
               cpus: Optional[Sequence[CPUModel]] = None,
               kernel: str = "triad",
               backend: str = "reference",
-              topologies: Optional[Sequence[route_mod.TopologySpec]] = None
-              ) -> List[Dict]:
-        """The full §IV grid — (topology x footprint x policy x CPU) —
-        batched.
+              topologies: Optional[Sequence[route_mod.TopologySpec]] = None,
+              workloads: Optional[Sequence] = None) -> List[Dict]:
+        """The full grid — (workload x topology x footprint x policy x
+        CPU) — batched.
 
-        Every (topology, footprint, policy) cell is simulated in one
-        vmapped device call; CPU models vary only the vectorized timing
-        fixed point.  Without `topologies` the legacy binary DRAM/CXL path
-        runs (bitwise-equal to a single direct-attach expander).
+        Every (workload, topology, footprint, policy) cell is simulated in
+        one vmapped device call; CPU models vary only the vectorized
+        timing fixed point.  Without `topologies` the legacy binary
+        DRAM/CXL path runs (bitwise-equal to a single direct-attach
+        expander); without `workloads` the grid is the paper's STREAM
+        suite.  Pass :mod:`repro.workloads` generators (pointer chase,
+        GUPS, KV-decode, MoE streaming) to open the scenario axis — see
+        ``docs/workloads.md``.
         """
         policies = tuple(policies) if policies else (
             numa_mod.ZNuma(cxl_fraction=1.0),)
@@ -131,7 +135,8 @@ class CXLRAMSim:
         spec = engine_mod.SweepSpec(
             footprint_factors=tuple(footprint_factors), policies=policies,
             cpus=cpus, kernel=kernel, backend=backend,
-            topologies=tuple(topologies) if topologies else ())
+            topologies=tuple(topologies) if topologies else (),
+            workloads=tuple(workloads) if workloads else ())
         return engine_mod.run_sweep(spec, self.config.cache,
                                     self.config.timing)
 

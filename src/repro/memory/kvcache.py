@@ -74,6 +74,18 @@ class PagedKVCache:
         kh, hd = self.cfg.n_kv_heads, self.cfg.head_dim
         return self.page_size * kh * hd * 2 * 2 * self.n_layers
 
+    def lines_per_page(self) -> int:
+        """Cachelines one KV page spans (>= 1) — the expansion factor the
+        trace generators (:mod:`repro.workloads.kv_decode`) use to turn
+        page-granular gathers into line-granular access traces."""
+        return max(self.page_bytes() // CACHELINE_BYTES, 1)
+
+    def tier_snapshot(self) -> np.ndarray:
+        """Copy of the per-page tier map (HBM=0 / CXL=1) at this instant;
+        trace recorders take it *before* a gather so each access carries
+        the residency the request actually saw (promotion lands after)."""
+        return self.tier.copy()
+
     def hbm_pages_in_use(self) -> int:
         used = [p for t in self.block_tables.values() for p in t]
         return int(sum(1 for p in used if self.tier[p] == HBM))

@@ -1,0 +1,56 @@
+"""On-device workload trace generators beyond STREAM.
+
+The scenario-diversity axis of the sweep: every generator implements the
+:class:`~repro.workloads.base.Workload` contract — a pure-JAX on-device
+trace builder paired with a bitwise-identical NumPy reference — and rides
+:class:`repro.core.engine.SweepSpec`'s ``workloads`` axis, so one vmapped
+device program sweeps workloads x topologies x footprints x policies.
+
+Generators (``repro.workloads.get(name)``):
+
+==================  ======================================================
+``stream``          the four STREAM kernels (the legacy default)
+``pointer_chase``   dependent loads over a permuted ring — idle-latency
+                    and cache-pollution probe, MLP collapses to 1
+``gups``            seeded random read-modify-write (HPCC RandomAccess)
+``kv_decode``       paged-attention decode gathers recorded from the real
+                    ``PagedKVCache`` + ``ContinuousBatcher`` serving loop,
+                    pages split HBM/CXL by the cache's own tier map
+``moe_stream``      top-k expert-weight streaming from a real MoE config
+==================  ======================================================
+
+See ``docs/workloads.md`` for semantics, seeding and the parity contract,
+and :func:`~repro.workloads.pollution.pollution_probe` for the LLC
+pollution metric reported by ``benchmarks/run.py --only workloads``.
+"""
+from repro.workloads.base import (Stream, Workload, WorkloadTrace,  # noqa: F401
+                                  full_period_affine, mix32)
+from repro.workloads.kv_decode import KVDecode  # noqa: F401
+from repro.workloads.microbench import Gups, PointerChase  # noqa: F401
+from repro.workloads.moe_stream import MoEStream  # noqa: F401
+from repro.workloads.pollution import pollution_probe  # noqa: F401
+
+REGISTRY = {
+    "stream": Stream,
+    "pointer_chase": PointerChase,
+    "gups": Gups,
+    "kv_decode": KVDecode,
+    "moe_stream": MoEStream,
+}
+
+WORKLOADS = tuple(REGISTRY)
+
+
+def get(name: str, **kwargs) -> Workload:
+    """Instantiate a workload by registry name.
+
+    Parameters
+    ----------
+    name : str
+        One of :data:`WORKLOADS`.
+    **kwargs
+        Forwarded to the workload dataclass (``seed=...``, etc.).
+    """
+    if name not in REGISTRY:
+        raise KeyError(f"unknown workload {name!r}; known: {WORKLOADS}")
+    return REGISTRY[name](**kwargs)

@@ -1,0 +1,271 @@
+"""Workload trace generators: the contract, the hash, and STREAM.
+
+The paper's pitch is exploring CXL expanders under *realistic* software —
+LLM inference traffic, latency-bound pointer chasing, random updates — not
+just bandwidth kernels.  Every workload in this package implements one
+contract (:class:`Workload`) with two mirrored generators:
+
+``device_trace``
+    Pure ``jax``/``lax`` ops producing the ``(addr, is_write[, tier])``
+    arrays directly on device — the batched engine
+    (:mod:`repro.core.engine`) stacks them without ever materializing the
+    trace on the host.
+``host_trace``
+    The NumPy twin of the same sequence, and the parity oracle: the device
+    and host traces must be **element-for-element equal**, so stats
+    computed from either are bitwise identical (test-enforced in
+    ``tests/test_workloads.py`` and asserted inside ``benchmarks/run.py
+    --only workloads``).
+
+Scope of the oracle: most generators execute one shared integer recurrence
+(a SplitMix-style 32-bit avalanche hash, full-period affine rings) under
+an ``xp`` array module, so the check pins jax/XLA uint32/int32 semantics
+and the device-side expansion against NumPy's — it is a cross-*backend*
+equivalence, not an independent reimplementation (the scenario logic
+itself, e.g. ``kv_decode``'s recorded serving loop, is shared).  The
+pointer chase is the exception: its device side is a ``lax.scan`` and its
+host side a plain Python loop, genuinely independent derivations of the
+same ring.
+
+Seeding
+-------
+Every stochastic workload carries an explicit ``seed`` field (part of its
+frozen dataclass identity).  Same seed => bitwise-identical traces on every
+backend; different seeds => different address sequences.  There is no
+hidden global RNG state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stream as stream_mod
+from repro.core.machine import CPUModel
+from repro.core.numa import LINES_PER_PAGE
+from repro.core.spec import CACHELINE_BYTES
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Shared integer recurrences (identical under numpy and jax.numpy)
+# ---------------------------------------------------------------------------
+def mix32(x, seed: int, xp):
+    """SplitMix-style 32-bit avalanche hash, identical under ``np``/``jnp``.
+
+    Parameters
+    ----------
+    x : array-like of uint-compatible ints
+        Counter values to hash (arrays, not scalars — NumPy only wraps
+        integer overflow silently for arrays).
+    seed : int
+        Stream selector, folded in before the first round.
+    xp : module
+        ``numpy`` or ``jax.numpy``; both wrap uint32 arithmetic mod 2**32.
+
+    Returns
+    -------
+    array of uint32
+        Hashed values, bitwise identical across the two array modules.
+    """
+    x = xp.asarray(x, xp.uint32)
+    x = (x ^ xp.uint32(seed & 0xFFFFFFFF)) * xp.uint32(0x9E3779B1)
+    x = (x ^ (x >> 16)) * xp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * xp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def mix32_int(x: int) -> int:
+    """Scalar Python-int twin of :func:`mix32` (parameter derivation)."""
+    x &= 0xFFFFFFFF
+    x = (x * 0x9E3779B1) & 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+    return x ^ (x >> 16)
+
+
+def full_period_affine(n: int, seed: int) -> Tuple[int, int, int]:
+    """Parameters of a full-period affine ring ``pos -> (a*pos + c) mod n``.
+
+    Satisfies the Hull–Dobell theorem for *any* ``n >= 2``: ``a - 1`` is
+    divisible by every prime factor of ``n`` (and by 4 when ``4 | n``) and
+    ``gcd(c, n) == 1`` — so iterating the map from any start visits every
+    residue exactly once per lap and returns to the start.  This is the
+    "permuted ring" the pointer-chase workload walks.
+
+    Parameters
+    ----------
+    n : int
+        Ring size (number of cache lines).
+    seed : int
+        Selects ``c`` and the start position ``p0``.
+
+    Returns
+    -------
+    (a, c, p0) : tuple of int
+        Multiplier, increment and start position, all in ``[0, n)``.
+    """
+    if n < 2:
+        raise ValueError(f"ring needs >= 2 lines, got {n}")
+    x, d, m = n, 2, 1
+    while d * d <= x:
+        if x % d == 0:
+            m *= d
+            while x % d == 0:
+                x //= d
+        d += 1
+    if x > 1:
+        m *= x
+    if n % 4 == 0 and m % 4 != 0:
+        m *= 2
+    a = (m + 1) % n
+    c = mix32_int(seed) % n
+    while math.gcd(c, n) != 1:
+        c = (c + 1) % n
+    p0 = mix32_int(seed ^ 0x5BF03635) % n
+    if a * (n - 1) + c >= 2 ** 31:
+        raise ValueError(f"ring of {n} lines overflows int32 chase "
+                         f"arithmetic (a={a})")
+    return a, c, p0
+
+
+# ---------------------------------------------------------------------------
+# The workload contract
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WorkloadTrace:
+    """One generated trace: per-access address/write streams (+ tier).
+
+    Attributes
+    ----------
+    addr : (N,) int32 array
+        Window-relative cacheline indices, device (`jnp`) or host (`np`).
+    is_write : (N,) int32/bool array
+        1/True for stores.
+    n_pages : int
+        Pages spanned by the address space — the domain a page-placement
+        policy (:mod:`repro.core.numa`) maps over.
+    tier : (N,) int32 array, optional
+        Per-access DRAM(0)/CXL(1) intent.  ``None`` means the placement
+        policy decides (STREAM, GUPS, pointer-chase, MoE streaming);
+        ``kv_decode`` supplies it from the paged KV cache's tier map, in
+        which case the policy axis is ignored and CXL-destined lines still
+        decode through the route's committed HDM programs.
+    """
+    addr: Array
+    is_write: Array
+    n_pages: int
+    tier: Optional[Array] = None
+
+    @property
+    def n_accesses(self) -> int:
+        return int(self.addr.shape[0])
+
+
+class Workload:
+    """Base class: a named, seedable, footprint-scalable trace generator.
+
+    Subclasses are frozen dataclasses (hashable — they ride the
+    :class:`repro.core.engine.SweepSpec` ``workloads`` axis) and implement
+    ``_trace(footprint_bytes, xp)`` once over an array module, or override
+    :meth:`device_trace` / :meth:`host_trace` when the two sides genuinely
+    differ (pointer chase: ``lax.scan`` on device, a Python loop on host).
+
+    Attributes
+    ----------
+    name : str
+        Row label in sweep results and benchmarks.
+    serial_deps : bool
+        True when every access depends on the previous one (pointer
+        chase): the timing model then collapses memory-level parallelism
+        to 1 outstanding miss regardless of the CPU model — dependent
+        loads cannot overlap, which is what makes the workload an
+        idle-latency probe.
+    """
+    name: str = "workload"
+    serial_deps: bool = False
+
+    def _trace(self, footprint_bytes: int, xp) -> WorkloadTrace:
+        raise NotImplementedError
+
+    def device_trace(self, footprint_bytes: int) -> WorkloadTrace:
+        """Generate the trace on device with pure ``jax`` ops.
+
+        Parameters
+        ----------
+        footprint_bytes : int
+            Working-set size; the §IV suite passes ``k * l2_bytes``.
+
+        Returns
+        -------
+        WorkloadTrace
+            ``jnp`` arrays, bitwise equal to :meth:`host_trace`.
+        """
+        return self._trace(footprint_bytes, jnp)
+
+    def host_trace(self, footprint_bytes: int) -> WorkloadTrace:
+        """NumPy reference generator — the parity oracle (same contract
+        as :meth:`device_trace`, ``np`` arrays)."""
+        return self._trace(footprint_bytes, np)
+
+    def cpu_for(self, cpu: CPUModel) -> CPUModel:
+        """CPU model that times this workload (MLP=1 for dependent loads)."""
+        if self.serial_deps and cpu.effective_mlp != 1:
+            return dataclasses.replace(cpu, mlp=1)
+        return cpu
+
+
+# ---------------------------------------------------------------------------
+# STREAM as a Workload (the legacy generator, same contract)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Stream(Workload):
+    """The four STREAM kernels (:mod:`repro.core.stream`) under the
+    workload contract; the engine's default axis entry.
+
+    Parameters
+    ----------
+    kernel : str
+        One of ``copy | scale | add | triad``.
+    """
+    kernel: str = "triad"
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"stream_{self.kernel}"
+
+    def device_trace(self, footprint_bytes: int) -> WorkloadTrace:
+        layout = stream_mod.layout_for_footprint(footprint_bytes)
+        addr, is_write = stream_mod.stream_trace(self.kernel, layout)
+        return WorkloadTrace(addr=addr, is_write=is_write,
+                             n_pages=layout.n_pages)
+
+    def host_trace(self, footprint_bytes: int) -> WorkloadTrace:
+        layout = stream_mod.layout_for_footprint(footprint_bytes)
+        reads, write = stream_mod._PATTERN[self.kernel]
+        n = layout.n_elems
+        line = np.arange(n, dtype=np.int32) // stream_mod.ELEMS_PER_LINE
+        cols = [np.int32(layout.base_line(r)) + line for r in reads]
+        cols.append(np.int32(layout.base_line(write)) + line)
+        addr = np.stack(cols, axis=1).reshape(-1)
+        is_write = np.tile(
+            np.asarray([0] * len(reads) + [1], np.int32), n)
+        return WorkloadTrace(addr=addr, is_write=is_write,
+                             n_pages=layout.n_pages)
+
+
+def lines_for_footprint(footprint_bytes: int) -> int:
+    """Cachelines covering a footprint (floor, >= 2)."""
+    return max(footprint_bytes // CACHELINE_BYTES, 2)
+
+
+def pages_for_lines(n_lines: int) -> int:
+    """4 KiB pages covering `n_lines` cachelines (ceil, >= 1)."""
+    return max(-(-n_lines // LINES_PER_PAGE), 1)

@@ -1,0 +1,119 @@
+"""Latency/locality microbenchmark generators: pointer chase and GUPS.
+
+``pointer_chase`` is the paper's idle-latency and cache-pollution probe:
+a dependent-load walk over a permuted ring of cachelines — exactly what
+Intel MLC's idle-latency mode and CXLMemSim's latency characterization
+issue.  Each access's address is the previous access's "pointee", so
+memory-level parallelism collapses to one outstanding miss
+(``serial_deps``) and the loaded latency *is* the runtime.
+
+``gups`` is the HPCC RandomAccess kernel (Giga-Updates Per Second): a
+seeded random read-modify-write stream over a power-of-two table —
+the bandwidth-at-zero-locality counterpoint to STREAM's unit stride.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.workloads.base import (Workload, WorkloadTrace,
+                                  full_period_affine, lines_for_footprint,
+                                  mix32, pages_for_lines)
+
+
+@functools.partial(jax.jit, static_argnames=("length",))
+def _chase_device(length: int, a, c, p0, n):
+    """`length` iterates of the affine ring as one `lax.scan` program."""
+    def step(pos, _):
+        return (pos * a + c) % n, pos
+
+    _, addr = jax.lax.scan(step, p0, None, length=length)
+    return addr
+
+
+@dataclasses.dataclass(frozen=True)
+class PointerChase(Workload):
+    """Dependent loads over a full-period permuted ring of cachelines.
+
+    The ring is the affine map ``pos -> (a*pos + c) mod n`` with
+    Hull–Dobell full-period parameters (:func:`~repro.workloads.base.
+    full_period_affine`), so one lap of ``n`` hops touches every line of
+    the footprint exactly once in a scrambled order — no spatial locality
+    for the prefetcher-free cache model, total temporal reuse between
+    laps.  All accesses are reads; ``serial_deps`` collapses MLP to 1.
+
+    Parameters
+    ----------
+    seed : int
+        Selects the ring increment and start position.
+    hops_per_line : int
+        Laps over the ring; the trace has ``hops_per_line * n_lines``
+        accesses.  Lap 1 is all compulsory misses, later laps measure
+        residency (hits when the footprint fits the LLC, misses when it
+        does not).
+    """
+    seed: int = 0
+    hops_per_line: int = 2
+
+    name = "pointer_chase"
+    serial_deps = True
+
+    def _ring(self, footprint_bytes: int):
+        n = lines_for_footprint(footprint_bytes)
+        return (n,) + full_period_affine(n, self.seed)
+
+    def device_trace(self, footprint_bytes: int) -> WorkloadTrace:
+        n, a, c, p0 = self._ring(footprint_bytes)
+        addr = _chase_device(self.hops_per_line * n, jnp.int32(a),
+                             jnp.int32(c), jnp.int32(p0), jnp.int32(n))
+        return WorkloadTrace(addr=addr,
+                             is_write=jnp.zeros(addr.shape[0], jnp.int32),
+                             n_pages=pages_for_lines(n))
+
+    def host_trace(self, footprint_bytes: int) -> WorkloadTrace:
+        n, a, c, p0 = self._ring(footprint_bytes)
+        h = self.hops_per_line * n
+        addr = np.empty(h, np.int32)
+        pos = p0
+        for t in range(h):
+            addr[t] = pos
+            pos = (pos * a + c) % n
+        return WorkloadTrace(addr=addr, is_write=np.zeros(h, np.int32),
+                             n_pages=pages_for_lines(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class Gups(Workload):
+    """Seeded random update (HPCC RandomAccess / GUPS).
+
+    Each update hashes its counter through :func:`~repro.workloads.base.
+    mix32` to a slot of a power-of-two table and issues a read followed by
+    a write of the same line (read-modify-write).  The table is the
+    largest power of two of lines fitting the footprint.
+
+    Parameters
+    ----------
+    seed : int
+        Hash stream selector; same seed => bitwise-identical trace.
+    updates_per_line : int
+        Trace has ``updates_per_line * table_lines`` updates (2 accesses
+        each).
+    """
+    seed: int = 1
+    updates_per_line: int = 2
+
+    name = "gups"
+
+    def _trace(self, footprint_bytes: int, xp) -> WorkloadTrace:
+        table = 1 << (lines_for_footprint(footprint_bytes).bit_length() - 1)
+        u = self.updates_per_line * table
+        idx = mix32(xp.arange(u, dtype=xp.uint32), self.seed, xp)
+        idx = (idx & xp.uint32(table - 1)).astype(xp.int32)
+        addr = xp.stack([idx, idx], axis=1).reshape(-1)
+        is_write = xp.tile(xp.asarray([0, 1], xp.int32), u)
+        return WorkloadTrace(addr=addr, is_write=is_write,
+                             n_pages=pages_for_lines(table))

@@ -1,0 +1,249 @@
+"""Workload generators: device/host parity, padding, seeding, sweep axis.
+
+The contract under test (ISSUE 3): every generator's on-device (pure jax)
+trace is element-for-element equal to its independent NumPy reference, so
+engine stats over either are **bitwise equal**; sentinel padding never
+changes stats; seeded generators are deterministic per seed; and the
+`SweepSpec.workloads` axis runs all generators x topologies in one
+batched program with correct labeling and MLP collapse for dependent
+loads.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import engine, numa, route
+from repro.core.machine import CPUModel
+from repro.core.timing import TimingConfig
+from repro.kernels.cache_sim import pad_trace
+from repro.workloads import (Gups, KVDecode, MoEStream, PointerChase,
+                             Stream, get, pollution_probe)
+from repro.workloads.base import full_period_affine
+from repro.workloads.kv_decode import _kv_scenario
+
+FP = 32 * 1024          # footprint under test
+CACHE = C.CacheParams(l1_bytes=4 * 1024, l1_ways=2,
+                      l2_bytes=16 * 1024, l2_ways=4)
+
+ALL = [PointerChase(seed=5), Gups(seed=9), KVDecode(seed=11, n_requests=4),
+       MoEStream(seed=3), Stream("triad"), Stream("add")]
+
+
+def _ids(wls):
+    return [w.name for w in wls]
+
+
+# ---------------------------------------------------------------------------
+# device vs host reference: element-for-element trace parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("wl", ALL, ids=_ids(ALL))
+def test_device_host_trace_parity(wl):
+    dev, host = wl.device_trace(FP), wl.host_trace(FP)
+    assert dev.n_pages == host.n_pages
+    np.testing.assert_array_equal(np.asarray(dev.addr), host.addr)
+    np.testing.assert_array_equal(
+        np.asarray(dev.is_write, np.int32), np.asarray(host.is_write,
+                                                       np.int32))
+    assert (dev.tier is None) == (host.tier is None)
+    if dev.tier is not None:
+        np.testing.assert_array_equal(np.asarray(dev.tier), host.tier)
+
+
+@pytest.mark.parametrize("wl", [PointerChase(seed=1), Gups(seed=2),
+                                KVDecode(seed=4, n_requests=3),
+                                MoEStream(seed=8)],
+                         ids=["pointer_chase", "gups", "kv_decode",
+                              "moe_stream"])
+def test_device_host_stat_parity_bitwise(wl):
+    """Stats from the device trace == stats from the host reference."""
+    dev, host = wl.device_trace(FP), wl.host_trace(FP)
+    pol = numa.ZNuma(1.0)
+
+    def tiers(t):
+        return (t.tier if t.tier is not None
+                else numa.tier_of_lines(pol, t.addr, t.n_pages))
+
+    s_dev, _ = engine.run_traces(CACHE, jnp.asarray(dev.addr)[None],
+                                 jnp.asarray(dev.is_write)[None],
+                                 tier=jnp.asarray(tiers(dev))[None])
+    s_host, _ = engine.run_traces(CACHE, jnp.asarray(host.addr)[None],
+                                  jnp.asarray(host.is_write)[None],
+                                  tier=jnp.asarray(tiers(host))[None])
+    np.testing.assert_array_equal(np.asarray(s_dev), np.asarray(s_host))
+
+
+# ---------------------------------------------------------------------------
+# sentinel-padding invariance
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("wl", [Gups(seed=2), KVDecode(seed=4,
+                                                       n_requests=3)],
+                         ids=["gups", "kv_decode"])
+def test_sentinel_padding_invariance(wl):
+    t = wl.device_trace(FP)
+    tier = (t.tier if t.tier is not None
+            else numa.tier_of_lines(numa.ZNuma(1.0), t.addr, t.n_pages))
+    args = tuple(jnp.asarray(x, jnp.int32) for x in
+                 (t.addr, t.is_write, tier))
+    plain, _ = engine.run_traces(CACHE, args[0][None], args[1][None],
+                                 tier=args[2][None])
+    n_pad = args[0].shape[0] + 137          # pad past a non-multiple
+    pa, pw, pt = pad_trace(n_pad, *args)
+    padded, _ = engine.run_traces(CACHE, pa[None], pw[None], tier=pt[None])
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(padded))
+
+
+# ---------------------------------------------------------------------------
+# determinism under seed
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls,kw", [(Gups, {}),
+                                    (KVDecode, {"n_requests": 3})],
+                         ids=["gups", "kv_decode"])
+def test_determinism_under_seed(cls, kw):
+    a = cls(seed=7, **kw).host_trace(FP)
+    _kv_scenario.cache_clear()       # force a genuine re-run, not a cache hit
+    b = cls(seed=7, **kw).host_trace(FP)
+    _kv_scenario.cache_clear()
+    c = cls(seed=8, **kw).host_trace(FP)
+    np.testing.assert_array_equal(a.addr, b.addr)
+    np.testing.assert_array_equal(a.is_write, b.is_write)
+    assert (a.addr.shape != c.addr.shape
+            or (a.addr != c.addr).any()), "seed must change the trace"
+
+
+def test_pointer_chase_full_period_ring():
+    """One lap visits every line exactly once (Hull–Dobell full period)."""
+    wl = PointerChase(seed=3, hops_per_line=1)
+    for fp in (8 * 1024, 12 * 1024):     # power-of-two and 3*2^k lines
+        t = wl.host_trace(fp)
+        n = fp // 64
+        assert t.n_accesses == n
+        np.testing.assert_array_equal(np.sort(t.addr), np.arange(n))
+
+
+def test_full_period_affine_rejects_tiny_ring():
+    with pytest.raises(ValueError):
+        full_period_affine(1, 0)
+
+
+def test_registry_get():
+    assert get("gups", seed=4) == Gups(seed=4)
+    with pytest.raises(KeyError):
+        get("nope")
+
+
+# ---------------------------------------------------------------------------
+# the workloads sweep axis
+# ---------------------------------------------------------------------------
+def test_sweep_workloads_by_topologies_one_program():
+    wls = (PointerChase(seed=1), Gups(seed=2),
+           KVDecode(seed=4, n_requests=3), MoEStream(seed=8))
+    topos = (route.direct(1), route.switched(2))
+    spec = engine.SweepSpec(
+        footprint_factors=(2,), policies=(numa.ZNuma(1.0),),
+        cpus=(CPUModel(kind="o3", mlp=8),), workloads=wls,
+        topologies=topos)
+    rows = engine.run_sweep(spec, CACHE, TimingConfig())
+    assert len(rows) == len(wls) * len(topos)
+    assert ([r["workload"] for r in rows]
+            == [w.name for _ in topos for w in wls])
+    assert {r["topology"] for r in rows} == {"direct1", "switch2"}
+    for r in rows:
+        assert r["stats"]["l1_hit"] + r["stats"]["l1_miss"] > 0
+        assert r["time_ns"] > 0
+
+
+def test_serial_deps_collapse_mlp():
+    """Pointer chase times identically under o3 mlp=8 and mlp=1 (dependent
+    loads cannot overlap), while GUPS exploits the parallelism."""
+    timing = TimingConfig()
+    spec = lambda wl, mlp: engine.SweepSpec(
+        footprint_factors=(2,), policies=(numa.ZNuma(1.0),),
+        cpus=(CPUModel(kind="o3", mlp=mlp),), workloads=(wl,))
+    chase8 = engine.run_sweep(spec(PointerChase(seed=1), 8), CACHE, timing)
+    chase1 = engine.run_sweep(spec(PointerChase(seed=1), 1), CACHE, timing)
+    assert chase8[0]["time_ns"] == chase1[0]["time_ns"]
+    gups8 = engine.run_sweep(spec(Gups(seed=2), 8), CACHE, timing)
+    gups1 = engine.run_sweep(spec(Gups(seed=2), 1), CACHE, timing)
+    assert gups8[0]["time_ns"] < gups1[0]["time_ns"]
+
+
+def test_kv_decode_routes_cxl_pages_to_expanders():
+    """kv_decode's own tier map drives target attribution: CXL-resident
+    pages land on expander targets through the committed HDM decode."""
+    wl = KVDecode(seed=4, n_requests=3)
+    t = wl.device_trace(FP)
+    assert t.tier is not None and int(jnp.sum(t.tier)) > 0
+    rm = route.build_route(route.direct(2), TimingConfig())
+    tgt = np.asarray(rm.targets_of_tiered_lines(t.tier, t.addr))
+    tier = np.asarray(t.tier)
+    assert (tgt[tier == 0] == 0).all()
+    assert set(np.unique(tgt[tier == 1])) <= {1, 2}
+    assert len(np.unique(tgt[tier == 1])) == 2   # 2-way interleave hit both
+
+
+def test_explicit_page_map_policy():
+    pm = numa.ExplicitPageMap(page_tiers=(0, 1, 1, 0))
+    tiers = np.asarray(numa.tier_of_lines(
+        pm, np.arange(4 * numa.LINES_PER_PAGE, dtype=np.int32), 4))
+    np.testing.assert_array_equal(
+        tiers, np.repeat([0, 1, 1, 0], numa.LINES_PER_PAGE))
+    assert "pagemap" in numa.describe(pm)
+    with pytest.raises(ValueError):
+        pm.tiers(8)
+
+
+def test_tier_owning_workload_dedupes_policy_cells():
+    """kv_decode ignores the policy axis: its cells are simulated once and
+    shared across policies (no duplicate MESI runs), while policy-driven
+    workloads still get one batch row per policy."""
+    spec = engine.SweepSpec(
+        footprint_factors=(1,),
+        policies=(numa.ZNuma(1.0), numa.WeightedInterleave(1, 1)),
+        cpus=(CPUModel(kind="o3", mlp=8),),
+        workloads=(KVDecode(seed=4, n_requests=3), Gups(seed=2)))
+    batch, cell_rows = engine.build_sweep_batch(spec, CACHE)
+    assert len(cell_rows) == 4            # 2 workloads x 2 policies
+    assert batch.batch == 3               # kv deduped, gups per-policy
+    assert cell_rows[0] == cell_rows[1]   # both kv cells -> one row
+    assert cell_rows[2] != cell_rows[3]
+    rows = engine.run_sweep(spec, CACHE, TimingConfig())
+    assert rows[0]["stats"] == rows[1]["stats"]       # shared kv stats
+    assert {r["policy"] for r in rows[:2]} == {
+        numa.describe(p) for p in spec.policies}
+
+
+def test_kernel_label_only_on_stream_rows():
+    spec = engine.SweepSpec(footprint_factors=(1,),
+                            policies=(numa.ZNuma(1.0),),
+                            workloads=(Stream("add"), Gups(seed=2)))
+    rows = engine.run_sweep(spec, CACHE, TimingConfig())
+    assert rows[0]["kernel"] == "add"
+    assert "kernel" not in rows[1]
+
+
+def test_legacy_sweep_unchanged_by_workload_axis():
+    """Empty `workloads` is the STREAM grid: same rows as an explicit
+    Stream workload, bitwise."""
+    timing = TimingConfig()
+    base = engine.SweepSpec(footprint_factors=(1, 2),
+                            policies=(numa.ZNuma(1.0),))
+    explicit = dataclasses.replace(base, workloads=(Stream("triad"),))
+    r0 = engine.run_sweep(base, CACHE, timing)
+    r1 = engine.run_sweep(explicit, CACHE, timing)
+    assert [r["stats"] for r in r0] == [r["stats"] for r in r1]
+    assert [r["time_ns"] for r in r0] == [r["time_ns"] for r in r1]
+    assert all(r["workload"] == "stream_triad" for r in r0)
+
+
+# ---------------------------------------------------------------------------
+# the cache-pollution probe
+# ---------------------------------------------------------------------------
+def test_pollution_probe_detects_cxl_eviction():
+    res = pollution_probe(CACHE)
+    assert res["probe_miss_rate_clean"] < 0.05     # resident probe: ~all hits
+    assert res["probe_miss_rate_polluted"] > 0.5   # burst evicted it
+    assert res["pollution_delta"] == pytest.approx(
+        res["probe_miss_rate_polluted"] - res["probe_miss_rate_clean"])

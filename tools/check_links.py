@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Markdown link checker for README.md and docs/ (stdlib only).
+
+Verifies that every relative link target in the repo's user-facing
+markdown exists, and that `#anchors` into markdown files match a heading
+(GitHub slug rules, approximately).  External http(s) links are not
+fetched.  Exits non-zero listing every broken link.
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#+\s+(.*)$", re.M)
+CODE_FENCE = re.compile(r"```.*?```", re.S)
+CODE_SPAN = re.compile(r"`[^`\n]*`")
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced blocks and inline code spans before link scanning."""
+    return CODE_SPAN.sub("", CODE_FENCE.sub("", text))
+
+
+def slug(heading: str) -> str:
+    """Approximate GitHub's heading -> anchor slug."""
+    h = heading.strip().lower()
+    h = "".join(c for c in h if c.isalnum() or c in " -_")
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set:
+    text = CODE_FENCE.sub("", path.read_text())
+    return {slug(h) for h in HEADING.findall(text)}
+
+
+def check(files) -> list:
+    bad = []
+    for f in files:
+        text = strip_code(f.read_text())
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, anchor = target.partition("#")
+            dest = (f.parent / path).resolve() if path else f
+            if path and not dest.exists():
+                bad.append(f"{f.relative_to(ROOT)}: missing file {target}")
+            elif anchor and dest.suffix == ".md" and dest.exists():
+                if slug(anchor) not in anchors_of(dest):
+                    bad.append(f"{f.relative_to(ROOT)}: missing anchor "
+                               f"{target}")
+    return bad
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    missing = [str(f) for f in files if not f.exists()]
+    if missing:
+        print("missing markdown sources:", ", ".join(missing))
+        return 1
+    bad = check(files)
+    for b in bad:
+        print("BROKEN:", b)
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if bad else 'all links OK'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
