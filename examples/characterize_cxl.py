@@ -117,3 +117,32 @@ print(f"\nLLC pollution (DRAM-resident pointer-chase probe vs a CXL GUPS "
       f"burst):\n  clean miss rate {pol['probe_miss_rate_clean']:.3f} -> "
       f"polluted {pol['probe_miss_rate_polluted']:.3f} "
       f"(delta {pol['pollution_delta']:.3f})")
+
+# --- dynamic tiering: what a TPP-style kernel daemon would recover -----------
+# The `tiering` axis (docs/tiering.md) carries the page->tier map as scan
+# state: per epoch, per-page access counters accumulate on device, the
+# hottest CXL pages promote to DRAM (coldest DRAM pages demote under
+# capacity pressure), and the migration traffic contends inside the same
+# timing fixed point.  `None` rows are the static baseline — bitwise-equal
+# to the rows above — and the whole axis still runs as ONE device program.
+from repro.core.tiering_dyn import DynamicTiering
+from repro.workloads import HotCold
+
+tier_spec = engine.SweepSpec(
+    footprint_factors=(8,),
+    policies=(numa.ZNuma(1.0),),           # static bind: everything on CXL
+    cpus=(CPUModel(kind="o3", mlp=8),),
+    workloads=(HotCold(hot_page_frac=0.25),),
+    tiering=(None, DynamicTiering(epoch_len=2048, budget=16, threshold=8)))
+tier_rows = engine.run_sweep(tier_spec, cache, cfg)
+print(f"\ndynamic tiering on the calibrated card (hot/cold workload, "
+      f"static zNUMA vs TPP-style promotion):")
+print(f"{'tiering':>22} {'time_ms':>8} {'bw_GB/s':>8} {'mig_GB/s':>9} "
+      f"{'migrated':>9}  dram_frac per epoch")
+for r in tier_rows:
+    fr = r.get("epoch_dram_frac")
+    fr_s = " ".join(f"{f:.2f}" for f in fr[:6]) if fr else "-"
+    print(f"{r['tiering']:>22} {r['time_ns']/1e6:>8.2f} "
+          f"{r['bw_total_gbps']:>8.2f} "
+          f"{r.get('migration_gbps', 0.0):>9.2f} "
+          f"{str(r.get('migrated_pages', '-')):>9}  {fr_s}")

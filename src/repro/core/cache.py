@@ -491,6 +491,41 @@ def stats_dict(stats: Array) -> Dict[str, int]:
     return {n: int(v) for n, v in zip(stat_names(t), stats)}
 
 
+def snapshot_deltas(snapshots) -> "np_mod.ndarray":
+    """Per-epoch counter deltas from cumulative stat snapshots.
+
+    The dynamic-tiering scan (:mod:`repro.core.tiering_dyn`) emits the
+    cumulative stats vector at every epoch-slot boundary; this turns the
+    ``(E, nstats)`` snapshot stack into per-slot deltas — row ``e`` is
+    exactly the counters epoch slot ``e`` contributed, so per-epoch miss
+    rates and per-epoch tier traffic splits fall out of the standard
+    :func:`stats_dict` machinery.
+    """
+    import numpy as np_mod
+    s = np_mod.asarray(snapshots, np_mod.int64)
+    if s.ndim != 2:
+        raise ValueError(f"snapshots must be (E, nstats), got {s.shape}")
+    return np_mod.diff(s, axis=0, prepend=np_mod.zeros((1, s.shape[1]),
+                                                       np_mod.int64))
+
+
+def dram_traffic_fraction(delta_stats, n_targets: int = 2):
+    """DRAM share of memory-line traffic per snapshot delta row.
+
+    ``(mem_read_dram + mem_write_dram) / (all reads + writes)`` for each
+    row of a :func:`snapshot_deltas` result; rows with no memory traffic
+    report 0.0.
+    """
+    import numpy as np_mod
+    d = np_mod.asarray(delta_stats, np_mod.int64)
+    wb = mem_write_base(n_targets)
+    reads = d[:, MEM_READ:MEM_READ + n_targets]
+    writes = d[:, wb:wb + n_targets]
+    total = reads.sum(axis=1) + writes.sum(axis=1)
+    dram = reads[:, 0] + writes[:, 0]
+    return np_mod.where(total > 0, dram / np_mod.maximum(total, 1), 0.0)
+
+
 def miss_rates(stats: Array) -> Dict[str, float]:
     s = stats_dict(stats)
     l1_acc = s["l1_hit"] + s["l1_miss"]

@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import cache as cache_mod
 from repro.core import numa as numa_mod
 from repro.core import route as route_mod
+from repro.core import tiering_dyn
 from repro.core.machine import CPUModel, RunResult, time_batch
 from repro.core.timing import TimingConfig
 
@@ -101,6 +102,14 @@ class SweepSpec:
         (:mod:`repro.workloads`) — pointer chase, GUPS, KV-decode, MoE
         streaming, STREAM.  Empty = ``(Stream(kernel),)``, the legacy
         STREAM-only grid (bitwise-identical rows).
+    tiering : tuple of Optional[tiering_dyn.DynamicTiering]
+        Scenario axis #3: epoch-based dynamic tiering
+        (:mod:`repro.core.tiering_dyn`).  ``None`` entries run static
+        placement — bitwise-equal to the legacy rows (test-enforced) —
+        while dynamic entries carry the page→tier map as scan state,
+        promote/demote at epoch boundaries and charge migration traffic
+        into the timing fixed point.  Mixed static/dynamic axes still
+        run as ONE vmapped device program.  Empty = static only.
     """
     footprint_factors: Tuple[int, ...] = (2, 4, 6, 8)
     policies: Tuple[numa_mod.Policy, ...] = (numa_mod.ZNuma(1.0),)
@@ -109,6 +118,7 @@ class SweepSpec:
     backend: str = "reference"
     topologies: Tuple[route_mod.TopologySpec, ...] = ()
     workloads: Tuple["Workload", ...] = ()
+    tiering: Tuple[Optional[tiering_dyn.DynamicTiering], ...] = ()
 
     @property
     def workload_axis(self) -> Tuple["Workload", ...]:
@@ -129,6 +139,12 @@ class SweepSpec:
     def topology_axis(self) -> Tuple[Optional[route_mod.TopologySpec], ...]:
         """The topology loop: `(None,)` = legacy binary-tier path."""
         return self.topologies if self.topologies else (None,)
+
+    @property
+    def tiering_axis(self) -> Tuple[
+            Optional[tiering_dyn.DynamicTiering], ...]:
+        """The tiering loop: `(None,)` = static placement only."""
+        return self.tiering if self.tiering else (None,)
 
 
 # ---------------------------------------------------------------------------
@@ -447,19 +463,22 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
     results = sweep_results(spec, cache, timing, chunk=chunk)
     rows: List[Dict] = []
     i = 0
-    for topo in spec.topology_axis:
-        for wl, k, pol in spec.sim_cells:
-            for _cpu in spec.cpus:
-                r = results[i]
-                row = {"workload": wl.name, "footprint_x_l2": k,
-                       "policy": numa_mod.describe(pol), "cpu": r.cpu,
-                       **r.row(), "stats": r.stats}
-                if isinstance(wl, Stream):   # no STREAM kernel ran otherwise
-                    row["kernel"] = wl.kernel
-                if topo is not None:
-                    row["topology"] = topo.name
-                rows.append(row)
-                i += 1
+    for tr in spec.tiering_axis:
+        for topo in spec.topology_axis:
+            for wl, k, pol in spec.sim_cells:
+                for _cpu in spec.cpus:
+                    r = results[i]
+                    row = {"workload": wl.name, "footprint_x_l2": k,
+                           "policy": numa_mod.describe(pol), "cpu": r.cpu,
+                           **r.row(), "stats": r.stats}
+                    if isinstance(wl, Stream):  # no STREAM kernel otherwise
+                        row["kernel"] = wl.kernel
+                    if topo is not None:
+                        row["topology"] = topo.name
+                    if spec.tiering:
+                        row["tiering"] = tiering_dyn.describe(tr)
+                    rows.append(row)
+                    i += 1
     return rows
 
 
@@ -488,13 +507,15 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
     Returns
     -------
     list of RunResult
-        One per grid row, ordered topology-major, then workload,
-        footprint, policy, cpu.
+        One per grid row, ordered tiering-major, then topology,
+        workload, footprint, policy, cpu.
     """
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}")
     routes = [None if tp is None else route_mod.build_route(tp, timing)
               for tp in spec.topology_axis]
+    if any(tr is not None for tr in spec.tiering_axis):
+        return _sweep_results_dynamic(spec, cache, timing, routes)
     t_max = max(2 if r is None else r.n_targets for r in routes)
     p = dataclasses.replace(cache, n_targets=t_max)
     batch, cell_rows = build_sweep_batch(spec, cache, chunk=chunk,
@@ -516,4 +537,213 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
         rows_stats = np.repeat(block, len(spec.cpus), axis=0)
         results.extend(time_batch(timing, rows_cpus, rows_stats,
                                   route=route))
+    # an explicit all-None tiering axis repeats the static block per
+    # entry — as independent copies, so no two rows share mutable state
+    out = list(results)
+    for _ in range(len(spec.tiering_axis) - 1):
+        out.extend(dataclasses.replace(
+            r, stats=dict(r.stats), miss_rates=dict(r.miss_rates),
+            achieved_gbps=dict(r.achieved_gbps),
+            loaded_latency_ns=dict(r.loaded_latency_ns))
+            for r in results)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dynamic tiering: the epoch-structured sweep path
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TieringBatch:
+    """Per-row inputs of the epoch program (see `tiering_dyn.run_dynamic`).
+
+    `batch.tier` carries the per-line CXL decode target for dynamic rows
+    and the final per-access target for static (`tiering=None`) rows —
+    `dyn_flag` selects which interpretation each row uses on device.
+    """
+    batch: TraceBatch
+    dyn_flag: np.ndarray            # (B,)  1 = page map routes, 0 = static
+    page_map0: Array                # (B, P) initial page -> {0, 1}
+    n_pages: np.ndarray             # (B,)
+    budget: np.ndarray              # (B,)
+    threshold: np.ndarray           # (B,)
+    period: np.ndarray              # (B,) slots per epoch
+    dram_cap: np.ndarray            # (B,)
+    page_target_lines: Array        # (B, P, T)
+    cell_rows: List[int]            # logical cell -> batch row
+
+
+_UNBOUNDED_PAGES = 1 << 30          # "no DRAM capacity pressure" sentinel
+
+
+def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
+                        routes: Sequence[Optional[route_mod.RouteMap]],
+                        slot: int, t_max: int) -> TieringBatch:
+    """Materialize the (tiering x topology x workload x footprint x
+    policy) batch for the epoch program.
+
+    Row dedup mirrors :func:`build_sweep_batch`: cells whose workload
+    owns its residency map are policy-independent (dynamic rows seed the
+    tierer with the first-touch page map of the workload's own tier
+    stream — :func:`repro.core.numa.first_touch_page_map`); every
+    ``tiering=None`` cell shares one row across all ``None`` entries.
+
+    Parameters
+    ----------
+    spec, cache
+        The grid (``spec.tiering_axis`` supplies the tiering entries).
+    routes : sequence of RouteMap or None
+        One per topology-axis entry.
+    slot : int
+        Epoch-scan granularity (gcd of the dynamic epoch lengths); the
+        stacked traces are sentinel-padded to a multiple of it.
+    t_max : int
+        Stats width (widest route).
+
+    Returns
+    -------
+    TieringBatch
+    """
+    cells = spec.sim_cells
+    cell_traces = {}
+    for wl, k, _ in cells:
+        if (wl, k) not in cell_traces:
+            cell_traces[(wl, k)] = wl.device_trace(k * cache.l2_bytes)
+    p_max = max(wt.n_pages for wt in cell_traces.values())
+    ptl_of = []
+    for route in routes:
+        if route is None:
+            ptl = jnp.zeros((p_max, t_max), jnp.int32) \
+                .at[:, 1].set(numa_mod.LINES_PER_PAGE)
+        else:
+            ptl = route.page_target_lines(p_max, width=t_max)
+        ptl_of.append(ptl)
+
+    traces: List[Tuple] = []
+    pmap0s: List[Array] = []
+    scalars: List[Tuple[int, int, int, int, int, int, int]] = []
+    row_of: Dict = {}
+    cell_rows: List[int] = []
+    for tri, tr in enumerate(spec.tiering_axis):
+        dynamic = tr is not None
+        tkey = tri if dynamic else -1   # all static entries share rows
+        for ti, route in enumerate(routes):
+            for wl, k, pol in cells:
+                wt = cell_traces[(wl, k)]
+                key = ((tkey, ti, wl, k) if wt.tier is not None
+                       else (tkey, ti, wl, k, pol))
+                if key not in row_of:
+                    if dynamic:
+                        tier = (jnp.ones_like(wt.addr) if route is None
+                                else route.cxl_targets_of_lines(wt.addr))
+                        if wt.tier is not None:
+                            pmap0 = numa_mod.first_touch_page_map(
+                                wt.tier, wt.addr, wt.n_pages)
+                        else:
+                            pmap0 = (pol.tiers(wt.n_pages) != 0) \
+                                .astype(jnp.int32)
+                        cap = (tr.dram_capacity_pages
+                               if tr.dram_capacity_pages is not None
+                               else _UNBOUNDED_PAGES)
+                        sc = (1, wt.n_pages, tr.budget, tr.threshold,
+                              tr.epoch_len // slot, cap, 0)
+                    else:
+                        # static rows: precomputed final targets, exactly
+                        # the legacy build_sweep_batch arithmetic
+                        if wt.tier is not None:
+                            tier = (wt.tier if route is None
+                                    else route.targets_of_tiered_lines(
+                                        wt.tier, wt.addr))
+                        elif route is None:
+                            tier = numa_mod.tier_of_lines(pol, wt.addr,
+                                                          wt.n_pages)
+                        else:
+                            tier = route.target_of_lines(pol, wt.addr,
+                                                         wt.n_pages)
+                        pmap0 = jnp.ones((wt.n_pages,), jnp.int32)
+                        sc = (0, wt.n_pages, 0, 1, 1,
+                              _UNBOUNDED_PAGES, 0)
+                    if wt.n_pages < p_max:   # pad: CXL, never eligible
+                        pmap0 = jnp.concatenate([
+                            jnp.asarray(pmap0, jnp.int32),
+                            jnp.ones((p_max - wt.n_pages,), jnp.int32)])
+                    traces.append((wt.addr, wt.is_write, None, tier))
+                    pmap0s.append(jnp.asarray(pmap0, jnp.int32))
+                    scalars.append(sc + (ti,))
+                    row_of[key] = len(traces) - 1
+                cell_rows.append(row_of[key])
+    batch = stack_device_traces(traces, pad_to_multiple=slot)
+    sc = np.asarray(scalars, np.int64)
+    return TieringBatch(
+        batch=batch, dyn_flag=sc[:, 0], page_map0=jnp.stack(pmap0s),
+        n_pages=sc[:, 1], budget=sc[:, 2], threshold=sc[:, 3],
+        period=sc[:, 4], dram_cap=sc[:, 5],
+        page_target_lines=jnp.stack([ptl_of[ti] for ti in sc[:, 7]]),
+        cell_rows=cell_rows)
+
+
+def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
+                           timing: TimingConfig,
+                           routes: Sequence[Optional[route_mod.RouteMap]]
+                           ) -> List[RunResult]:
+    """The epoch-structured twin of the static `sweep_results` body.
+
+    One `tiering_dyn.run_dynamic` device call simulates every
+    (tiering, topology, workload, footprint, policy) cell — static
+    (``tiering=None``) rows ride the same vmapped program with a zero
+    migration budget and their precomputed targets, so their stats stay
+    bitwise-equal to the legacy path (test-enforced).  Migration line
+    counts feed `time_batch(mig_lines=...)`; dynamic rows additionally
+    get `migrated_pages` and per-epoch DRAM hit-tier fractions.
+    """
+    if spec.backend != "reference":
+        raise NotImplementedError(
+            "dynamic tiering runs on the reference backend only "
+            "(the Pallas kernel has no page-map scan state yet)")
+    t_max = max(2 if r is None else r.n_targets for r in routes)
+    p = dataclasses.replace(cache, n_targets=t_max)
+    dyn = [tr for tr in spec.tiering_axis if tr is not None]
+    slot = tiering_dyn.slot_length(dyn)
+    for tr in dyn:
+        if tr.epoch_len % slot:
+            raise ValueError(
+                f"epoch_len {tr.epoch_len} is not a multiple of the "
+                f"sweep's epoch gcd {slot}")
+    k_max = max(1, max(tr.budget for tr in dyn))
+    tb = build_tiering_batch(spec, cache, routes, slot, t_max)
+    out = tiering_dyn.run_dynamic(
+        p, tb.batch.addr, tb.batch.is_write, tb.batch.core, tb.batch.tier,
+        slot_len=slot, k_max=k_max, dyn_flag=tb.dyn_flag,
+        page_map0=tb.page_map0, n_pages=tb.n_pages, budget=tb.budget,
+        threshold=tb.threshold, period=tb.period, dram_cap=tb.dram_cap,
+        page_target_lines=tb.page_target_lines)
+    stats = np.asarray(jax.block_until_ready(out.stats), np.int64)
+    mig = np.stack([np.asarray(out.mig_read, np.int64),
+                    np.asarray(out.mig_write, np.int64)], axis=1)
+    slots = np.asarray(out.slots, np.int64)          # (B, E, 4)
+    cells = spec.sim_cells
+    n_cells = len(cells)
+    n_cpus = len(spec.cpus)
+    rows_cpus = [wl.cpu_for(cpu) for wl, _k, _pol in cells
+                 for cpu in spec.cpus]
+    results: List[RunResult] = []
+    for tri, tr in enumerate(spec.tiering_axis):
+        for ti, route in enumerate(routes):
+            base = (tri * len(routes) + ti) * n_cells
+            block_rows = tb.cell_rows[base:base + n_cells]
+            t_route = 2 if route is None else route.n_targets
+            block = _narrow_stats(stats[block_rows], t_max, t_route)
+            mig_block = mig[block_rows][:, :, :t_route]
+            rows_stats = np.repeat(block, n_cpus, axis=0)
+            rows_mig = np.repeat(mig_block, n_cpus, axis=0)
+            res = time_batch(timing, rows_cpus, rows_stats, route=route,
+                             mig_lines=rows_mig)
+            if tr is not None:
+                period = tr.epoch_len // slot
+                for j, r in enumerate(res):
+                    br = block_rows[j // n_cpus]
+                    r.migrated_pages = int(slots[br, :, 2].sum()
+                                           + slots[br, :, 3].sum())
+                    r.epoch_dram_frac = tiering_dyn.epoch_fractions(
+                        slots[br], period)
+            results.extend(res)
     return results

@@ -85,6 +85,18 @@ class RunResult:
         target with no traffic keeps its *idle* latency.
     cpu : str
         The CPU model kind that timed this row.
+    migrated_pages : int
+        Pages moved by the dynamic tierer (promotions + demotions); 0
+        for static rows.
+    migration_gbps : float
+        Achieved bandwidth the migration traffic itself consumed at the
+        converged operating point (it contends inside the fixed point —
+        see `time_batch(mig_lines=...)`).
+    epoch_dram_frac : list of float, optional
+        Per-epoch DRAM hit-tier fractions (fraction of the epoch's
+        accesses whose backing tier was local DRAM).  ``None`` on rows
+        not timed under dynamic tiering — `row()` then omits the
+        migration columns entirely, keeping legacy rows bit-identical.
     """
     stats: Dict[str, int]
     miss_rates: Dict[str, float]
@@ -92,6 +104,9 @@ class RunResult:
     achieved_gbps: Dict[str, float]      # per target + 'cxl' aggregate+total
     loaded_latency_ns: Dict[str, float]
     cpu: str
+    migrated_pages: int = 0
+    migration_gbps: float = 0.0
+    epoch_dram_frac: Optional[List[float]] = None
 
     def per_target_keys(self) -> List[str]:
         """Ordered per-target CXL labels ('cxl0', 'cxl1', ...) if routed."""
@@ -115,6 +130,11 @@ class RunResult:
         for k in self.per_target_keys():
             out[f"bw_{k}_gbps"] = self.achieved_gbps[k]
             out[f"lat_{k}_ns"] = self.loaded_latency_ns[k]
+        # dynamic-tiering columns (only on rows the tierer timed)
+        if self.epoch_dram_frac is not None:
+            out["migrated_pages"] = self.migrated_pages
+            out["migration_gbps"] = self.migration_gbps
+            out["epoch_dram_frac"] = list(self.epoch_dram_frac)
         return out
 
 
@@ -213,7 +233,8 @@ def per_target_bw_columns(row: Dict) -> List[str]:
 # ---------------------------------------------------------------------------
 def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
                stats: np.ndarray,
-               route: "Optional[RouteMap]" = None) -> List[RunResult]:
+               route: "Optional[RouteMap]" = None,
+               mig_lines: Optional[np.ndarray] = None) -> List[RunResult]:
     """Close the Picard timing fixed point for a whole batch at once.
 
     The loaded-latency curve is monotone, so a handful of Picard iterations
@@ -253,6 +274,15 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
         number of targets.
     route : RouteMap, optional
         Supplies per-target timings + shared-USP groups.
+    mig_lines : (B, 2, T) int array, optional
+        Dynamic-tiering migration traffic (``[:, 0]`` lines read,
+        ``[:, 1]`` lines written, per target) from
+        :func:`repro.core.tiering_dyn.run_dynamic`.  The lines are added
+        to each target's demand inside the Picard iteration, so
+        migration contends for the same loaded-latency curves, USP
+        groups and bandwidth floors as the workload's own misses —
+        first-class bandwidth contention, reported per row as
+        ``RunResult.migration_gbps``.
 
     Returns
     -------
@@ -290,6 +320,19 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
     reads = [stats[:, cache_sim.MEM_READ + k].astype(np.float64)
              for k in range(n_t)]
     writes = [stats[:, wbase + k].astype(np.float64) for k in range(n_t)]
+    if mig_lines is not None:
+        mig = np.asarray(mig_lines, np.int64)
+        if mig.shape != (b, 2, n_t):
+            raise ValueError(f"mig_lines must be ({b}, 2, {n_t}), "
+                             f"got {mig.shape}")
+        # migration demand rides the same per-target queues/floors as
+        # the workload's own miss traffic
+        reads = [reads[k] + mig[:, 0, k] for k in range(n_t)]
+        writes = [writes[k] + mig[:, 1, k] for k in range(n_t)]
+        mig_bytes = mig.sum(axis=(1, 2)).astype(np.float64) \
+            * CACHELINE_BYTES
+    else:
+        mig_bytes = np.zeros(b)
     lines = [reads[k] + writes[k] for k in range(n_t)]
     bytes_ = [v * CACHELINE_BYTES for v in lines]
     gids = sorted({g for g in groups if g >= 0})
@@ -381,5 +424,6 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
         results.append(RunResult(
             stats=s, miss_rates=mr, time_ns=float(t_rep[i]),
             achieved_gbps=a, loaded_latency_ns=latd,
-            cpu=cpus[i].kind))
+            cpu=cpus[i].kind,
+            migration_gbps=float(mig_bytes[i] / max(t[i], 1.0))))
     return results

@@ -23,6 +23,7 @@ from typing import Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np_mod
 
 from repro.core.hdm import weighted_page_policy
 from repro.core.spec import CACHELINE_BYTES
@@ -96,6 +97,51 @@ def tier_of_lines(policy: Policy, line_addr: Array, n_pages: int) -> Array:
     page_tiers = policy.tiers(n_pages)
     page = jnp.asarray(line_addr, jnp.int32) // LINES_PER_PAGE
     return page_tiers[jnp.clip(page, 0, n_pages - 1)]
+
+
+def first_touch_page_map(tier: Array, line_addr: Array, n_pages: int,
+                         xp=jnp) -> Array:
+    """Page → tier map from a trace's *first* access to each page.
+
+    This is how workloads that carry their own per-access residency map
+    (e.g. ``kv_decode``, whose tier stream tracks the paged KV cache's
+    LRU movement) seed the dynamic tierer
+    (:mod:`repro.core.tiering_dyn`): each page's initial tier is the
+    tier of its first access; pages the trace never touches default to
+    CXL (1) so they neither occupy DRAM capacity nor become
+    promotion-eligible before first touch.
+
+    Parameters
+    ----------
+    tier : (N,) int array
+        Per-access tier intent (0 = DRAM, nonzero = CXL).
+    line_addr : (N,) int array
+        Line-granular trace; sentinel entries (< 0) are ignored.
+    n_pages : int
+        Pages the map covers.
+    xp : module
+        ``numpy`` or ``jax.numpy`` — both sides produce the identical
+        map (deterministic min-scatter, no duplicate-write races).
+
+    Returns
+    -------
+    (n_pages,) int32 array
+        Binary page map, 0 = DRAM, 1 = CXL.
+    """
+    line = xp.asarray(line_addr, xp.int32)
+    tier = (xp.asarray(tier, xp.int32) != 0).astype(xp.int32)
+    n = line.shape[0]
+    page = xp.clip(line // LINES_PER_PAGE, 0, n_pages - 1)
+    order = xp.arange(n, dtype=xp.int32)
+    slot = xp.where(line >= 0, order, n)
+    if xp is jnp:
+        first = jnp.full((n_pages,), n, jnp.int32).at[page].min(slot)
+    else:
+        first = np_mod.full((n_pages,), n, np_mod.int32)
+        np_mod.minimum.at(first, page, slot)
+    touched = first < n
+    return xp.where(touched, tier[xp.clip(first, 0, n - 1)],
+                    1).astype(xp.int32)
 
 
 def describe(policy: Policy) -> str:

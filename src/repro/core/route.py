@@ -201,19 +201,103 @@ class RouteMap:
         tier = jnp.asarray(tier, jnp.int32)
         if not self.programs:              # no CXL capacity: all DRAM
             return jnp.zeros_like(tier)
+        cxl_t = self.cxl_targets_of_lines(line_addr)
+        return jnp.where(tier == 0, 0, cxl_t).astype(jnp.int32)
+
+    def cxl_targets_of_lines(self, line_addr: Array) -> Array:
+        """The endpoint each line hits *if* it is CXL-resident.
+
+        The decode-only half of :meth:`targets_of_tiered_lines`: every
+        line is pushed through the committed HDM interleave program(s)
+        regardless of its current tier intent.  The dynamic tierer
+        (:mod:`repro.core.tiering_dyn`) precomputes this once per trace —
+        the evolving page map then only chooses DRAM *vs* this target,
+        so promotion/demotion never re-runs the decode.
+
+        Parameters
+        ----------
+        line_addr : (N,) int32 array
+            Window-relative cacheline indices.
+
+        Returns
+        -------
+        (N,) int32 array
+            Global CXL target ids in ``[1, n_targets)`` (zeros only when
+            the route has no CXL capacity at all).
+        """
         line = jnp.asarray(line_addr, jnp.int32)
+        if not self.programs:
+            return jnp.zeros_like(line)
         if len(self.programs) == 1:
             way, _ = self.programs[0].decode_lines(line)
-            cxl_t = jnp.asarray(self.programs[0].targets, jnp.int32)[way]
-        else:
-            page = line // numa_mod.LINES_PER_PAGE
-            region = page % len(self.programs)
-            cxl_t = jnp.zeros_like(line)
-            for i, prog in enumerate(self.programs):
-                way, _ = prog.decode_lines(line)
-                tgt = jnp.asarray(prog.targets, jnp.int32)[way]
-                cxl_t = jnp.where(region == i, tgt, cxl_t)
-        return jnp.where(tier == 0, 0, cxl_t).astype(jnp.int32)
+            return jnp.asarray(self.programs[0].targets, jnp.int32)[way]
+        page = line // numa_mod.LINES_PER_PAGE
+        region = page % len(self.programs)
+        cxl_t = jnp.zeros_like(line)
+        for i, prog in enumerate(self.programs):
+            way, _ = prog.decode_lines(line)
+            tgt = jnp.asarray(prog.targets, jnp.int32)[way]
+            cxl_t = jnp.where(region == i, tgt, cxl_t)
+        return cxl_t
+
+    def targets_of_dynamic_lines(self, page_tiers: Array, line_addr: Array
+                                 ) -> Array:
+        """Route lines through an *evolving* page → tier map.
+
+        The dynamic-tiering companion of :meth:`targets_of_tiered_lines`:
+        instead of a per-access tier array, the intent comes from a page
+        map (scan state of :func:`repro.core.tiering_dyn.run_dynamic`) —
+        ``page_tiers[p] == 0`` keeps page ``p``'s lines in DRAM, anything
+        else routes them through the committed HDM decode.
+
+        Parameters
+        ----------
+        page_tiers : (P,) int32 array
+            Page → {0 DRAM, nonzero CXL} intent (a snapshot of the
+            tierer's map).
+        line_addr : (N,) int32 array
+            Window-relative cacheline indices.
+
+        Returns
+        -------
+        (N,) int32 array
+            Global target ids: 0 = DRAM, 1..K = expander endpoints.
+        """
+        page_tiers = jnp.asarray(page_tiers, jnp.int32)
+        line = jnp.asarray(line_addr, jnp.int32)
+        page = jnp.clip(line // numa_mod.LINES_PER_PAGE, 0,
+                        page_tiers.shape[0] - 1)
+        return self.targets_of_tiered_lines(page_tiers[page], line)
+
+    def page_target_lines(self, n_pages: int,
+                          width: Optional[int] = None) -> Array:
+        """Per-page per-target line counts under the committed decode.
+
+        ``out[p, k]`` is how many of page ``p``'s ``LINES_PER_PAGE``
+        cachelines the HDM interleave maps to target ``k`` when the page
+        is CXL-resident — the attribution table the dynamic tierer uses
+        to charge migration traffic (a page's lines may interleave
+        across several endpoints).
+
+        Parameters
+        ----------
+        n_pages : int
+            Pages to tabulate.
+        width : int, optional
+            Stats width (>= ``self.n_targets``); batched sweeps pad to
+            the widest route.
+
+        Returns
+        -------
+        (n_pages, width) int32 array
+            Column 0 (local DRAM) is always zero.
+        """
+        t = width or self.n_targets
+        lines = jnp.arange(n_pages * numa_mod.LINES_PER_PAGE,
+                           dtype=jnp.int32)
+        tgt = self.cxl_targets_of_lines(lines)
+        page = lines // numa_mod.LINES_PER_PAGE
+        return jnp.zeros((n_pages, t), jnp.int32).at[page, tgt].add(1)
 
 
 # ---------------------------------------------------------------------------

@@ -114,18 +114,22 @@ class CXLRAMSim:
               kernel: str = "triad",
               backend: str = "reference",
               topologies: Optional[Sequence[route_mod.TopologySpec]] = None,
-              workloads: Optional[Sequence] = None) -> List[Dict]:
-        """The full grid — (workload x topology x footprint x policy x
-        CPU) — batched.
+              workloads: Optional[Sequence] = None,
+              tiering: Optional[Sequence] = None) -> List[Dict]:
+        """The full grid — (tiering x workload x topology x footprint x
+        policy x CPU) — batched.
 
-        Every (workload, topology, footprint, policy) cell is simulated in
-        one vmapped device call; CPU models vary only the vectorized
-        timing fixed point.  Without `topologies` the legacy binary
-        DRAM/CXL path runs (bitwise-equal to a single direct-attach
-        expander); without `workloads` the grid is the paper's STREAM
-        suite.  Pass :mod:`repro.workloads` generators (pointer chase,
-        GUPS, KV-decode, MoE streaming) to open the scenario axis — see
-        ``docs/workloads.md``.
+        Every (tiering, workload, topology, footprint, policy) cell is
+        simulated in one vmapped device call; CPU models vary only the
+        vectorized timing fixed point.  Without `topologies` the legacy
+        binary DRAM/CXL path runs (bitwise-equal to a single
+        direct-attach expander); without `workloads` the grid is the
+        paper's STREAM suite.  Pass :mod:`repro.workloads` generators
+        (pointer chase, GUPS, KV-decode, MoE streaming, hot/cold) to
+        open the scenario axis — see ``docs/workloads.md`` — and
+        :class:`repro.core.tiering_dyn.DynamicTiering` entries (``None``
+        = static, bitwise-equal to today's rows) to sweep epoch-based
+        hot-page promotion/demotion — see ``docs/tiering.md``.
         """
         policies = tuple(policies) if policies else (
             numa_mod.ZNuma(cxl_fraction=1.0),)
@@ -136,7 +140,8 @@ class CXLRAMSim:
             footprint_factors=tuple(footprint_factors), policies=policies,
             cpus=cpus, kernel=kernel, backend=backend,
             topologies=tuple(topologies) if topologies else (),
-            workloads=tuple(workloads) if workloads else ())
+            workloads=tuple(workloads) if workloads else (),
+            tiering=tuple(tiering) if tiering else ())
         return engine_mod.run_sweep(spec, self.config.cache,
                                     self.config.timing)
 

@@ -1,3 +1,4 @@
 """CXL-tier memory management: planner, paged KV cache, offload schedules."""
-from repro.memory.tiering import (MemoryPlan, TierSpec, kv_bytes_per_token,  # noqa: F401
+from repro.memory.tiering import (MemoryPlan, TierSpec,  # noqa: F401
+                                  dynamic_tiering, kv_bytes_per_token,
                                   plan_serving, plan_training)

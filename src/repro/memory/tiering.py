@@ -24,24 +24,73 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core import spec
+from repro.core.numa import PAGE_BYTES
+from repro.core.tiering_dyn import DynamicTiering
 from repro.core.timing import TimingConfig
-
-GiB = 2**30
+from repro.core.topology import GiB
 
 
 @dataclasses.dataclass(frozen=True)
 class TierSpec:
-    """Per-host capacities/bandwidths below HBM."""
+    """Per-host capacities/bandwidths below HBM — the one shared spec.
+
+    Units are explicit and match :class:`repro.core.timing.TimingConfig`
+    throughout: every ``*_bytes`` field is **bytes**, every ``*_gbps``
+    field is **GB/s** (= bytes/ns), never the raw bytes/s of the
+    ``repro.core.spec`` hardware constants (``TPU_V5E_PCIE_GBPS`` et al.
+    are bytes/s and get converted exactly once, here).  Both the static
+    planner below and the dynamic tierer
+    (:class:`repro.core.tiering_dyn.DynamicTiering`, via
+    :func:`dynamic_tiering`) draw their DRAM/CXL capacities from this
+    spec instead of re-declaring constants.
+    """
     hbm_bytes_per_device: int = int(spec.TPU_V5E_HBM_BYTES)
     hbm_reserved_frac: float = 0.10          # runtime/fragmentation reserve
     devices_per_host: int = 4                # v5e host topology
-    host_dram_bytes: int = 128 * GiB
-    cxl_bytes: int = 512 * GiB
-    host_staging_gbps: float = spec.TPU_V5E_PCIE_GBPS / 1e9  # chip<->host
+    host_dram_bytes: int = 128 * GiB         # bytes
+    cxl_bytes: int = 512 * GiB               # bytes
+    # chip<->host staging path, GB/s (spec constant is bytes/s)
+    host_staging_gbps: float = spec.TPU_V5E_PCIE_GBPS / 1e9
 
     @property
     def hbm_budget(self) -> int:
         return int(self.hbm_bytes_per_device * (1 - self.hbm_reserved_frac))
+
+    @property
+    def dram_pages(self) -> int:
+        """Host-DRAM capacity in 4 KiB pages (the tierer's unit)."""
+        return self.host_dram_bytes // PAGE_BYTES
+
+    @property
+    def cxl_pages(self) -> int:
+        """CXL-pool capacity in 4 KiB pages."""
+        return self.cxl_bytes // PAGE_BYTES
+
+
+def dynamic_tiering(tier: Optional[TierSpec] = None,
+                    dram_share: float = 1.0, **knobs) -> DynamicTiering:
+    """A :class:`~repro.core.tiering_dyn.DynamicTiering` whose DRAM
+    capacity comes from the shared :class:`TierSpec`.
+
+    Parameters
+    ----------
+    tier : TierSpec, optional
+        Capacity source (default :class:`TierSpec`).
+    dram_share : float
+        Fraction of the host's DRAM pages this workload may claim (other
+        tenants own the rest).
+    **knobs
+        Forwarded to :class:`~repro.core.tiering_dyn.DynamicTiering`
+        (``epoch_len``, ``budget``, ``threshold``).
+
+    Returns
+    -------
+    DynamicTiering
+        With ``dram_capacity_pages = dram_share * tier.dram_pages``.
+    """
+    tier = tier or TierSpec()
+    cap = max(int(tier.dram_pages * dram_share), 1)
+    return DynamicTiering(dram_capacity_pages=cap, **knobs)
 
 
 @dataclasses.dataclass

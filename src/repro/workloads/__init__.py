@@ -13,6 +13,8 @@ Generators (``repro.workloads.get(name)``):
 ``pointer_chase``   dependent loads over a permuted ring — idle-latency
                     and cache-pollution probe, MLP collapses to 1
 ``gups``            seeded random read-modify-write (HPCC RandomAccess)
+``hot_cold``        skewed-popularity random access over a scattered hot
+                    page set — the dynamic-tiering driver (docs/tiering.md)
 ``kv_decode``       paged-attention decode gathers recorded from the real
                     ``PagedKVCache`` + ``ContinuousBatcher`` serving loop,
                     pages split HBM/CXL by the cache's own tier map
@@ -26,7 +28,7 @@ pollution metric reported by ``benchmarks/run.py --only workloads``.
 from repro.workloads.base import (Stream, Workload, WorkloadTrace,  # noqa: F401
                                   full_period_affine, mix32)
 from repro.workloads.kv_decode import KVDecode  # noqa: F401
-from repro.workloads.microbench import Gups, PointerChase  # noqa: F401
+from repro.workloads.microbench import Gups, HotCold, PointerChase  # noqa: F401
 from repro.workloads.moe_stream import MoEStream  # noqa: F401
 from repro.workloads.pollution import pollution_probe  # noqa: F401
 
@@ -34,6 +36,7 @@ REGISTRY = {
     "stream": Stream,
     "pointer_chase": PointerChase,
     "gups": Gups,
+    "hot_cold": HotCold,
     "kv_decode": KVDecode,
     "moe_stream": MoEStream,
 }

@@ -1,4 +1,5 @@
-"""Latency/locality microbenchmark generators: pointer chase and GUPS.
+"""Latency/locality microbenchmark generators: pointer chase, GUPS,
+hot/cold.
 
 ``pointer_chase`` is the paper's idle-latency and cache-pollution probe:
 a dependent-load walk over a permuted ring of cachelines — exactly what
@@ -10,6 +11,12 @@ memory-level parallelism collapses to one outstanding miss
 ``gups`` is the HPCC RandomAccess kernel (Giga-Updates Per Second): a
 seeded random read-modify-write stream over a power-of-two table —
 the bandwidth-at-zero-locality counterpoint to STREAM's unit stride.
+
+``hot_cold`` is the dynamic tierer's driver: a skewed-popularity random
+stream where a small, scattered set of hot pages receives most of the
+accesses — the page-popularity shape TPP-style promotion exploits
+(:mod:`repro.core.tiering_dyn`), and the one where static zNUMA binding
+leaves most of the traffic on the slow tier.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.numa import LINES_PER_PAGE
 from repro.workloads.base import (Workload, WorkloadTrace,
                                   full_period_affine, lines_for_footprint,
                                   mix32, pages_for_lines)
@@ -117,3 +125,63 @@ class Gups(Workload):
         is_write = xp.tile(xp.asarray([0, 1], xp.int32), u)
         return WorkloadTrace(addr=addr, is_write=is_write,
                              n_pages=pages_for_lines(table))
+
+
+@dataclasses.dataclass(frozen=True)
+class HotCold(Workload):
+    """Skewed-popularity random access: a hot page set soaks the traffic.
+
+    A fraction ``hot_page_frac`` of the footprint's pages — scattered
+    evenly across the address space, so no contiguous-bind policy can
+    trivially cover them — receives ``hot_access_frac`` of all accesses;
+    the rest are uniform over the whole footprint.  Page popularity is
+    *stationary*, which is exactly the regime an epoch-based dynamic
+    tierer (:mod:`repro.core.tiering_dyn`) converges on: after a few
+    epochs the hot set lives in DRAM and the effective bandwidth beats
+    any static placement that left it on CXL.
+
+    All randomness flows through :func:`~repro.workloads.base.mix32`
+    under the shared ``xp`` recurrence — device and host traces are
+    bitwise identical.
+
+    Parameters
+    ----------
+    seed : int
+        Hash stream selector.
+    hot_page_frac : float
+        Fraction of the footprint's pages in the hot set (>= 1 page).
+    hot_access_frac : float
+        Fraction of accesses directed at the hot set.
+    accesses_per_line : int
+        Trace has ``accesses_per_line * n_lines`` accesses.
+    """
+    seed: int = 5
+    hot_page_frac: float = 0.125
+    hot_access_frac: float = 0.9
+    accesses_per_line: int = 4
+
+    name = "hot_cold"
+
+    def _trace(self, footprint_bytes: int, xp) -> WorkloadTrace:
+        n_lines = lines_for_footprint(footprint_bytes)
+        n_pages = pages_for_lines(n_lines)
+        n_hot = max(1, int(n_pages * self.hot_page_frac))
+        stride = max(n_pages // n_hot, 1)    # evenly scattered hot pages
+        hot_pages = (xp.arange(n_hot, dtype=xp.int32) * stride
+                     + stride // 2) % n_pages
+        n_acc = self.accesses_per_line * n_lines
+        ctr = xp.arange(n_acc, dtype=xp.uint32)
+        gate = mix32(ctr, self.seed, xp)
+        pick = mix32(ctr, self.seed ^ 0x9E3779B9, xp)
+        off = mix32(ctr, self.seed ^ 0x7F4A7C15, xp)
+        to_hot = (gate % xp.uint32(1024)) \
+            < xp.uint32(int(self.hot_access_frac * 1024))
+        hot_line = (hot_pages[(pick % xp.uint32(n_hot)).astype(xp.int32)]
+                    * xp.int32(LINES_PER_PAGE)
+                    + (off % xp.uint32(LINES_PER_PAGE)).astype(xp.int32))
+        cold_line = (pick % xp.uint32(n_lines)).astype(xp.int32)
+        addr = xp.clip(xp.where(to_hot, hot_line, cold_line),
+                       0, n_lines - 1).astype(xp.int32)
+        is_write = ((off >> xp.uint32(8)) % xp.uint32(4) == 0) \
+            .astype(xp.int32)                # ~25% read-modify-writes
+        return WorkloadTrace(addr=addr, is_write=is_write, n_pages=n_pages)

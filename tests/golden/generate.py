@@ -1,0 +1,30 @@
+"""Regenerate the golden-stats fixtures (deliberate drift only).
+
+    PYTHONPATH=src:tests python tests/golden/generate.py
+
+Rewrites one ``<family>.json`` per entry of
+``test_golden_stats.GOLDEN_CASES``.  Do this only when a change to the
+simulator's numbers is intended — the tier-1 suite pins these rows
+exactly.
+"""
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE.parent))                 # tests/
+sys.path.insert(0, str(HERE.parent.parent / "src"))  # src/
+
+from test_golden_stats import GOLDEN_CASES, GOLDEN_DIR  # noqa: E402
+
+
+def main() -> None:
+    for family, fn in sorted(GOLDEN_CASES.items()):
+        row = json.loads(json.dumps(fn()))
+        path = GOLDEN_DIR / f"{family}.json"
+        path.write_text(json.dumps(row, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

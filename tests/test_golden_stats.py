@@ -1,0 +1,77 @@
+"""Golden-stats regression fixtures: the numbers may not drift.
+
+One pinned `RunResult.row()` per existing benchmark family (engine,
+topology, workloads), checked in under ``tests/golden/`` and asserted
+**exactly equal** — integer counters bitwise, floats to the last ulp
+(JSON round-trips Python floats exactly).  Any refactor that changes
+these rows changes the numbers the ``BENCH_*.json`` trajectory depends
+on and must regenerate the fixtures *deliberately*:
+
+    PYTHONPATH=src:tests python tests/golden/generate.py
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import cache as C
+from repro.core import engine, numa
+from repro.core import route as route_mod
+from repro.core.machine import CPUModel
+from repro.core.timing import TimingConfig
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+_CACHE = C.CacheParams(l1_bytes=8 * 1024, l1_ways=2,
+                       l2_bytes=16 * 1024, l2_ways=8)
+_TIMING = TimingConfig()
+_CPU = (CPUModel(kind="o3", mlp=8),)
+
+
+def _one_row(spec: engine.SweepSpec) -> dict:
+    rows = engine.run_sweep(spec, _CACHE, _TIMING)
+    assert len(rows) == 1
+    return rows[0]
+
+
+def _engine_row() -> dict:
+    """The fig5/engine family: STREAM triad, binary tier, one cell."""
+    return _one_row(engine.SweepSpec(
+        footprint_factors=(2,),
+        policies=(numa.WeightedInterleave(1, 1),), cpus=_CPU))
+
+
+def _topology_row() -> dict:
+    """The topology family: 2 interleaved expanders, committed HDM."""
+    return _one_row(engine.SweepSpec(
+        footprint_factors=(2,), policies=(numa.ZNuma(1.0),), cpus=_CPU,
+        topologies=(route_mod.direct(2),)))
+
+
+def _workloads_row() -> dict:
+    """The workloads family: GUPS random read-modify-write, CXL-bound."""
+    from repro.workloads import Gups
+    return _one_row(engine.SweepSpec(
+        footprint_factors=(2,), policies=(numa.ZNuma(1.0),), cpus=_CPU,
+        workloads=(Gups(),)))
+
+
+GOLDEN_CASES = {
+    "engine": _engine_row,
+    "topology": _topology_row,
+    "workloads": _workloads_row,
+}
+
+
+@pytest.mark.parametrize("family", sorted(GOLDEN_CASES))
+def test_golden_row_exact(family):
+    path = GOLDEN_DIR / f"{family}.json"
+    assert path.exists(), (
+        f"missing fixture {path}; generate with "
+        f"PYTHONPATH=src:tests python tests/golden/generate.py")
+    want = json.loads(path.read_text())
+    got = json.loads(json.dumps(GOLDEN_CASES[family]()))  # normalize types
+    assert got == want, (
+        f"golden row for {family!r} drifted; if the change is "
+        f"intentional, regenerate tests/golden/ and justify it in the "
+        f"PR (the BENCH_*.json trajectory depends on these numbers)")

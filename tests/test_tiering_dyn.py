@@ -1,0 +1,364 @@
+"""Epoch-based dynamic tiering: device/host parity, legacy equality,
+properties.
+
+The contract under test (ISSUE acceptance):
+
+* the device epoch program (`tiering_dyn.run_dynamic`) and the NumPy
+  host twin (`tiering_dyn.host_simulate`) agree **bitwise** — per-epoch
+  stat snapshots, final page maps, migration counters, slot counters;
+* `SweepSpec(tiering=...)` rows with a `None` entry are bitwise-equal
+  to the pre-tiering static path;
+* hot-page hit-tier fraction is non-decreasing across epochs for a
+  stationary pointer-chase ring (monotone promotion);
+* promotions/demotions per epoch never exceed the migration budget;
+* sentinel padding to (and past) the next epoch boundary changes
+  neither stats nor the final page map;
+* the epoch hotness-key encode/decode round-trips (hypothesis shim).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import cache as C
+from repro.core import engine, numa
+from repro.core import route as route_mod
+from repro.core import tiering_dyn as td
+from repro.core.machine import CPUModel
+from repro.core.numa import LINES_PER_PAGE
+from repro.core.timing import TimingConfig
+from repro.workloads import Gups, HotCold, PointerChase
+
+RNG = np.random.default_rng(11)
+
+CACHE = C.CacheParams(l1_bytes=8 * 1024, l1_ways=2,
+                      l2_bytes=16 * 1024, l2_ways=8)
+TIMING = TimingConfig()
+
+
+def _run_one(cfg, addr, is_write, ct, pmap0, n_pages, ptl, slot, p,
+             cap=None):
+    """Device program on a single sentinel-padded row; returns DynOutputs."""
+    n = addr.shape[0]
+    assert n % slot == 0
+    budget = 0 if cfg is None else cfg.budget
+    period = 1 if cfg is None else cfg.epoch_len // slot
+    thr = 1 if cfg is None else cfg.threshold
+    if cap is None:
+        cap = (1 << 30) if (cfg is None or cfg.dram_capacity_pages is None) \
+            else cfg.dram_capacity_pages
+    return td.run_dynamic(
+        p, addr[None], is_write[None], None, ct[None],
+        slot_len=slot, k_max=max(1, budget), dyn_flag=np.asarray([1]),
+        page_map0=np.asarray(pmap0)[None], n_pages=np.asarray([n_pages]),
+        budget=np.asarray([budget]), threshold=np.asarray([thr]),
+        period=np.asarray([period]), dram_cap=np.asarray([cap]),
+        page_target_lines=np.asarray(ptl)[None])
+
+
+def _pad(x, n_to, fill=0):
+    return np.concatenate([np.asarray(x, np.int32),
+                           np.full(n_to - len(x), fill, np.int32)])
+
+
+def _gups_inputs(slot=128, k=2, cap=None):
+    """A padded gups row + binary-tier metadata (T=2)."""
+    wt = Gups(seed=9).host_trace(k * CACHE.l2_bytes)
+    n_pages = wt.n_pages
+    n = wt.addr.shape[0]
+    n_pad = -(-n // slot) * slot
+    addr = _pad(wt.addr, n_pad, td.SENTINEL)
+    is_write = _pad(wt.is_write, n_pad)
+    ct = np.ones(n_pad, np.int32)
+    pmap0 = np.asarray(numa.ZNuma(1.0).tiers(n_pages), np.int32)
+    ptl = np.zeros((n_pages, 2), np.int32)
+    ptl[:, 1] = LINES_PER_PAGE
+    return addr, is_write, ct, pmap0, n_pages, ptl
+
+
+# ---------------------------------------------------------------------------
+# device <-> host bitwise parity (per epoch)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cap", [None, 2])
+def test_device_host_parity_binary(cap):
+    """Stats/snapshots/map/migration parity on the binary-tier path.
+
+    cap=2 forces DRAM capacity pressure, so demotions run too.
+    """
+    slot = 128
+    cfg = td.DynamicTiering(epoch_len=256, budget=3, threshold=2,
+                            dram_capacity_pages=cap)
+    addr, is_write, ct, pmap0, n_pages, ptl = _gups_inputs(slot=slot)
+    p = dataclasses.replace(CACHE, n_targets=2)
+    out = _run_one(cfg, addr, is_write, ct, pmap0, n_pages, ptl, slot, p)
+    host = td.host_simulate(cfg, addr, ct, pmap0, n_pages, ptl, slot)
+
+    # final stats: host-derived target sequence through the static engine
+    stats_h, _ = engine.run_traces(p, addr[None], is_write[None],
+                                   tier=host.target[None])
+    np.testing.assert_array_equal(np.asarray(out.stats[0]),
+                                  np.asarray(stats_h[0]))
+    np.testing.assert_array_equal(np.asarray(out.page_map[0]),
+                                  host.page_map)
+    np.testing.assert_array_equal(np.asarray(out.mig_read[0]),
+                                  host.mig_read)
+    np.testing.assert_array_equal(np.asarray(out.mig_write[0]),
+                                  host.mig_write)
+    np.testing.assert_array_equal(np.asarray(out.slots[0]), host.slots)
+    # per-epoch snapshots: sampled slot prefixes agree bitwise (each
+    # prefix length is its own XLA compile, so sample rather than sweep)
+    n_slots = addr.shape[0] // slot
+    for e in sorted({0, 1, n_slots // 2, n_slots - 1}):
+        m = (e + 1) * slot
+        stats_e, _ = engine.run_traces(p, addr[:m][None],
+                                       is_write[:m][None],
+                                       tier=host.target[:m][None])
+        np.testing.assert_array_equal(np.asarray(out.snapshots[0, e]),
+                                      np.asarray(stats_e[0]),
+                                      err_msg=f"epoch slot {e}")
+    # snapshot digests: per-slot deltas re-sum to the final counters, and
+    # promotion moves memory traffic toward DRAM over the run
+    deltas = C.snapshot_deltas(out.snapshots[0])
+    np.testing.assert_array_equal(deltas.sum(axis=0),
+                                  np.asarray(out.stats[0], np.int64))
+    frac = C.dram_traffic_fraction(deltas, n_targets=2)
+    assert ((0.0 <= frac) & (frac <= 1.0)).all()
+    assert frac[-1] > frac[0]
+
+
+def test_device_host_parity_multi_target():
+    """Parity with a 2-expander route: migration attribution follows the
+    committed HDM interleave (a page's lines split across endpoints)."""
+    slot = 128
+    cfg = td.DynamicTiering(epoch_len=128, budget=2, threshold=1)
+    route = route_mod.build_route(route_mod.direct(2), TIMING)
+    wt = HotCold(seed=4).host_trace(2 * CACHE.l2_bytes)
+    n = wt.addr.shape[0]
+    n_pad = -(-n // slot) * slot
+    addr = _pad(wt.addr, n_pad, td.SENTINEL)
+    is_write = _pad(wt.is_write, n_pad)
+    ct = np.asarray(route.cxl_targets_of_lines(addr), np.int32)
+    pmap0 = np.ones(wt.n_pages, np.int32)
+    ptl = np.asarray(route.page_target_lines(wt.n_pages), np.int32)
+    assert (ptl[:, 0] == 0).all() and (ptl.sum(axis=1)
+                                       == LINES_PER_PAGE).all()
+    p = dataclasses.replace(CACHE, n_targets=route.n_targets)
+    out = _run_one(cfg, addr, is_write, ct, pmap0, wt.n_pages, ptl, slot, p)
+    host = td.host_simulate(cfg, addr, ct, pmap0, wt.n_pages, ptl, slot)
+    stats_h, _ = engine.run_traces(p, addr[None], is_write[None],
+                                   tier=host.target[None])
+    np.testing.assert_array_equal(np.asarray(out.stats[0]),
+                                  np.asarray(stats_h[0]))
+    np.testing.assert_array_equal(np.asarray(out.page_map[0]),
+                                  host.page_map)
+    np.testing.assert_array_equal(np.asarray(out.mig_read[0]),
+                                  host.mig_read)
+    np.testing.assert_array_equal(np.asarray(out.mig_write[0]),
+                                  host.mig_write)
+    # both endpoints moved migration lines (the interleave splits pages)
+    assert host.mig_read[1] > 0 and host.mig_read[2] > 0
+
+
+# ---------------------------------------------------------------------------
+# tiering=None rows: bitwise-equal to the pre-tiering static path
+# ---------------------------------------------------------------------------
+def test_tiering_none_rows_bitwise_equal_legacy():
+    fps = (1, 2)
+    policies = (numa.ZNuma(1.0), numa.WeightedInterleave(1, 1))
+    cpus = (CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8))
+    dyn = td.DynamicTiering(epoch_len=256, budget=2)
+    mixed = engine.run_sweep(
+        engine.SweepSpec(footprint_factors=fps, policies=policies,
+                         cpus=cpus, tiering=(None, dyn)), CACHE, TIMING)
+    legacy = engine.run_sweep(
+        engine.SweepSpec(footprint_factors=fps, policies=policies,
+                         cpus=cpus), CACHE, TIMING)
+    static_rows = [r for r in mixed if r["tiering"] == "static"]
+    assert len(static_rows) == len(legacy) > 0
+    for got, want in zip(static_rows, legacy):
+        assert got["stats"] == want["stats"]     # bitwise counters
+        for key in want:
+            if key == "stats":
+                continue
+            assert got[key] == want[key], key    # incl. exact floats
+        # legacy row schema untouched: no migration columns leak in
+        assert "migrated_pages" not in got and "migrated_pages" not in want
+
+
+def test_tiering_composes_with_topologies_one_program():
+    topos = (route_mod.direct(1), route_mod.direct(2))
+    dyn = td.DynamicTiering(epoch_len=128, budget=2)
+    spec = engine.SweepSpec(
+        footprint_factors=(1,), policies=(numa.ZNuma(1.0),),
+        cpus=(CPUModel(kind="o3", mlp=8),), topologies=topos,
+        workloads=(HotCold(seed=4),), tiering=(None, dyn))
+    rows = engine.run_sweep(spec, CACHE, TIMING)
+    assert len(rows) == 2 * 2   # tiering x topology
+    legacy = engine.run_sweep(dataclasses.replace(spec, tiering=()),
+                              CACHE, TIMING)
+    static_rows = [r for r in rows if r["tiering"] == "static"]
+    for got, want in zip(static_rows, legacy):
+        assert got["stats"] == want["stats"]
+    d2 = next(r for r in rows if r["tiering"] != "static"
+              and r["topology"] == "direct2")
+    assert d2["migrated_pages"] > 0
+    assert d2["migration_gbps"] > 0.0
+    assert len(d2["epoch_dram_frac"]) >= 2
+
+
+# ---------------------------------------------------------------------------
+# properties: monotone promotion, budget invariant
+# ---------------------------------------------------------------------------
+def test_hot_fraction_monotone_on_stationary_ring():
+    """A stationary pointer-chase ring touches every page uniformly each
+    lap; with one lap per epoch and ample DRAM capacity the promoted set
+    only grows, so the DRAM hit-tier fraction is non-decreasing."""
+    wl = PointerChase(hops_per_line=6)
+    n_lines = 256               # 1 x L2 with the test cache
+    dyn = td.DynamicTiering(epoch_len=n_lines, budget=1, threshold=1)
+    spec = engine.SweepSpec(
+        footprint_factors=(1,), policies=(numa.ZNuma(1.0),),
+        cpus=(CPUModel(kind="o3", mlp=8),), workloads=(wl,),
+        tiering=(dyn,))
+    rows = engine.run_sweep(spec, CACHE, TIMING)
+    fracs = rows[0]["epoch_dram_frac"]
+    assert len(fracs) == wl.hops_per_line
+    assert all(b >= a for a, b in zip(fracs, fracs[1:]))
+    assert fracs[0] == 0.0 and fracs[-1] > 0.0
+
+
+@pytest.mark.parametrize("budget,cap", [(1, None), (3, None), (2, 2)])
+def test_migration_budget_invariant(budget, cap):
+    slot = 128
+    cfg = td.DynamicTiering(epoch_len=128, budget=budget, threshold=1,
+                            dram_capacity_pages=cap)
+    addr, is_write, ct, pmap0, n_pages, ptl = _gups_inputs(slot=slot)
+    p = dataclasses.replace(CACHE, n_targets=2)
+    out = _run_one(cfg, addr, is_write, ct, pmap0, n_pages, ptl, slot, p)
+    slots = np.asarray(out.slots[0])
+    assert (slots[:, 2] <= budget).all()     # promotions per epoch
+    assert (slots[:, 3] <= budget).all()     # demotions per epoch
+    assert slots[:, 2].sum() > 0             # something actually moved
+    if cap is None:
+        assert slots[:, 3].sum() == 0        # no pressure -> no demotion
+    else:
+        # capacity is enforced: DRAM pages never exceed cap
+        assert int((np.asarray(out.page_map[0])[:n_pages] == 0).sum()) \
+            <= cap
+
+
+# ---------------------------------------------------------------------------
+# sentinel-padding invariance at epoch boundaries
+# ---------------------------------------------------------------------------
+def test_padding_to_epoch_boundary_is_inert():
+    slot = 128
+    cfg = td.DynamicTiering(epoch_len=128, budget=2, threshold=1)
+    wt = Gups(seed=13).host_trace(CACHE.l2_bytes)
+    n = wt.addr.shape[0]
+    n1 = -(-n // slot) * slot            # next boundary
+    n2 = n1 + 2 * slot                   # two extra all-sentinel epochs
+    p = dataclasses.replace(CACHE, n_targets=2)
+    pmap0 = np.asarray(numa.ZNuma(1.0).tiers(wt.n_pages), np.int32)
+    ptl = np.zeros((wt.n_pages, 2), np.int32)
+    ptl[:, 1] = LINES_PER_PAGE
+    outs = []
+    for n_pad in (n1, n2):
+        addr = _pad(wt.addr, n_pad, td.SENTINEL)
+        w = _pad(wt.is_write, n_pad)
+        ct = np.ones(n_pad, np.int32)
+        outs.append(_run_one(cfg, addr, w, ct, pmap0, wt.n_pages, ptl,
+                             slot, p))
+    a, b = outs
+    np.testing.assert_array_equal(np.asarray(a.stats), np.asarray(b.stats))
+    np.testing.assert_array_equal(np.asarray(a.page_map),
+                                  np.asarray(b.page_map))
+    np.testing.assert_array_equal(np.asarray(a.mig_read),
+                                  np.asarray(b.mig_read))
+    np.testing.assert_array_equal(np.asarray(a.mig_write),
+                                  np.asarray(b.mig_write))
+    # the extra epochs saw no accesses and migrated nothing
+    extra = np.asarray(b.slots[0])[n1 // slot:]
+    assert (extra == 0).all()
+
+
+def test_host_twin_padding_invariance():
+    slot = 64
+    cfg = td.DynamicTiering(epoch_len=64, budget=1, threshold=1)
+    wt = Gups(seed=21).host_trace(CACHE.l2_bytes)
+    n = wt.addr.shape[0]
+    n1 = -(-n // slot) * slot
+    ptl = np.zeros((wt.n_pages, 2), np.int32)
+    ptl[:, 1] = LINES_PER_PAGE
+    pmap0 = np.ones(wt.n_pages, np.int32)
+    runs = []
+    for n_pad in (n1, n1 + slot):
+        addr = _pad(wt.addr, n_pad, td.SENTINEL)
+        ct = np.ones(n_pad, np.int32)
+        runs.append(td.host_simulate(cfg, addr, ct, pmap0, wt.n_pages,
+                                     ptl, slot))
+    np.testing.assert_array_equal(runs[0].page_map, runs[1].page_map)
+    np.testing.assert_array_equal(runs[0].mig_read, runs[1].mig_read)
+    np.testing.assert_array_equal(
+        runs[0].target, runs[1].target[:runs[0].target.shape[0]])
+
+
+# ---------------------------------------------------------------------------
+# routing helpers
+# ---------------------------------------------------------------------------
+def test_targets_of_dynamic_lines_matches_tiered_lines():
+    route = route_mod.build_route(route_mod.direct(2), TIMING)
+    n_pages = 8
+    pmap = jnp.asarray([0, 1, 1, 0, 1, 0, 1, 1], jnp.int32)
+    line = jnp.arange(n_pages * LINES_PER_PAGE, dtype=jnp.int32)
+    tier = pmap[line // LINES_PER_PAGE]
+    np.testing.assert_array_equal(
+        np.asarray(route.targets_of_dynamic_lines(pmap, line)),
+        np.asarray(route.targets_of_tiered_lines(tier, line)))
+
+
+def test_first_touch_page_map_np_jnp_parity():
+    addr = np.asarray([0, 64, 0, 128, 200, 64], np.int32)
+    tier = np.asarray([1, 0, 0, 1, 0, 1], np.int32)
+    m_np = numa.first_touch_page_map(tier, addr, 5, np)
+    m_j = np.asarray(numa.first_touch_page_map(
+        jnp.asarray(tier), jnp.asarray(addr), 5))
+    np.testing.assert_array_equal(m_np, m_j)
+    # page 0 first touched as CXL, page 1 as DRAM, page 3 (line 200) DRAM,
+    # untouched page 4 defaults to CXL
+    np.testing.assert_array_equal(m_np, [1, 0, 1, 0, 1])
+
+
+# ---------------------------------------------------------------------------
+# epoch hotness-key encode/decode (hypothesis shim)
+# ---------------------------------------------------------------------------
+@given(count=st.integers(min_value=0, max_value=1 << 15),
+       page=st.integers(min_value=0, max_value=1023),
+       n_pages=st.integers(min_value=1024, max_value=4096))
+@settings(max_examples=60, deadline=None)
+def test_hot_key_roundtrip(count, page, n_pages):
+    key = td.encode_hot_key(np.asarray([count]), np.asarray([page]),
+                            n_pages, np)
+    c, pg = td.decode_hot_key(key, n_pages, np)
+    assert int(c[0]) == count and int(pg[0]) == page
+
+
+@given(c1=st.integers(min_value=0, max_value=1 << 15),
+       c2=st.integers(min_value=0, max_value=1 << 15),
+       p1=st.integers(min_value=0, max_value=255),
+       p2=st.integers(min_value=0, max_value=255))
+@settings(max_examples=60, deadline=None)
+def test_hot_key_ordering(c1, c2, p1, p2):
+    """Higher count always wins; equal counts break toward lower page."""
+    n_pages = 256
+    k1 = int(td.encode_hot_key(np.asarray([c1]), np.asarray([p1]),
+                               n_pages, np)[0])
+    k2 = int(td.encode_hot_key(np.asarray([c2]), np.asarray([p2]),
+                               n_pages, np)[0])
+    if c1 != c2:
+        assert (k1 > k2) == (c1 > c2)
+    elif p1 != p2:
+        assert (k1 > k2) == (p1 < p2)
+    else:
+        assert k1 == k2
