@@ -18,7 +18,15 @@ human-readable block per benchmark.
   tiering             — epoch-based dynamic tiering (TPP-style hot-page
                         promotion/demotion) vs static zNUMA, migration
                         traffic charged into the timing fixed point
+  distribute          — sharded + streaming sweep executor: shard-count
+                        scaling (rows/s) + a streaming run whose trace
+                        exceeds the resident working-set cap, both
+                        bitwise-equal to the single-program path
   roofline_summary    — reads experiments/roofline JSON (dry-run derived)
+
+``--only`` takes a comma-separated list of suites (e.g. ``--only
+engine,distribute``); suite names and the JSON output schemas are
+documented in docs/engine.md.
 """
 from __future__ import annotations
 
@@ -590,6 +598,127 @@ def tiering() -> None:
          f"eff_bw_win={win:.2f}x;mig_gbps={dyn['migration_gbps']:.2f}")
 
 
+def distribute() -> None:
+    """Sharded + streaming sweep executor (`repro.core.distribute`).
+
+    (1) Shard-count scaling: the default §IV grid (4 footprints x 2
+    policies x 2 CPU models) re-run at 1/2/4 row-shards through the
+    pmap-based executor, reporting sweep throughput (rows/s) per shard
+    count and asserting every variant is bitwise-equal to the
+    single-program engine path.  On a 1-device host the super-steps
+    serialize, so the curve is the documented flat-line (shards still
+    bound per-program batch memory); with D devices shards overlap.
+    (2) Streaming: a trace whose resident working set exceeds a device
+    budget, generated segment-by-segment and threaded through the scan
+    carry — bounded memory, stats bitwise-equal to the resident run.
+    Writes `BENCH_distribute.json`.
+    """
+    from repro.core import distribute as dist_mod
+
+    print("\n== distribute (sharded + streaming sweep executor) ==")
+    cache = cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                                  l2_bytes=64 * 1024, l2_ways=8)
+    timing = TimingConfig()
+    spec = engine_mod.SweepSpec(
+        footprint_factors=(2, 4, 6, 8),
+        policies=(numa.ZNuma(1.0), numa.WeightedInterleave(1, 1)),
+        cpus=(CPUModel(kind="inorder", mlp=1), CPUModel(kind="o3", mlp=8)))
+    base_rows = engine_mod.run_sweep(spec, cache, timing)
+    n_dev = len(jax.local_devices())
+
+    scaling = []
+    parity = True
+    best = (0.0, 1)
+    for shards in (1, 2, 4):
+        run = lambda: dist_mod.run_sweep(spec, cache, timing, mesh=shards)
+        rows = run()                               # compile
+        t0 = time.time()
+        rows = run()
+        warm = time.time() - t0
+        parity = parity and rows == base_rows
+        rate = len(rows) / warm
+        if rate > best[0]:
+            best = (rate, shards)
+        scaling.append({"shards": shards, "warm_s": round(warm, 4),
+                        "rows_per_s": round(rate, 2)})
+        print(f"  shards={shards}: warm {warm:.3f}s "
+              f"({rate:.1f} rows/s, {n_dev} device(s))")
+    assert parity, "sharded rows diverged from the single-program sweep"
+
+    # --- streaming: trace bytes beyond a resident working-set cap ---------
+    b_rows, seg, reps = 4, 32768, 12
+    n_total = seg * reps
+    cap_bytes = 8 << 20                   # the "device" trace budget
+    resident = dist_mod.trace_working_set_bytes(b_rows, n_total)
+    seg_bytes = dist_mod.trace_working_set_bytes(b_rows, seg)
+    assert resident > cap_bytes > seg_bytes
+    rng = np.random.default_rng(5)
+    base = (rng.integers(0, 4096, (b_rows, seg)).astype(np.int32),
+            rng.integers(0, 2, (b_rows, seg)).astype(np.int32),
+            rng.integers(0, 2, (b_rows, seg)).astype(np.int32))
+
+    def source():
+        for _ in range(reps):                  # generated, never stacked
+            yield (base[0], base[1], None, base[2])
+
+    p = cache
+    s_stream, _ = dist_mod.stream_traces(p, source())    # compile
+    t0 = time.time()
+    s_stream, _ = dist_mod.stream_traces(p, source())
+    jax.block_until_ready(s_stream)
+    t_stream = time.time() - t0
+    full = tuple(np.tile(a, (1, reps)) for a in base)
+    s_res, _ = engine_mod.run_traces(p, full[0], full[1], None, full[2])
+    t0 = time.time()
+    s_res, _ = engine_mod.run_traces(p, full[0], full[1], None, full[2])
+    jax.block_until_ready(s_res)
+    t_res = time.time() - t0
+    stream_parity = bool((np.asarray(s_stream) == np.asarray(s_res)).all())
+    assert stream_parity, "streamed stats diverged from the resident scan"
+    acc = b_rows * n_total
+    print(f"  streaming: {b_rows} rows x {n_total} accesses "
+          f"({resident / 2**20:.1f} MiB resident > {cap_bytes / 2**20:.0f} "
+          f"MiB cap; {seg_bytes / 2**20:.1f} MiB/segment) "
+          f"streamed {t_stream:.2f}s vs resident {t_res:.2f}s; "
+          f"bitwise equal: {stream_parity}")
+    print(f"sweep-throughput: {best[0]:.1f} rows/s "
+          f"(shards={best[1]}, {n_dev} device(s))")
+
+    report = {
+        "suite": {"footprint_factors": [2, 4, 6, 8],
+                  "policies": [numa.describe(p_) for p_ in spec.policies],
+                  "cpus": [c.kind for c in spec.cpus],
+                  "rows": len(base_rows)},
+        "n_devices": n_dev,
+        "shard_scaling": scaling,
+        "sharded_bitwise_equal_single_program": parity,
+        "sweep_rows_per_s": round(best[0], 2),
+        "single_device_note": (
+            "1-device host: super-steps serialize, so shard scaling is a "
+            "flat-line (shards still bound per-program batch memory); "
+            "with D devices shards overlap via pmap"
+            if n_dev == 1 else None),
+        "streaming": {
+            "rows": b_rows, "trace_len": n_total, "segment": seg,
+            "resident_bytes": resident, "cap_bytes": cap_bytes,
+            "segment_bytes": seg_bytes,
+            "exceeds_resident_cap": resident > cap_bytes,
+            "streamed_warm_s": round(t_stream, 4),
+            "resident_warm_s": round(t_res, 4),
+            "maccess_per_s_streamed": round(acc / t_stream / 1e6, 3),
+            "bitwise_equal_resident": stream_parity,
+        },
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_distribute.json"
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"-> {out.name}")
+    emit("distribute_shards", 1e6 / best[0],
+         f"rows_per_s={best[0]:.1f};shards={best[1]};parity={parity}")
+    emit("distribute_stream", t_stream * 1e6,
+         f"Maccess/s={acc / t_stream / 1e6:.2f};parity={stream_parity}")
+
+
 def roofline_summary() -> None:
     """Digest of the dry-run-derived roofline (experiments/roofline)."""
     print("\n== roofline_summary (from multi-pod dry-run) ==")
@@ -629,6 +758,7 @@ BENCHES: Dict[str, Callable[[], None]] = {
     "topology": topology,
     "workloads": workloads,
     "tiering": tiering,
+    "distribute": distribute,
     "roofline_summary": roofline_summary,
 }
 
@@ -636,12 +766,21 @@ BENCHES: Dict[str, Callable[[], None]] = {
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=list(BENCHES), default=None)
+    ap.add_argument(
+        "--only", default=None, metavar="SUITE[,SUITE...]",
+        help="comma-separated subset of suites to run (default: all); "
+             f"choices: {', '.join(BENCHES)}")
     args = ap.parse_args()
-    for name, fn in BENCHES.items():
-        if args.only and name != args.only:
-            continue
-        fn()
+    if args.only:
+        names = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(names) - set(BENCHES))
+        if unknown:
+            ap.error(f"unknown suite(s) {', '.join(unknown)}; "
+                     f"choices: {', '.join(BENCHES)}")
+    else:
+        names = list(BENCHES)
+    for name in names:
+        BENCHES[name]()
     print("\nname,us_per_call,derived")
     for row in ROWS:
         print(row)

@@ -2,8 +2,11 @@
 
 Layers (bottom-up): spec -> packet -> registers -> hdm -> topology ->
 timing -> numa -> cache -> stream -> machine -> route -> engine ->
-simulator.
+distribute -> simulator.
 """
+from repro.core.distribute import (  # noqa: F401
+    Mesh, ShardedExecutor, auto_mesh, stream_traces,
+)
 from repro.core.engine import SweepSpec, run_sweep, run_traces  # noqa: F401
 from repro.core.route import (  # noqa: F401
     RouteMap, TopologySpec, build_route, build_route_from_system, direct,

@@ -1,0 +1,493 @@
+"""Sharded + streaming sweep executor: past one device, past one memory.
+
+The batched trace engine (:mod:`repro.core.engine`) compiles a whole
+characterization grid into ONE vmapped device program — which caps both
+the grid size (every stacked trace resident at once) and the trace
+length (one scan over the whole thing) at a single accelerator's memory.
+This module scales the same engine along both axes without changing a
+single simulated number:
+
+**Sharding** (`Mesh`)
+    The flattened sweep grid — tiering x topologies x workloads x
+    footprints x policies, already deduplicated into batch rows by
+    `engine.build_sweep_batch` — is partitioned row-wise into shards.
+    Shards are padded with all-sentinel rows so every shard has the same
+    shape (ragged grids compile exactly one program), mapped over the
+    mesh devices with :func:`jax.pmap` in super-steps of
+    ``len(devices)`` shards, and dispatched **asynchronously**: the host
+    enqueues every super-step before blocking once at the end, so
+    host-side result accumulation overlaps device compute and transfer.
+    Rows are simulated independently (the vmap carries no cross-row
+    state), so sharded stats are **bitwise-equal** to the one-program
+    path — test-enforced, including dynamic-tiering rows.
+
+**Streaming** (`stream_chunk` / :func:`stream_traces`)
+    The trace axis is cut into fixed-size segments threaded through the
+    scan carry (`engine.init_batch_carry` / `engine.run_batch_segment`;
+    dynamic-tiering rows thread the full tierer carry — page map, epoch
+    counters, migration totals, slot index — via
+    `tiering_dyn.run_dynamic_segment`, i.e. the epoch-slot machinery
+    rides the segment carry).  Only one segment plus the carry is ever
+    resident on device, with the carry buffers donated between calls on
+    non-CPU backends, so trace lengths beyond device memory run in
+    bounded memory.  Segmentation is bitwise-neutral (integer state
+    machine, exact carry hand-off).
+
+Single-device / single-program fallback: ``mesh=None`` with
+``stream_chunk=None`` is *the* legacy path (the executor seam defaults
+to `engine.LocalExecutor`), so results are bitwise-equal to the
+pre-executor engine by construction — and the golden fixtures pin it.
+
+See ``docs/scaling.md`` for the design discussion and knob guide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_mod
+from repro.core import engine
+from repro.core import tiering_dyn
+from repro.core.engine import SENTINEL, SweepSpec, TraceBatch
+from repro.core.machine import RunResult
+from repro.core.timing import TimingConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Mesh: where the shards go
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Mesh:
+    """Row-partition plan for a sweep batch.
+
+    Parameters
+    ----------
+    n_shards : int
+        How many row-shards to cut the batch into.  ``0`` (default) =
+        one shard per device — the natural data-parallel layout.  More
+        shards than devices run in super-steps of ``len(devices)``
+        (useful on a single device to bound the per-program batch, or
+        to overlap async dispatch with host accumulation).
+    devices : tuple of jax.Device, optional
+        The devices to map shards onto; ``None`` = all
+        :func:`jax.local_devices`.
+
+    Notes
+    -----
+    Shards never change results: rows are simulated independently, so
+    any partition yields bitwise-identical stats (test-enforced).  On a
+    1-device host a multi-shard mesh still runs every shard — it just
+    serializes the super-steps, which is why the shard-scaling benchmark
+    documents a flat-line there.
+    """
+    n_shards: int = 0
+    devices: Optional[Tuple] = None
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 0:
+            raise ValueError(f"n_shards must be >= 0, got {self.n_shards}")
+
+    def resolve_devices(self) -> Tuple:
+        return (tuple(self.devices) if self.devices
+                else tuple(jax.local_devices()))
+
+    def shard_count(self, b: int) -> int:
+        """Shards actually cut for a ``b``-row batch (never more than b)."""
+        n = self.n_shards if self.n_shards > 0 \
+            else len(self.resolve_devices())
+        return max(1, min(n, b))
+
+
+def auto_mesh() -> Mesh:
+    """One shard per local device — the default multi-device layout."""
+    return Mesh()
+
+
+def _as_mesh(mesh) -> Optional[Mesh]:
+    """Accept `Mesh`, an int shard count, or None."""
+    if mesh is None or isinstance(mesh, Mesh):
+        return mesh
+    if isinstance(mesh, int):
+        return Mesh(n_shards=mesh)
+    raise TypeError(f"mesh must be a Mesh, int, or None, got {type(mesh)}")
+
+
+# ---------------------------------------------------------------------------
+# Shard arithmetic
+# ---------------------------------------------------------------------------
+def shard_plan(b: int, n_shards: int) -> Tuple[int, int]:
+    """Rows-per-shard and padded row count for ``b`` rows over shards.
+
+    Returns ``(rows_per_shard, b_padded)`` with ``b_padded = n_shards *
+    rows_per_shard >= b``; the ``b_padded - b`` filler rows are
+    all-sentinel traces whose stats are identically zero (padding-row
+    invariance is test-enforced).
+    """
+    if b < 1:
+        raise ValueError("empty batch")
+    rows = -(-b // n_shards)
+    return rows, rows * n_shards
+
+
+def _pad_rows(x: Array, b_to: int, fill: int) -> Array:
+    """Append `fill`-valued rows so the (B, ...) array has `b_to` rows."""
+    b = x.shape[0]
+    if b == b_to:
+        return x
+    pad = jnp.full((b_to - b,) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def trace_working_set_bytes(b: int, n: int, fields: int = 4,
+                            itemsize: int = 4) -> int:
+    """Device bytes a resident (B, N) stacked trace occupies.
+
+    Four int32 streams per row (addr, is_write, core, tier).  The
+    streaming path's working set is ``trace_working_set_bytes(b,
+    segment)`` plus the carry, regardless of total trace length.
+    """
+    return b * n * fields * itemsize
+
+
+# ---------------------------------------------------------------------------
+# pmap super-step: one shard per device, carry threaded between segments
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _pmap_stepper(devices: Tuple, donate: bool):
+    """pmap of the engine's segment step, pinned to `devices`.
+
+    One cached instance per (devices, donate) pair: the mapped axis is
+    the super-step's shards, placed on exactly the mesh's devices (not
+    whatever `jax.local_devices()` order would pick), and the carry
+    buffers are donated between streamed segments off-CPU so only one
+    carry is ever resident per shard.
+    """
+    return jax.pmap(engine._run_batch_segment_impl,
+                    static_broadcasted_argnums=(0,),
+                    donate_argnums=(1,) if donate else (),
+                    devices=devices)
+
+
+def _pmap_segment(p: cache_mod.CacheParams, devices: Tuple, carry,
+                  addr: Array, is_write: Array, core: Array, tier: Array):
+    """Advance each device's shard by one trace segment (mapped axis =
+    shards of this super-step, one per entry of `devices`)."""
+    donate = jax.default_backend() != "cpu"
+    return _pmap_stepper(devices, donate)(p, carry, addr, is_write, core,
+                                          tier)
+
+
+def _reshape_shards(x: Array, g: int) -> Array:
+    """(g*bp, ...) -> (g, bp, ...) for the pmap's mapped leading axis."""
+    return x.reshape((g, x.shape[0] // g) + x.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Streaming: segments through the scan carry
+# ---------------------------------------------------------------------------
+def segment_batch(batch_or_arrays, segment: int
+                  ) -> Iterator[Tuple[Array, Array, Array, Array]]:
+    """Slice a resident stacked trace into (B, segment) streaming tuples.
+
+    Accepts a :class:`~repro.core.engine.TraceBatch` or an ``(addr,
+    is_write, core, tier)`` tuple of (B, N) arrays; the final slice is
+    sentinel-padded to the full segment length (inert).  This is the
+    parity-testing source — a real beyond-memory run generates each
+    segment on the fly instead (any iterable of tuples works, see
+    :func:`stream_traces`).
+    """
+    if isinstance(batch_or_arrays, TraceBatch):
+        arrays = (batch_or_arrays.addr, batch_or_arrays.is_write,
+                  batch_or_arrays.core, batch_or_arrays.tier)
+    else:
+        arrays = batch_or_arrays
+    addr = jnp.asarray(arrays[0], jnp.int32)
+    b, n = addr.shape
+    z = jnp.zeros((b, n), jnp.int32)
+    rest = [z if a is None else jnp.asarray(a, jnp.int32)
+            for a in arrays[1:]]
+    fills = (SENTINEL, 0, 0, 0)
+    for s in range(0, n, segment):
+        e = min(s + segment, n)
+        out = []
+        for a, fill in zip((addr, *rest), fills):
+            sl = a[:, s:e]
+            if e - s < segment:
+                sl = jnp.concatenate(
+                    [sl, jnp.full((b, segment - (e - s)), fill,
+                                  jnp.int32)], axis=1)
+            out.append(sl)
+        yield tuple(out)
+
+
+def stream_traces(p: cache_mod.CacheParams,
+                  source: Iterable[Tuple],
+                  ) -> Tuple[Array, cache_mod.CacheState]:
+    """Consume a trace as a stream of fixed-size segments, bounded memory.
+
+    Parameters
+    ----------
+    p : CacheParams
+        Cache geometry.
+    source : iterable of (addr, is_write, core, tier) tuples
+        Each a (B, n_seg) int32 segment (``None`` fields become zeros;
+        ``addr == SENTINEL`` marks padding).  Segments should share one
+        length — each distinct length compiles its own program.  The
+        source may *generate* segments lazily (a generator that builds
+        each slice on demand), which is what lets total trace length
+        exceed device memory: only one segment plus the scan carry is
+        ever resident, and the carry buffers are donated between calls
+        on non-CPU backends.
+
+    Returns
+    -------
+    (stats, state)
+        Exactly :func:`repro.core.engine.run_traces`'s return — and
+        bitwise-equal to it on the concatenated trace (test-enforced).
+    """
+    carry = None
+    for seg in source:
+        addr = jnp.asarray(seg[0], jnp.int32)
+        z = jnp.zeros(addr.shape, jnp.int32)
+        fields = [z if (len(seg) <= i or seg[i] is None)
+                  else jnp.asarray(seg[i], jnp.int32) for i in (1, 2, 3)]
+        if carry is None:
+            carry = engine.init_batch_carry(p, addr.shape[0])
+        carry = engine.run_batch_segment(p, carry, addr, *fields,
+                                         donate=True)
+    if carry is None:
+        raise ValueError("empty trace source")
+    l1p, l2p, stats, _ = carry
+    return stats, cache_mod.unpack_state(l1p, l2p)
+
+
+# ---------------------------------------------------------------------------
+# The sharded executor (plugs into engine.run_sweep's executor seam)
+# ---------------------------------------------------------------------------
+class ShardedExecutor:
+    """Execute a built sweep batch sharded across a mesh and/or streamed.
+
+    Drop-in for :class:`repro.core.engine.LocalExecutor` — same
+    ``run_static`` / ``run_dynamic`` contract, bitwise-identical
+    counters (test-enforced), different execution strategy:
+
+    * rows are cut into ``mesh.shard_count(B)`` equal shards (sentinel
+      padding rows square off ragged grids),
+    * each super-step pmaps ``len(devices)`` shards and is dispatched
+      without blocking — the final gather blocks once, so transfer and
+      host accumulation overlap compute,
+    * with ``stream_chunk``, every shard's trace streams through the
+      scan carry in ``stream_chunk``-sized segments (dynamic-tiering
+      rows stream whole epoch slots: the chunk is rounded to the sweep's
+      slot length).
+
+    Parameters
+    ----------
+    mesh : Mesh, int, or None
+        Row partition; int = shard count; ``None`` = no sharding.
+    stream_chunk : int, optional
+        Trace elements per streamed segment; ``None`` = resident traces.
+    """
+
+    def __init__(self, mesh=None, stream_chunk: Optional[int] = None):
+        if stream_chunk is not None and stream_chunk < 1:
+            raise ValueError(
+                f"stream_chunk must be >= 1, got {stream_chunk}")
+        self.mesh = _as_mesh(mesh)
+        self.stream_chunk = stream_chunk
+
+    # -- static (flat-scan) rows -------------------------------------------
+    def run_static(self, p: cache_mod.CacheParams, batch: TraceBatch,
+                   *, backend: str, chunk: int) -> np.ndarray:
+        if backend != "reference":
+            return self._run_static_fallback(p, batch, backend=backend,
+                                             chunk=chunk)
+        addr = jnp.asarray(batch.addr, jnp.int32)
+        b, n = addr.shape
+        z = jnp.zeros((b, n), jnp.int32)
+        is_write = (z if batch.is_write is None
+                    else jnp.asarray(batch.is_write, jnp.int32))
+        core = z if batch.core is None else jnp.asarray(batch.core,
+                                                        jnp.int32)
+        tier = z if batch.tier is None else jnp.asarray(batch.tier,
+                                                        jnp.int32)
+        mesh = self.mesh or Mesh(n_shards=1)
+        n_shards = mesh.shard_count(b)
+        bp, b_pad = shard_plan(b, n_shards)
+        addr = _pad_rows(addr, b_pad, SENTINEL)
+        is_write = _pad_rows(is_write, b_pad, 0)
+        core = _pad_rows(core, b_pad, 0)
+        tier = _pad_rows(tier, b_pad, 0)
+        seg = self.stream_chunk if self.stream_chunk is not None else n
+        seg = min(seg, n)       # never pad beyond the trace itself
+        n_pad = -(-n // seg) * seg
+        addr = engine._pad_to_segment(addr, n_pad, SENTINEL)
+        is_write = engine._pad_to_segment(is_write, n_pad, 0)
+        core = engine._pad_to_segment(core, n_pad, 0)
+        tier = engine._pad_to_segment(tier, n_pad, 0)
+        devices = mesh.resolve_devices()
+        d = len(devices)
+        outs: List[Array] = []
+        for g0 in range(0, n_shards, d):
+            g = min(d, n_shards - g0)
+            rows = slice(g0 * bp, (g0 + g) * bp)
+            sh = [_reshape_shards(a[rows], g)
+                  for a in (addr, is_write, core, tier)]
+            carry = jax.tree_util.tree_map(
+                lambda x: _reshape_shards(x, g),
+                engine.init_batch_carry(p, g * bp))
+            for s in range(0, n_pad, seg):
+                carry = _pmap_segment(p, devices[:g], carry,
+                                      *(a[:, :, s:s + seg] for a in sh))
+            # stats only; enqueue without blocking — super-steps overlap
+            outs.append(carry[2].reshape(g * bp, -1))
+        jax.block_until_ready(outs)
+        stats = np.concatenate([np.asarray(o) for o in outs], axis=0)
+        return stats[:b].astype(np.int64)
+
+    def _run_static_fallback(self, p, batch, *, backend, chunk):
+        """Non-reference backends: per-shard `run_traces` dispatches
+        (async; the Pallas kernel streams its own chunks internally)."""
+        if self.stream_chunk is not None:
+            raise NotImplementedError(
+                "stream_chunk requires the reference backend")
+        mesh = self.mesh or Mesh(n_shards=1)
+        b = batch.batch
+        n_shards = mesh.shard_count(b)
+        bp, b_pad = shard_plan(b, n_shards)
+        addr = _pad_rows(jnp.asarray(batch.addr, jnp.int32), b_pad,
+                         SENTINEL)
+        z = jnp.zeros(addr.shape, jnp.int32)
+        others = [z if a is None else _pad_rows(jnp.asarray(a, jnp.int32),
+                                                b_pad, 0)
+                  for a in (batch.is_write, batch.core, batch.tier)]
+        devices = mesh.resolve_devices()
+        outs = []
+        for i, s0 in enumerate(range(0, b_pad, bp)):
+            rows = slice(s0, s0 + bp)
+            dev = devices[i % len(devices)]    # round-robin shard placement
+            args = [jax.device_put(a[rows], dev)
+                    for a in (addr, *others)]
+            stats, _ = engine.run_traces(p, *args, backend=backend,
+                                         chunk=chunk)
+            outs.append(stats)
+        jax.block_until_ready(outs)
+        stats = np.concatenate([np.asarray(o) for o in outs], axis=0)
+        return stats[:b].astype(np.int64)
+
+    # -- dynamic (epoch-structured) rows -----------------------------------
+    def run_dynamic(self, p: cache_mod.CacheParams, tb,
+                    *, slot_len: int, k_max: int):
+        """Shard the epoch program row-wise; stream whole epoch slots.
+
+        Padding rows are inert static rows (all-sentinel trace, zero
+        budget), so the padded program's real rows are bitwise-equal to
+        the one-program path; per-row outputs are concatenated and the
+        padding dropped.  ``stream_chunk`` streams ``max(1, chunk //
+        slot_len)`` slots per segment — the tierer carry (page map,
+        counters, migration totals, slot index) threads between
+        segments.
+        """
+        batch = tb.batch
+        b = batch.batch
+        mesh = self.mesh or Mesh(n_shards=1)
+        n_shards = mesh.shard_count(b)
+        bp, b_pad = shard_plan(b, n_shards)
+        seg_slots = (None if self.stream_chunk is None
+                     else max(1, self.stream_chunk // slot_len))
+        addr = _pad_rows(jnp.asarray(batch.addr, jnp.int32), b_pad,
+                         SENTINEL)
+        z = jnp.zeros(addr.shape, jnp.int32)
+        others = [z if a is None else _pad_rows(jnp.asarray(a, jnp.int32),
+                                                b_pad, 0)
+                  for a in (batch.is_write, batch.core, batch.tier)]
+        scal = {
+            "dyn_flag": _pad_rows(jnp.asarray(tb.dyn_flag, jnp.int32),
+                                  b_pad, 0),
+            "page_map0": _pad_rows(jnp.asarray(tb.page_map0, jnp.int32),
+                                   b_pad, 1),
+            "n_pages": _pad_rows(jnp.asarray(tb.n_pages, jnp.int32),
+                                 b_pad, 1),
+            "budget": _pad_rows(jnp.asarray(tb.budget, jnp.int32),
+                                b_pad, 0),
+            "threshold": _pad_rows(jnp.asarray(tb.threshold, jnp.int32),
+                                   b_pad, 1),
+            "period": _pad_rows(jnp.asarray(tb.period, jnp.int32),
+                                b_pad, 1),
+            "dram_cap": _pad_rows(jnp.asarray(tb.dram_cap, jnp.int32),
+                                  b_pad, engine._UNBOUNDED_PAGES),
+            "page_target_lines": _pad_rows(
+                jnp.asarray(tb.page_target_lines, jnp.int32), b_pad, 0),
+        }
+        devices = mesh.resolve_devices()
+        outs = []
+        for i, s0 in enumerate(range(0, b_pad, bp)):
+            rows = slice(s0, s0 + bp)
+            dev = devices[i % len(devices)]    # round-robin shard placement
+            args = [jax.device_put(a[rows], dev)
+                    for a in (addr, *others)]
+            out = tiering_dyn.run_dynamic(
+                p, *args, slot_len=slot_len, k_max=k_max,
+                segment_slots=seg_slots,
+                **{k: jax.device_put(v[rows], dev)
+                   for k, v in scal.items()})
+            outs.append(out)
+        jax.block_until_ready(outs)
+        return tiering_dyn.DynOutputs(*(
+            jnp.concatenate([getattr(o, f) for o in outs], axis=0)[:b]
+            for f in tiering_dyn.DynOutputs._fields))
+
+
+# ---------------------------------------------------------------------------
+# Facade: the sharded/streaming twins of engine.run_sweep
+# ---------------------------------------------------------------------------
+def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
+              timing: TimingConfig, *, mesh=None,
+              stream_chunk: Optional[int] = None,
+              chunk: int = 512) -> List[dict]:
+    """`engine.run_sweep` with sharding and streaming knobs.
+
+    Parameters
+    ----------
+    spec, cache, timing, chunk
+        As in :func:`repro.core.engine.run_sweep`.
+    mesh : Mesh, int, or None
+        Row partition across devices.  ``None`` (with ``stream_chunk``
+        also ``None``) is **exactly** the legacy single-program path —
+        same executor, bitwise-equal rows (golden-fixture enforced).
+    stream_chunk : int, optional
+        Stream every trace through the scan carry in segments of this
+        many accesses (bounded device memory per program).
+
+    Returns
+    -------
+    list of dict
+        Identical rows — schema and values — to `engine.run_sweep` for
+        any mesh/chunk choice (test-enforced).
+    """
+    executor = _executor_for(mesh, stream_chunk)
+    return engine.run_sweep(spec, cache, timing, chunk=chunk,
+                            executor=executor)
+
+
+def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
+                  timing: TimingConfig, *, mesh=None,
+                  stream_chunk: Optional[int] = None,
+                  chunk: int = 512) -> List[RunResult]:
+    """`engine.sweep_results` with sharding and streaming knobs."""
+    executor = _executor_for(mesh, stream_chunk)
+    return engine.sweep_results(spec, cache, timing, chunk=chunk,
+                                executor=executor)
+
+
+def _executor_for(mesh, stream_chunk):
+    if mesh is None and stream_chunk is None:
+        return None                     # engine.LocalExecutor: legacy path
+    return ShardedExecutor(mesh=mesh, stream_chunk=stream_chunk)

@@ -269,12 +269,37 @@ def stack_device_traces(traces: Sequence[Tuple], pad_to_multiple: int = 1
 
 
 # ---------------------------------------------------------------------------
-# Batched simulation
+# Batched simulation: segment-carry primitives
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=0)
-def _run_batch_reference(p: cache_mod.CacheParams, addr: Array,
-                         is_write: Array, core: Array, tier: Array):
-    """vmap-over-scan: the whole batch in one XLA program.
+# The batched scan is expressed as *segments threaded through an explicit
+# carry*: `init_batch_carry` builds the per-row packed cache state, and
+# `run_batch_segment` advances every row by one (B, n_seg) slice of the
+# trace.  The resident path (`_run_batch_reference`) is simply ONE segment
+# spanning the whole trace; the streaming executor
+# (:mod:`repro.core.distribute`) feeds fixed-size segments one device call
+# at a time so arbitrarily long traces run in bounded memory.  Because the
+# cache model is integer arithmetic and the carry threads the exact scan
+# state (including the logical clock `t`), splitting a trace into segments
+# is **bitwise-neutral** (test-enforced by tests/test_distribute.py).
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def init_batch_carry(p: cache_mod.CacheParams, b: int):
+    """Fresh batched scan carry: `(l1p, l2p, stats, t)`, leading axis `b`.
+
+    The carry layout is exactly what `cache._packed_step` threads:
+    packed L1/L2 planes, the per-row stats vector, and the logical clock
+    (which starts at 1, matching the sequential oracle).
+    """
+    l1p, l2p = cache_mod.pack_state(cache_mod.init_state(p))
+    bcast = lambda x: jnp.broadcast_to(x[None], (b,) + x.shape)
+    return (bcast(l1p), bcast(l2p),
+            jnp.zeros((b, cache_mod.nstats(p.n_targets)), jnp.int32),
+            jnp.ones((b,), jnp.int32))
+
+
+def _run_batch_segment_impl(p: cache_mod.CacheParams, carry, addr: Array,
+                            is_write: Array, core: Array, tier: Array):
+    """Advance the batched carry over one (B, n_seg) trace segment.
 
     Uses the packed-state step (`cache._packed_step`) — bitwise-equal to
     the `_step` oracle but with one write per hierarchy update instead of
@@ -284,21 +309,72 @@ def _run_batch_reference(p: cache_mod.CacheParams, addr: Array,
     """
     valid = addr != SENTINEL
 
-    def one(a, w, c, tr, v):
-        l1p, l2p = cache_mod.pack_state(cache_mod.init_state(p))
-        stats0 = jnp.zeros((cache_mod.nstats(p.n_targets),), jnp.int32)
-        (l1p, l2p, stats, _), _ = jax.lax.scan(
-            functools.partial(cache_mod._packed_step, p),
-            (l1p, l2p, stats0, jnp.int32(1)), (a, w, c, tr, v), unroll=2)
-        return stats, cache_mod.unpack_state(l1p, l2p)
+    def one(c, a, w, co, tr, v):
+        c, _ = jax.lax.scan(functools.partial(cache_mod._packed_step, p),
+                            c, (a, w, co, tr, v), unroll=2)
+        return c
 
-    return jax.vmap(one)(addr, is_write.astype(bool),
+    return jax.vmap(one)(carry, addr, is_write.astype(bool),
                          core, tier, valid)
+
+
+@functools.lru_cache(maxsize=None)
+def _segment_stepper(donate: bool):
+    """Jitted segment step; the carry buffers are donated off-CPU.
+
+    Donation lets XLA reuse the previous carry's buffers in the streaming
+    loop (no 2x state residency); CPU backends ignore donation and warn,
+    so it is only requested elsewhere.
+    """
+    return jax.jit(_run_batch_segment_impl, static_argnums=(0,),
+                   donate_argnums=(1,) if donate else ())
+
+
+def run_batch_segment(p: cache_mod.CacheParams, carry, addr, is_write,
+                      core, tier, *, donate: bool = False):
+    """One streamed segment: `(carry, (B, n_seg) slice) -> carry`.
+
+    Parameters
+    ----------
+    p : CacheParams
+        Cache geometry (static under jit).
+    carry : tuple
+        `(l1p, l2p, stats, t)` from :func:`init_batch_carry` or a prior
+        segment call.
+    addr, is_write, core, tier : (B, n_seg) int32 arrays
+        The segment; `addr == SENTINEL` marks padding.
+    donate : bool
+        Donate the carry buffers to the call (streaming loops off-CPU);
+        the caller must not reuse the donated carry afterwards.
+
+    Returns
+    -------
+    tuple
+        The advanced carry; `carry[2]` is the running (B, nstats) stats.
+    """
+    donate = donate and jax.default_backend() != "cpu"
+    return _segment_stepper(donate)(p, carry, addr, is_write, core, tier)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_batch_reference(p: cache_mod.CacheParams, addr: Array,
+                         is_write: Array, core: Array, tier: Array):
+    """vmap-over-scan: the whole batch in one XLA program.
+
+    Expressed as a single segment spanning the whole trace through the
+    segment-carry primitives above — the streaming path runs the same
+    per-access arithmetic, so segmented and resident stats are bitwise
+    equal.
+    """
+    carry = init_batch_carry(p, addr.shape[0])
+    l1p, l2p, stats, _ = _run_batch_segment_impl(p, carry, addr, is_write,
+                                                 core, tier)
+    return stats, cache_mod.unpack_state(l1p, l2p)
 
 
 def run_traces(p: cache_mod.CacheParams, addr, is_write,
                core=None, tier=None, *, backend: str = "reference",
-               chunk: int = 512,
+               chunk: int = 512, segment: Optional[int] = None,
                ) -> Tuple[Array, cache_mod.CacheState]:
     """Simulate a (B, N) batch of sentinel-padded traces in one device call.
 
@@ -309,6 +385,11 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
       is_write/core/tier: (B, N) int32 (or None for zeros).
       backend: 'reference' (vmapped scan) or 'pallas' (MESI kernel).
       chunk: trace elements per Pallas grid step.
+      segment: stream the trace through the scan carry in (B, segment)
+        slices — one device call per slice instead of one program over
+        the whole length (reference backend only).  The trace is
+        sentinel-padded up to a multiple; stats and final state are
+        bitwise-equal to the resident path (test-enforced).
 
     Returns: (stats (B, nstats(p.n_targets)) int32, batched CacheState).
     """
@@ -320,6 +401,13 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
     is_write = z if is_write is None else jnp.asarray(is_write, jnp.int32)
     core = z if core is None else jnp.asarray(core, jnp.int32)
     tier = z if tier is None else jnp.asarray(tier, jnp.int32)
+    if segment is not None:
+        if backend != "reference":
+            raise NotImplementedError(
+                "segmented streaming runs on the reference backend only "
+                "(the Pallas kernel already streams chunks internally)")
+        return _run_traces_segmented(p, addr, is_write, core, tier,
+                                     segment=segment)
     if backend == "reference":
         return _run_batch_reference(p, addr, is_write, core, tier)
     if backend == "pallas":
@@ -327,6 +415,45 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
         return ops.mesi_cache_sim(addr, is_write, core, tier,
                                   params=p, chunk=chunk)
     raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
+
+
+def _pad_to_segment(x: Array, n_to: int, fill: int) -> Array:
+    """Append `fill` columns so the (B, N) array spans `n_to` entries."""
+    b, n = x.shape
+    if n == n_to:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((b, n_to - n), fill, jnp.int32)], axis=1)
+
+
+def _run_traces_segmented(p: cache_mod.CacheParams, addr: Array,
+                          is_write: Array, core: Array, tier: Array,
+                          *, segment: int
+                          ) -> Tuple[Array, cache_mod.CacheState]:
+    """Host loop threading the scan carry through fixed-size segments.
+
+    One jitted device call per (B, segment) slice; only the carry (packed
+    cache state + stats) persists between calls, so peak device memory is
+    bounded by one segment regardless of N.  Sentinel padding rounds the
+    length up to a segment multiple (padding is inert, so stats stay
+    bitwise-equal to the resident program).
+    """
+    if segment < 1:
+        raise ValueError(f"segment must be >= 1, got {segment}")
+    b, n = addr.shape
+    segment = min(segment, n)   # never pad beyond the trace itself
+    n_pad = -(-n // segment) * segment
+    addr = _pad_to_segment(addr, n_pad, SENTINEL)
+    is_write = _pad_to_segment(is_write, n_pad, 0)
+    core = _pad_to_segment(core, n_pad, 0)
+    tier = _pad_to_segment(tier, n_pad, 0)
+    carry = init_batch_carry(p, b)
+    for s in range(0, n_pad, segment):
+        carry = run_batch_segment(
+            p, carry, addr[:, s:s + segment], is_write[:, s:s + segment],
+            core[:, s:s + segment], tier[:, s:s + segment], donate=True)
+    l1p, l2p, stats, _ = carry
+    return stats, cache_mod.unpack_state(l1p, l2p)
 
 
 # ---------------------------------------------------------------------------
@@ -433,8 +560,41 @@ def _narrow_stats(stats: np.ndarray, t_max: int, t_route: int) -> np.ndarray:
     return stats[:, idx]
 
 
+class LocalExecutor:
+    """Default sweep executor: the whole batch as ONE resident program.
+
+    The executor seam is what :mod:`repro.core.distribute` plugs into —
+    it owns only the raw device execution of an already-built batch
+    (grid flattening, routing, timing and row assembly stay in this
+    module), so any executor that returns the same counters produces
+    bit-identical sweep rows.
+    """
+
+    def run_static(self, p: cache_mod.CacheParams, batch: TraceBatch,
+                   *, backend: str, chunk: int) -> np.ndarray:
+        """Simulate the stacked batch; return host (B, nstats) int64."""
+        stats, _ = run_traces(p, batch.addr, batch.is_write, core=None,
+                              tier=batch.tier, backend=backend, chunk=chunk)
+        return np.asarray(jax.block_until_ready(stats), np.int64)
+
+    def run_dynamic(self, p: cache_mod.CacheParams, tb: "TieringBatch",
+                    *, slot_len: int, k_max: int):
+        """Run the epoch-structured batch; return `DynOutputs`."""
+        return tiering_dyn.run_dynamic(
+            p, tb.batch.addr, tb.batch.is_write, tb.batch.core,
+            tb.batch.tier, slot_len=slot_len, k_max=k_max,
+            dyn_flag=tb.dyn_flag, page_map0=tb.page_map0,
+            n_pages=tb.n_pages, budget=tb.budget, threshold=tb.threshold,
+            period=tb.period, dram_cap=tb.dram_cap,
+            page_target_lines=tb.page_target_lines)
+
+
+_LOCAL_EXECUTOR = LocalExecutor()
+
+
 def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
-              timing: TimingConfig, *, chunk: int = 512) -> List[Dict]:
+              timing: TimingConfig, *, chunk: int = 512,
+              executor=None) -> List[Dict]:
     """Run the whole characterization suite as one batched device program.
 
     Parameters
@@ -447,6 +607,13 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
         Per-tier timing model closing the Picard fixed point.
     chunk : int
         Trace pad/stream granularity.
+    executor : optional
+        Execution strategy for the stacked batch (`run_static` /
+        `run_dynamic` duck type).  Default: :class:`LocalExecutor`, one
+        resident device program; :class:`repro.core.distribute.
+        ShardedExecutor` shards rows across devices and/or streams trace
+        segments.  Any executor must return bitwise-identical counters,
+        so rows never depend on the execution strategy (test-enforced).
 
     Returns
     -------
@@ -460,7 +627,8 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
         sequential per-config path.
     """
     from repro.workloads.base import Stream  # deferred: wl builds on core
-    results = sweep_results(spec, cache, timing, chunk=chunk)
+    results = sweep_results(spec, cache, timing, chunk=chunk,
+                            executor=executor)
     rows: List[Dict] = []
     i = 0
     for tr in spec.tiering_axis:
@@ -483,8 +651,8 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
 
 
 def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
-                  timing: TimingConfig, *, chunk: int = 512
-                  ) -> List[RunResult]:
+                  timing: TimingConfig, *, chunk: int = 512,
+                  executor=None) -> List[RunResult]:
     """`run_sweep` returning full RunResults (row order identical).
 
     One device call simulates every (topology, workload, footprint,
@@ -512,18 +680,17 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
     """
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}")
+    executor = executor if executor is not None else _LOCAL_EXECUTOR
     routes = [None if tp is None else route_mod.build_route(tp, timing)
               for tp in spec.topology_axis]
     if any(tr is not None for tr in spec.tiering_axis):
-        return _sweep_results_dynamic(spec, cache, timing, routes)
+        return _sweep_results_dynamic(spec, cache, timing, routes,
+                                      executor=executor)
     t_max = max(2 if r is None else r.n_targets for r in routes)
     p = dataclasses.replace(cache, n_targets=t_max)
     batch, cell_rows = build_sweep_batch(spec, cache, chunk=chunk,
                                          routes=routes)
-    stats, _ = run_traces(p, batch.addr, batch.is_write,
-                          core=None, tier=batch.tier,
-                          backend=spec.backend, chunk=chunk)
-    stats = np.asarray(jax.block_until_ready(stats), np.int64)
+    stats = executor.run_static(p, batch, backend=spec.backend, chunk=chunk)
     cells = spec.sim_cells
     n_cells = len(cells)
     rows_cpus = [wl.cpu_for(cpu) for wl, _k, _pol in cells
@@ -683,8 +850,8 @@ def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
 
 def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
                            timing: TimingConfig,
-                           routes: Sequence[Optional[route_mod.RouteMap]]
-                           ) -> List[RunResult]:
+                           routes: Sequence[Optional[route_mod.RouteMap]],
+                           *, executor) -> List[RunResult]:
     """The epoch-structured twin of the static `sweep_results` body.
 
     One `tiering_dyn.run_dynamic` device call simulates every
@@ -710,12 +877,7 @@ def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
                 f"sweep's epoch gcd {slot}")
     k_max = max(1, max(tr.budget for tr in dyn))
     tb = build_tiering_batch(spec, cache, routes, slot, t_max)
-    out = tiering_dyn.run_dynamic(
-        p, tb.batch.addr, tb.batch.is_write, tb.batch.core, tb.batch.tier,
-        slot_len=slot, k_max=k_max, dyn_flag=tb.dyn_flag,
-        page_map0=tb.page_map0, n_pages=tb.n_pages, budget=tb.budget,
-        threshold=tb.threshold, period=tb.period, dram_cap=tb.dram_cap,
-        page_target_lines=tb.page_target_lines)
+    out = executor.run_dynamic(p, tb, slot_len=slot, k_max=k_max)
     stats = np.asarray(jax.block_until_ready(out.stats), np.int64)
     mig = np.stack([np.asarray(out.mig_read, np.int64),
                     np.asarray(out.mig_write, np.int64)], axis=1)

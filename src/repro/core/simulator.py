@@ -115,7 +115,9 @@ class CXLRAMSim:
               backend: str = "reference",
               topologies: Optional[Sequence[route_mod.TopologySpec]] = None,
               workloads: Optional[Sequence] = None,
-              tiering: Optional[Sequence] = None) -> List[Dict]:
+              tiering: Optional[Sequence] = None,
+              mesh=None,
+              stream_chunk: Optional[int] = None) -> List[Dict]:
         """The full grid — (tiering x workload x topology x footprint x
         policy x CPU) — batched.
 
@@ -130,6 +132,14 @@ class CXLRAMSim:
         :class:`repro.core.tiering_dyn.DynamicTiering` entries (``None``
         = static, bitwise-equal to today's rows) to sweep epoch-based
         hot-page promotion/demotion — see ``docs/tiering.md``.
+
+        `mesh` shards the grid's batch rows across devices (a
+        :class:`repro.core.distribute.Mesh` or an int shard count) and
+        `stream_chunk` streams each trace through the scan carry in
+        fixed-size segments (bounded device memory) — both execution
+        strategies, never result changes: any mesh/chunk choice yields
+        rows bitwise-equal to the defaults (``None``/``None`` = the
+        single-program path).  See ``docs/scaling.md``.
         """
         policies = tuple(policies) if policies else (
             numa_mod.ZNuma(cxl_fraction=1.0),)
@@ -142,8 +152,13 @@ class CXLRAMSim:
             topologies=tuple(topologies) if topologies else (),
             workloads=tuple(workloads) if workloads else (),
             tiering=tuple(tiering) if tiering else ())
-        return engine_mod.run_sweep(spec, self.config.cache,
-                                    self.config.timing)
+        if mesh is None and stream_chunk is None:
+            return engine_mod.run_sweep(spec, self.config.cache,
+                                        self.config.timing)
+        from repro.core import distribute  # deferred: builds on engine
+        return distribute.run_sweep(spec, self.config.cache,
+                                    self.config.timing, mesh=mesh,
+                                    stream_chunk=stream_chunk)
 
     def stream_suite_sequential(self,
                                 footprint_factors: Sequence[int]

@@ -219,79 +219,157 @@ def _migration_step(pmap, counts, ptl, page_ids, pvalid, rank,
     return new_pmap, pro_lines, dem_lines, n_pro, n_dem
 
 
+def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
+               consts, carry, xs):
+    """One epoch slot for one row: the shared scan body.
+
+    Both the full-program scan (:func:`_run_dynamic`) and the streaming
+    segment path (:func:`run_dynamic` with ``segment_slots``) run exactly
+    this function, so splitting a trace into segments threads identical
+    arithmetic through the carry — segmented and resident epoch programs
+    are bitwise-equal (test-enforced).
+    """
+    flag, npg, bud, thr, per, cap, ptl, page_ids, pvalid, rank = consts
+    lpp = jnp.int32(LINES_PER_PAGE)
+    l1p, l2p, stats, t, pmap, counts, mig_rd, mig_wr, eidx = carry
+    a_s, w_s, c_s, tr_s, v_s = xs
+    page = jnp.clip(a_s // lpp, 0, n_p - 1)
+    intent = pmap[page]
+    # dynamic rows: page map decides DRAM vs the precomputed CXL
+    # target; static rows use the precomputed target verbatim
+    tgt = jnp.where(flag != 0,
+                    jnp.where(intent == 0, 0, tr_s), tr_s)
+    acc_t = v_s.sum().astype(jnp.int32)
+    acc_d = (v_s & (jnp.where(flag != 0, intent, tgt) == 0)) \
+        .sum().astype(jnp.int32)
+    (l1p, l2p, stats, t), _ = jax.lax.scan(
+        functools.partial(cache_mod._packed_step, p),
+        (l1p, l2p, stats, t),
+        (a_s, w_s.astype(bool), c_s, tgt.astype(jnp.int32), v_s),
+        unroll=2)
+    counts = counts.at[page].add(v_s.astype(jnp.int32))
+    eidx = eidx + 1
+    boundary = (eidx % per) == 0
+    do_mig = boundary & (bud > 0)
+    new_pmap, pro_tl, dem_tl, n_pro, n_dem = _migration_step(
+        pmap, counts, ptl, page_ids, pvalid, rank,
+        bud, thr, cap, do_mig, cmax, n_p, k_max)
+    # promotions read the page from its CXL endpoints + write it
+    # to DRAM; demotions read DRAM + write the CXL endpoints
+    mig_rd = mig_rd + pro_tl.at[0].add(n_dem * lpp)
+    mig_wr = mig_wr + dem_tl.at[0].add(n_pro * lpp)
+    counts = jnp.where(boundary, 0, counts)
+    ys = jnp.stack([acc_t, acc_d, n_pro, n_dem])
+    carry = (l1p, l2p, stats, t, new_pmap, counts,
+             mig_rd, mig_wr, eidx)
+    return carry, (ys, stats)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def init_dyn_carry(p: cache_mod.CacheParams, page_map0: Array):
+    """Fresh batched epoch carry, leading axis B (from ``page_map0``).
+
+    Layout: ``(l1p, l2p, stats, t, page_map, counts, mig_rd, mig_wr,
+    eidx)`` — the packed cache state of :func:`repro.core.engine.
+    init_batch_carry` extended with the tierer's scan state (page→tier
+    map, per-page epoch counters, per-target migration totals, and the
+    epoch-slot index that keeps boundary firing consistent across
+    streamed segments).
+    """
+    page_map0 = jnp.asarray(page_map0, jnp.int32)
+    b, n_p = page_map0.shape
+    n_t = p.n_targets
+    l1p, l2p = cache_mod.pack_state(cache_mod.init_state(p))
+    bcast = lambda x: jnp.broadcast_to(x[None], (b,) + x.shape)
+    return (bcast(l1p), bcast(l2p),
+            jnp.zeros((b, cache_mod.nstats(n_t)), jnp.int32),
+            jnp.ones((b,), jnp.int32),
+            page_map0,
+            jnp.zeros((b, n_p), jnp.int32),
+            jnp.zeros((b, n_t), jnp.int32),
+            jnp.zeros((b, n_t), jnp.int32),
+            jnp.zeros((b,), jnp.int32))
+
+
+def _run_dynamic_segment_impl(p: cache_mod.CacheParams, k_max: int,
+                              count_bound: int, carry, addr: Array,
+                              is_write: Array, core: Array, tier: Array,
+                              dyn_flag: Array, n_pages: Array,
+                              budget: Array, threshold: Array,
+                              period: Array, dram_cap: Array,
+                              page_target_lines: Array):
+    """Advance the batched epoch carry over a (B, E_seg, slot_len) slice.
+
+    Returns ``(carry, slots, snaps)`` with the per-slot counters and
+    cumulative stat snapshots of just this segment.
+    """
+    n_p = page_target_lines.shape[1]
+    cmax = jnp.int32(count_bound)
+    valid = addr != SENTINEL
+
+    def one(c, a, w, cr, tr, v, flag, npg, bud, thr, per, cap, ptl):
+        page_ids = jnp.arange(n_p, dtype=jnp.int32)
+        pvalid = page_ids < npg
+        rank = jnp.arange(k_max, dtype=jnp.int32)
+        consts = (flag, npg, bud, thr, per, cap, ptl,
+                  page_ids, pvalid, rank)
+        body = functools.partial(_slot_step, p, k_max, cmax, n_p, consts)
+        c, (slots, snaps) = jax.lax.scan(body, c, (a, w, cr, tr, v))
+        return c, slots, snaps
+
+    return jax.vmap(one)(carry, addr, is_write, core, tier, valid,
+                         dyn_flag, n_pages, budget, threshold, period,
+                         dram_cap, page_target_lines)
+
+
+@functools.lru_cache(maxsize=None)
+def _dyn_segment_stepper(donate: bool):
+    """Jitted epoch-segment step; carry buffers donated off-CPU."""
+    return jax.jit(_run_dynamic_segment_impl, static_argnums=(0, 1, 2),
+                   donate_argnums=(3,) if donate else ())
+
+
+def run_dynamic_segment(p: cache_mod.CacheParams, k_max: int,
+                        count_bound: int, carry, addr, is_write, core,
+                        tier, dyn_flag, n_pages, budget, threshold,
+                        period, dram_cap, page_target_lines,
+                        *, donate: bool = False):
+    """One streamed epoch segment (public wrapper; see
+    :func:`_run_dynamic_segment_impl`).  ``donate=True`` lets XLA reuse
+    the previous carry's buffers on non-CPU backends.
+    """
+    donate = donate and jax.default_backend() != "cpu"
+    return _dyn_segment_stepper(donate)(
+        p, k_max, count_bound, carry, addr, is_write, core, tier,
+        dyn_flag, n_pages, budget, threshold, period, dram_cap,
+        page_target_lines)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
 def _run_dynamic(p: cache_mod.CacheParams, k_max: int, count_bound: int,
                  addr: Array, is_write: Array, core: Array, tier: Array,
                  dyn_flag: Array, page_map0: Array, n_pages: Array,
                  budget: Array, threshold: Array, period: Array,
                  dram_cap: Array, page_target_lines: Array) -> DynOutputs:
-    """The epoch-structured batch program (see :func:`run_dynamic`)."""
-    b, n_slots, slot_len = addr.shape
-    n_p = page_map0.shape[1]
-    n_t = p.n_targets
-    cmax = jnp.int32(count_bound)
-    valid = addr != SENTINEL
-    lpp = jnp.int32(LINES_PER_PAGE)
+    """The epoch-structured batch program (see :func:`run_dynamic`).
 
-    def one(a, w, c, tr, v, flag, pmap0, npg, bud, thr, per, cap, ptl):
-        l1p, l2p = cache_mod.pack_state(cache_mod.init_state(p))
-        stats0 = jnp.zeros((cache_mod.nstats(n_t),), jnp.int32)
-        page_ids = jnp.arange(n_p, dtype=jnp.int32)
-        pvalid = page_ids < npg
-        rank = jnp.arange(k_max, dtype=jnp.int32)
-
-        def slot(carry, xs):
-            l1p, l2p, stats, t, pmap, counts, mig_rd, mig_wr, eidx = carry
-            a_s, w_s, c_s, tr_s, v_s = xs
-            page = jnp.clip(a_s // lpp, 0, n_p - 1)
-            intent = pmap[page]
-            # dynamic rows: page map decides DRAM vs the precomputed CXL
-            # target; static rows use the precomputed target verbatim
-            tgt = jnp.where(flag != 0,
-                            jnp.where(intent == 0, 0, tr_s), tr_s)
-            acc_t = v_s.sum().astype(jnp.int32)
-            acc_d = (v_s & (jnp.where(flag != 0, intent, tgt) == 0)) \
-                .sum().astype(jnp.int32)
-            (l1p, l2p, stats, t), _ = jax.lax.scan(
-                functools.partial(cache_mod._packed_step, p),
-                (l1p, l2p, stats, t),
-                (a_s, w_s.astype(bool), c_s, tgt.astype(jnp.int32), v_s),
-                unroll=2)
-            counts = counts.at[page].add(v_s.astype(jnp.int32))
-            eidx = eidx + 1
-            boundary = (eidx % per) == 0
-            do_mig = boundary & (bud > 0)
-            new_pmap, pro_tl, dem_tl, n_pro, n_dem = _migration_step(
-                pmap, counts, ptl, page_ids, pvalid, rank,
-                bud, thr, cap, do_mig, cmax, n_p, k_max)
-            # promotions read the page from its CXL endpoints + write it
-            # to DRAM; demotions read DRAM + write the CXL endpoints
-            mig_rd = mig_rd + pro_tl.at[0].add(n_dem * lpp)
-            mig_wr = mig_wr + dem_tl.at[0].add(n_pro * lpp)
-            counts = jnp.where(boundary, 0, counts)
-            ys = jnp.stack([acc_t, acc_d, n_pro, n_dem])
-            carry = (l1p, l2p, stats, t, new_pmap, counts,
-                     mig_rd, mig_wr, eidx)
-            return carry, (ys, stats)
-
-        carry0 = (l1p, l2p, stats0, jnp.int32(1), pmap0,
-                  jnp.zeros((n_p,), jnp.int32),
-                  jnp.zeros((n_t,), jnp.int32),
-                  jnp.zeros((n_t,), jnp.int32), jnp.int32(0))
-        carry, (slots, snaps) = jax.lax.scan(slot, carry0, (a, w, c, tr, v))
-        _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
-        return stats, pmap_f, mig_rd, mig_wr, slots, snaps
-
-    out = jax.vmap(one)(addr, is_write, core, tier, valid, dyn_flag,
-                        page_map0, n_pages, budget, threshold, period,
-                        dram_cap, page_target_lines)
-    return DynOutputs(*out)
+    One segment spanning every epoch slot, threaded through the same
+    carry the streaming path uses.
+    """
+    carry = init_dyn_carry(p, page_map0)
+    carry, slots, snaps = _run_dynamic_segment_impl(
+        p, k_max, count_bound, carry, addr, is_write, core, tier,
+        dyn_flag, n_pages, budget, threshold, period, dram_cap,
+        page_target_lines)
+    _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
+    return DynOutputs(stats, pmap_f, mig_rd, mig_wr, slots, snaps)
 
 
 def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
                 *, slot_len: int, k_max: int, dyn_flag, page_map0,
                 n_pages, budget, threshold, period, dram_cap,
-                page_target_lines) -> DynOutputs:
+                page_target_lines,
+                segment_slots: Optional[int] = None) -> DynOutputs:
     """Run a `(B, N)` batch under epoch-based dynamic tiering.
 
     One jitted device program: an outer ``lax.scan`` over ``N //
@@ -326,6 +404,13 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
         Lines of each page per CXL endpoint under the row's committed
         HDM decode (:meth:`RouteMap.page_target_lines`) — the migration
         traffic attribution table.
+    segment_slots : int, optional
+        Stream the epoch program in segments of this many slots: one
+        device call per segment with the full tierer carry (cache state,
+        page map, counters, migration totals, slot index) threaded
+        between calls, so only one segment's trace is scanned per
+        program.  Outputs are bitwise-equal to the resident scan
+        (test-enforced).
 
     Returns
     -------
@@ -359,19 +444,36 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
         return jnp.asarray(x, jnp.int32).reshape(shape3)
 
     z = jnp.zeros((b, n), jnp.int32)
-    return _run_dynamic(
-        p, int(k_max), count_bound, r3(addr),
-        r3(z if is_write is None else is_write),
-        r3(z if core is None else core),
-        r3(z if tier is None else tier),
-        jnp.asarray(dyn_flag, jnp.int32),
-        jnp.asarray(page_map0, jnp.int32),
-        jnp.asarray(n_pages, jnp.int32),
-        jnp.asarray(budget, jnp.int32),
-        jnp.asarray(threshold, jnp.int32),
-        jnp.asarray(period, jnp.int32),
-        jnp.asarray(dram_cap, jnp.int32),
-        jnp.asarray(page_target_lines, jnp.int32))
+    a3 = r3(addr)
+    w3 = r3(z if is_write is None else is_write)
+    c3 = r3(z if core is None else core)
+    t3 = r3(z if tier is None else tier)
+    scalars = (jnp.asarray(dyn_flag, jnp.int32),
+               jnp.asarray(n_pages, jnp.int32),
+               jnp.asarray(budget, jnp.int32),
+               jnp.asarray(threshold, jnp.int32),
+               jnp.asarray(period, jnp.int32),
+               jnp.asarray(dram_cap, jnp.int32),
+               jnp.asarray(page_target_lines, jnp.int32))
+    if segment_slots is None:
+        return _run_dynamic(p, int(k_max), count_bound, a3, w3, c3, t3,
+                            scalars[0], jnp.asarray(page_map0, jnp.int32),
+                            *scalars[1:])
+    if segment_slots < 1:
+        raise ValueError(f"segment_slots must be >= 1, got {segment_slots}")
+    carry = init_dyn_carry(p, jnp.asarray(page_map0, jnp.int32))
+    slots_parts, snaps_parts = [], []
+    for s in range(0, e, segment_slots):
+        sl = slice(s, min(s + segment_slots, e))
+        carry, slots, snaps = run_dynamic_segment(
+            p, int(k_max), count_bound, carry, a3[:, sl], w3[:, sl],
+            c3[:, sl], t3[:, sl], *scalars, donate=True)
+        slots_parts.append(slots)
+        snaps_parts.append(snaps)
+    _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
+    return DynOutputs(stats, pmap_f, mig_rd, mig_wr,
+                      jnp.concatenate(slots_parts, axis=1),
+                      jnp.concatenate(snaps_parts, axis=1))
 
 
 # ---------------------------------------------------------------------------

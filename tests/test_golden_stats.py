@@ -15,7 +15,7 @@ import pathlib
 import pytest
 
 from repro.core import cache as C
-from repro.core import engine, numa
+from repro.core import distribute, engine, numa
 from repro.core import route as route_mod
 from repro.core.machine import CPUModel
 from repro.core.timing import TimingConfig
@@ -56,10 +56,24 @@ def _workloads_row() -> dict:
         workloads=(Gups(),)))
 
 
+def _distribute_rows() -> list:
+    """The distribute family: the engine-family grid widened to two
+    policies, run SHARDED (2 shards) and STREAMED (512-access segments)
+    — pinning that the executor seam stays on the legacy numbers."""
+    spec = engine.SweepSpec(
+        footprint_factors=(2,),
+        policies=(numa.WeightedInterleave(1, 1), numa.ZNuma(1.0)),
+        cpus=_CPU)
+    return distribute.run_sweep(spec, _CACHE, _TIMING,
+                                mesh=distribute.Mesh(n_shards=2),
+                                stream_chunk=512)
+
+
 GOLDEN_CASES = {
     "engine": _engine_row,
     "topology": _topology_row,
     "workloads": _workloads_row,
+    "distribute": _distribute_rows,
 }
 
 

@@ -1,0 +1,69 @@
+#!/usr/bin/env python3
+"""One-line summaries of the BENCH_*.json reports (CI log visibility).
+
+Prints a single line per benchmark report found at the repo root, so the
+performance trajectory — sweep throughput above all — is visible in
+every CI run's log without downloading the artifacts:
+
+    python tools/bench_summary.py
+
+Unknown report shapes degrade to a key count rather than failing; a
+missing report is simply skipped (exit is always 0 unless no report at
+all was found).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def summarize(name: str, d: dict) -> str:
+    if name == "distribute":
+        s = d.get("streaming", {})
+        return (f"sweep-throughput {d.get('sweep_rows_per_s', '?')} rows/s "
+                f"on {d.get('n_devices', '?')} device(s); "
+                f"shard parity={d.get('sharded_bitwise_equal_single_program')}"
+                f"; streaming {s.get('resident_bytes', 0) / 2**20:.1f} MiB "
+                f"trace in {s.get('segment_bytes', 0) / 2**20:.1f} MiB "
+                f"segments, parity={s.get('bitwise_equal_resident')}")
+    if name == "engine":
+        return (f"batched vs sequential speedup {d.get('speedup_warm')}x "
+                f"warm ({d.get('batched_warm_maccess_per_s')} Maccess/s); "
+                f"bitwise={d.get('stats_bitwise_equal')}")
+    if name == "topology":
+        return (f"{len(d.get('suite', {}).get('topologies', []))} topologies "
+                f"one-program, warm {d.get('warm_s')}s; direct1 parity="
+                f"{d.get('direct1_bitwise_equals_binary_tier')}")
+    if name == "workloads":
+        return (f"{len(d.get('suite', {}).get('workloads', []))} generators "
+                f"one-program, warm {d.get('warm_s')}s; kv parity="
+                f"{d.get('kv_decode_device_bitwise_equals_host_reference')}")
+    if name == "tiering":
+        return (f"hot_cold dynamic-vs-static effective-bw win "
+                f"{d.get('hot_cold_effective_bw_win')}x at "
+                f"{d.get('hot_cold_migration_gbps')} GB/s migration")
+    return f"{len(d)} top-level keys"
+
+
+def main() -> int:
+    found = 0
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        name = path.stem[len("BENCH_"):]
+        try:
+            d = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            print(f"{path.name}: unreadable ({e})")
+            continue
+        found += 1
+        print(f"{path.name}: {summarize(name, d)}")
+    if not found:
+        print("no BENCH_*.json reports at the repo root")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,7 +58,7 @@ def check(files) -> list:
 
 
 def main() -> int:
-    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").rglob("*.md"))]
     missing = [str(f) for f in files if not f.exists()]
     if missing:
         print("missing markdown sources:", ", ".join(missing))

@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""Extract and execute the ```python code blocks of markdown docs.
+
+The tutorial (docs/tutorial.md) and the README quickstart are living
+code: CI runs every fenced ``python`` block, in order, in one shared
+namespace per file — so a doc that drifts from the API fails the build
+instead of silently rotting.
+
+    PYTHONPATH=src python tools/run_doc_snippets.py docs/tutorial.md
+    python tools/run_doc_snippets.py README.md docs/tutorial.md
+
+Blocks fenced as ```python-norun are skipped (illustrative fragments).
+Exits non-zero with the failing block's source on any exception, and
+when a file yields zero blocks (a gate that extracts nothing is a
+broken gate, not a pass).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BLOCK = re.compile(r"^```python[ \t]*\n(.*?)^```[ \t]*$",
+                   re.M | re.S)
+
+
+def blocks_of(path: pathlib.Path) -> list:
+    return [m.group(1) for m in BLOCK.finditer(path.read_text())]
+
+
+def run_file(path: pathlib.Path) -> int:
+    """Execute every python block of one file; returns the block count."""
+    ns = {"__name__": f"docsnippets:{path.name}"}
+    blocks = blocks_of(path)
+    for i, src in enumerate(blocks, 1):
+        print(f"[{path}] block {i}/{len(blocks)} "
+              f"({len(src.splitlines())} lines)")
+        try:
+            exec(compile(src, f"{path}#block{i}", "exec"), ns)
+        except Exception:
+            print(f"FAILED in {path} block {i}:\n{src}", file=sys.stderr)
+            raise
+    return len(blocks)
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if not args:
+        print(__doc__)
+        return 2
+    sys.path.insert(0, str(ROOT / "src"))
+    total = 0
+    for name in args:
+        path = (ROOT / name) if not pathlib.Path(name).is_absolute() \
+            else pathlib.Path(name)
+        if not path.exists():
+            print(f"missing markdown file: {name}", file=sys.stderr)
+            return 1
+        n = run_file(path)
+        if n == 0:
+            # a gate that extracts nothing is a broken gate, not a pass
+            print(f"no python blocks extracted from {name} — fence "
+                  f"format drifted?", file=sys.stderr)
+            return 1
+        total += n
+    print(f"executed {total} block(s) from {len(args)} file(s): OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
