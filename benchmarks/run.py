@@ -22,6 +22,10 @@ human-readable block per benchmark.
                         scaling (rows/s) + a streaming run whose trace
                         exceeds the resident working-set cap, both
                         bitwise-equal to the single-program path
+  resilience          — checkpointed, fault-tolerant sweeps: checkpoint
+                        overhead %, crash->resume fast-forward time,
+                        transient retry counts — every recovered run
+                        bitwise-equal to the uninterrupted one
   roofline_summary    — reads experiments/roofline JSON (dry-run derived)
 
 ``--only`` takes a comma-separated list of suites (e.g. ``--only
@@ -719,6 +723,131 @@ def distribute() -> None:
          f"Maccess/s={acc / t_stream / 1e6:.2f};parity={stream_parity}")
 
 
+def resilience() -> None:
+    """Checkpointed, fault-tolerant sweep runtime (`repro.core.resilience`).
+
+    (1) Checkpoint overhead: a streamed sweep (512-access segments) run
+    plain vs carry-checkpointed every 2 segments (blocking writes to a
+    tempdir) — overhead %, rows bitwise-equal.  (2) Resume: the same run
+    killed by an injected crash late in the sweep, then resumed from its
+    checkpoints — fast-forwarded segment count + resume wall time,
+    resumed rows bitwise-equal to the uninterrupted run.  (3) Retry: a
+    twice-firing transient device fault absorbed by exponential backoff —
+    retry count, rows unchanged.  Writes `BENCH_resilience.json`.
+    """
+    import tempfile
+
+    from repro.core import distribute as dist_mod
+    from repro.core import resilience as res_mod
+
+    print("\n== resilience (checkpointed, fault-tolerant sweeps) ==")
+    cache = cache_mod.CacheParams(l1_bytes=8 * 1024, l1_ways=2,
+                                  l2_bytes=16 * 1024, l2_ways=8)
+    timing = TimingConfig()
+    spec = engine_mod.SweepSpec(
+        footprint_factors=(2,),
+        policies=(numa.WeightedInterleave(1, 1), numa.ZNuma(1.0)),
+        cpus=(CPUModel(kind="o3", mlp=8),))
+    seg = 512
+
+    run_plain = lambda: dist_mod.run_sweep(spec, cache, timing,
+                                           stream_chunk=seg)
+    base_rows = run_plain()                       # compile
+    t0 = time.time()
+    base_rows = run_plain()
+    t_plain = time.time() - t0
+
+    # --- checkpoint overhead (warm, fresh directory per run) --------------
+    def run_ckpt(d):
+        pol = res_mod.CheckpointPolicy(d, every_segments=2, blocking=True)
+        rep = res_mod.RunReport()
+        rows = dist_mod.run_sweep(spec, cache, timing, stream_chunk=seg,
+                                  resume=pol, report=rep)
+        return rows, rep
+
+    with tempfile.TemporaryDirectory() as d:
+        run_ckpt(d)                               # warm the resilient path
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        rows_c, rep_c = run_ckpt(d)
+        t_ckpt = time.time() - t0
+    ckpt_parity = rows_c == base_rows
+    assert ckpt_parity, "checkpointed rows diverged from the plain sweep"
+    overhead_pct = (t_ckpt - t_plain) / t_plain * 100.0
+    n_ckpts = rep_c.count("checkpoint")
+    ckpt_s = rep_c.summary()["checkpoint_s_total"]
+
+    # --- crash -> resume fast-forward -------------------------------------
+    with tempfile.TemporaryDirectory() as d:
+        pol = res_mod.CheckpointPolicy(d, every_segments=2, blocking=True)
+        plan = res_mod.FaultPlan(
+            (res_mod.Fault("crash", shard=0, segment=6),))
+        try:
+            dist_mod.run_sweep(spec, cache, timing, stream_chunk=seg,
+                               resume=pol, fault_plan=plan)
+            raise AssertionError("injected crash did not fire")
+        except res_mod.RunKilled:
+            pass
+        rep_r = res_mod.RunReport()
+        t0 = time.time()
+        rows_r = dist_mod.run_sweep(spec, cache, timing, stream_chunk=seg,
+                                    resume=pol, report=rep_r)
+        t_resume = time.time() - t0
+    resume_parity = rows_r == base_rows
+    assert resume_parity, "resumed rows diverged from the plain sweep"
+    ff = rep_r.summary()["fast_forwarded_segments"]
+
+    # --- transient retry with backoff -------------------------------------
+    plan = res_mod.FaultPlan(
+        (res_mod.Fault("transient", shard=0, segment=0, count=2),))
+    rep_t = res_mod.RunReport()
+    rows_t = dist_mod.run_sweep(
+        spec, cache, timing, stream_chunk=seg, fault_plan=plan,
+        retry=res_mod.RetryPolicy(backoff_s=0.001), report=rep_t)
+    retry_parity = rows_t == base_rows
+    assert retry_parity, "retried rows diverged from the plain sweep"
+    retries = rep_t.retries
+
+    report = {
+        "suite": {"footprint_factors": [2],
+                  "policies": [numa.describe(p_) for p_ in spec.policies],
+                  "cpus": [c.kind for c in spec.cpus],
+                  "rows": len(base_rows), "stream_chunk": seg,
+                  "checkpoint_every_segments": 2},
+        "plain_warm_s": round(t_plain, 4),
+        "checkpointed_warm_s": round(t_ckpt, 4),
+        "checkpoint_overhead_pct": round(overhead_pct, 2),
+        "checkpoints_written": n_ckpts,
+        "checkpoint_s_total": round(ckpt_s, 4),
+        "checkpointed_bitwise_equal_plain": ckpt_parity,
+        "resume": {
+            "killed_at_segment": 6,
+            "fast_forwarded_segments": ff,
+            "resume_s": round(t_resume, 4),
+            "rows_bitwise_equal_uninterrupted": resume_parity,
+        },
+        "retry": {
+            "injected_transients": 2,
+            "retries": retries,
+            "rows_bitwise_equal_plain": retry_parity,
+        },
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_resilience.json"
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"  checkpointing: plain {t_plain:.3f}s -> checkpointed "
+          f"{t_ckpt:.3f}s ({overhead_pct:+.1f}%, {n_ckpts} checkpoints, "
+          f"{ckpt_s:.3f}s writing); parity={ckpt_parity}")
+    print(f"  crash@seg6 -> resume: fast-forwarded {ff} segments, "
+          f"resume {t_resume:.3f}s; parity={resume_parity}")
+    print(f"  transient x2 -> {retries} retries absorbed; "
+          f"parity={retry_parity} -> {out.name}")
+    emit("resilience_ckpt", t_ckpt * 1e6,
+         f"overhead={overhead_pct:.1f}%;parity={ckpt_parity}")
+    emit("resilience_resume", t_resume * 1e6,
+         f"ff_segments={ff};retries={retries}")
+
+
 def roofline_summary() -> None:
     """Digest of the dry-run-derived roofline (experiments/roofline)."""
     print("\n== roofline_summary (from multi-pod dry-run) ==")
@@ -759,6 +888,7 @@ BENCHES: Dict[str, Callable[[], None]] = {
     "workloads": workloads,
     "tiering": tiering,
     "distribute": distribute,
+    "resilience": resilience,
     "roofline_summary": roofline_summary,
 }
 

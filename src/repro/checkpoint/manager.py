@@ -30,6 +30,15 @@ import numpy as np
 Manifest = Dict[str, Any]
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint failed validation on restore (structure/shape/treedef).
+
+    Raised instead of ``assert`` so the checks survive ``python -O`` —
+    restoring a mismatched carry must never silently produce wrong
+    state.
+    """
+
+
 def _flatten(tree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
     leaves, treedef = jax.tree.flatten(tree)
     named = [(f"leaf_{i:05d}", np.asarray(x)) for i, x in enumerate(leaves)]
@@ -43,6 +52,12 @@ class CheckpointManager:
         self.keep = keep
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # A crash mid-save leaves a tmp_step_* dir behind; restore never
+        # reads them (all_steps globs step_*), but they accumulate and a
+        # later save to the same step would inherit stale leaves, so
+        # sweep them on startup.
+        for stale in self.dir.glob("tmp_step_*"):
+            shutil.rmtree(stale, ignore_errors=True)
 
     # ---- save ----------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
@@ -114,13 +129,23 @@ class CheckpointManager:
         d = self.dir / f"step_{step:06d}"
         manifest = json.loads((d / "manifest.json").read_text())
         leaves_like, treedef = jax.tree.flatten(like)
-        assert len(manifest["leaves"]) == len(leaves_like), \
-            "checkpoint/model structure mismatch"
+        stored_treedef = manifest.get("treedef")
+        if stored_treedef is not None and stored_treedef != str(treedef):
+            raise CheckpointError(
+                f"checkpoint treedef mismatch at step {step}: stored "
+                f"{stored_treedef}, `like` has {treedef}")
+        if len(manifest["leaves"]) != len(leaves_like):
+            raise CheckpointError(
+                f"checkpoint/model structure mismatch at step {step}: "
+                f"{len(manifest['leaves'])} stored leaves vs "
+                f"{len(leaves_like)} in `like`")
         arrays = []
         for meta, ref in zip(manifest["leaves"], leaves_like):
             arr = np.load(d / f"{meta['name']}.npy")
-            assert tuple(arr.shape) == tuple(ref.shape), \
-                f"{meta['name']}: {arr.shape} != {ref.shape}"
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise CheckpointError(
+                    f"{meta['name']}: stored shape {tuple(arr.shape)} != "
+                    f"expected {tuple(ref.shape)} at step {step}")
             arrays.append(arr.astype(ref.dtype))
         tree = jax.tree.unflatten(treedef, arrays)
         if shardings is not None:

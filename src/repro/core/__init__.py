@@ -5,9 +5,13 @@ timing -> numa -> cache -> stream -> machine -> route -> engine ->
 distribute -> simulator.
 """
 from repro.core.distribute import (  # noqa: F401
-    Mesh, ShardedExecutor, auto_mesh, stream_traces,
+    Mesh, ResilientExecutor, ShardedExecutor, auto_mesh, stream_traces,
 )
 from repro.core.engine import SweepSpec, run_sweep, run_traces  # noqa: F401
+from repro.core.resilience import (  # noqa: F401
+    CheckpointPolicy, Fault, FaultPlan, ResilienceError, RetryPolicy,
+    RunKilled, RunReport,
+)
 from repro.core.route import (  # noqa: F401
     RouteMap, TopologySpec, build_route, build_route_from_system, direct,
     switched,

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Iterable, Iterator, List, Optional, Tuple
 
 import jax
@@ -52,10 +53,14 @@ import numpy as np
 
 from repro.core import cache as cache_mod
 from repro.core import engine
+from repro.core import resilience
 from repro.core import tiering_dyn
 from repro.core.engine import SENTINEL, SweepSpec, TraceBatch
 from repro.core.machine import RunResult
+from repro.core.resilience import (CheckpointPolicy, FaultPlan, RetryPolicy,
+                                   RunReport, SweepCheckpointer)
 from repro.core.timing import TimingConfig
+from repro.runtime.fault import FleetState
 
 Array = jax.Array
 
@@ -228,7 +233,9 @@ def segment_batch(batch_or_arrays, segment: int
 
 
 def stream_traces(p: cache_mod.CacheParams,
-                  source: Iterable[Tuple],
+                  source: Iterable[Tuple], *,
+                  checkpoint=None,
+                  report: Optional[RunReport] = None,
                   ) -> Tuple[Array, cache_mod.CacheState]:
     """Consume a trace as a stream of fixed-size segments, bounded memory.
 
@@ -245,6 +252,15 @@ def stream_traces(p: cache_mod.CacheParams,
         exceed device memory: only one segment plus the scan carry is
         ever resident, and the carry buffers are donated between calls
         on non-CPU backends.
+    checkpoint : CheckpointPolicy, path, or None
+        Persist the scan carry every
+        :attr:`~repro.core.resilience.CheckpointPolicy.every_segments`
+        consumed segments; a rerun against the same directory (with a
+        deterministically regenerable ``source``) **fast-forwards**
+        past the already-completed segments without a single device
+        call and produces bitwise-identical results (test-enforced).
+    report : RunReport, optional
+        Event sink for ``resume`` / ``checkpoint`` records.
 
     Returns
     -------
@@ -252,18 +268,40 @@ def stream_traces(p: cache_mod.CacheParams,
         Exactly :func:`repro.core.engine.run_traces`'s return — and
         bitwise-equal to it on the concatenated trace (test-enforced).
     """
+    policy = resilience.as_checkpoint_policy(checkpoint)
+    ckpt: Optional[SweepCheckpointer] = None
     carry = None
+    done = 0
+    idx = 0
     for seg in source:
         addr = jnp.asarray(seg[0], jnp.int32)
+        if carry is None:
+            carry = engine.init_batch_carry(p, addr.shape[0])
+            if policy is not None:
+                ckpt = SweepCheckpointer(policy)
+                ckpt.verify_meta({"kind": "stream",
+                                  "b": int(addr.shape[0]),
+                                  "n_targets": p.n_targets})
+                got = ckpt.restore(0, {"carry": resilience.host_tree(carry)},
+                                   report=report)
+                if got is not None:
+                    done, tree = got
+                    carry = tree["carry"]
+        idx += 1
+        if idx <= done:
+            continue        # fast-forward: replayed segments cost no call
         z = jnp.zeros(addr.shape, jnp.int32)
         fields = [z if (len(seg) <= i or seg[i] is None)
                   else jnp.asarray(seg[i], jnp.int32) for i in (1, 2, 3)]
-        if carry is None:
-            carry = engine.init_batch_carry(p, addr.shape[0])
         carry = engine.run_batch_segment(p, carry, addr, *fields,
                                          donate=True)
+        if ckpt is not None and idx % policy.every_segments == 0:
+            ckpt.save(0, idx, {"carry": resilience.host_tree(carry)},
+                      report=report)
     if carry is None:
         raise ValueError("empty trace source")
+    if ckpt is not None:
+        ckpt.wait()
     l1p, l2p, stats, _ = carry
     return stats, cache_mod.unpack_state(l1p, l2p)
 
@@ -446,13 +484,371 @@ class ShardedExecutor:
 
 
 # ---------------------------------------------------------------------------
+# The resilient executor: checkpoints, retries, degradation, eviction
+# ---------------------------------------------------------------------------
+class ResilientExecutor:
+    """Fault-tolerant sweep execution on the same executor seam.
+
+    Drop-in for :class:`~repro.core.engine.LocalExecutor` /
+    :class:`ShardedExecutor` — same ``run_static`` / ``run_dynamic``
+    contract, bitwise-identical counters (test- and golden-enforced) —
+    that survives the failure modes a week-long sweep meets in practice:
+
+    * **crash / kill** — every shard's scan carry is checkpointed every
+      ``checkpoint.every_segments`` completed segments (atomic, async,
+      keep-K via :class:`~repro.core.resilience.SweepCheckpointer`); a
+      rerun against the same directory restores each shard's newest
+      carry and fast-forwards past the completed segments without a
+      single device call;
+    * **transient device errors** — each segment dispatch retries with
+      exponential backoff (:class:`~repro.core.resilience.RetryPolicy`),
+      raising :class:`~repro.core.resilience.ResilienceError` only when
+      the budget is exhausted;
+    * **OOM** — the failing shard's segments are halved (re-dispatched
+      as two half-width calls from the intact pre-segment carry, and
+      again on repeat) up to ``retry.max_halvings`` times — segment
+      boundaries are bitwise-neutral, so degraded rows are identical;
+    * **device loss** — the losing logical host is evicted from a
+      :class:`repro.runtime.fault.FleetState` (the training runtime's
+      eviction bookkeeping, reused) and the shard requeues onto the
+      next surviving device.
+
+    Shards run sequentially per dispatch (recovery needs per-shard
+    carries), which changes *strategy*, never *results* — rows are
+    simulated independently and the per-access arithmetic is exactly
+    the engine's segment step.  Requires the reference backend (the
+    Pallas kernel exposes no resumable carry).
+
+    Every recovery action lands in :attr:`report`
+    (:class:`~repro.core.resilience.RunReport`); injected failures come
+    from an optional :class:`~repro.core.resilience.FaultPlan`, making
+    all of the above deterministic and testable on one CPU host.
+
+    Parameters
+    ----------
+    mesh : Mesh, int, or None
+        Row partition (also the logical host pool for eviction);
+        ``None`` = one shard.
+    stream_chunk : int, optional
+        Trace elements per streamed segment — also the checkpoint and
+        recovery granularity.  ``None`` = one segment per trace
+        (checkpoint only at completion).
+    checkpoint : CheckpointPolicy, path, or None
+        Where/how often to persist carries; a bare path uses the
+        policy defaults.  ``None`` disables persistence (retry/OOM
+        recovery still work from in-memory carries).
+    fault_plan : FaultPlan, optional
+        Deterministic failure injection (tests, chaos drills).
+    retry : RetryPolicy, optional
+        Backoff and degradation bounds.
+    report : RunReport, optional
+        Event sink; a fresh one is created when omitted.
+    sleeper : callable
+        Injectable ``time.sleep`` (tests pass a recorder).
+    """
+
+    def __init__(self, mesh=None, stream_chunk: Optional[int] = None, *,
+                 checkpoint=None, fault_plan: Optional[FaultPlan] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 report: Optional[RunReport] = None,
+                 sleeper=time.sleep):
+        if stream_chunk is not None and stream_chunk < 1:
+            raise ValueError(
+                f"stream_chunk must be >= 1, got {stream_chunk}")
+        self.mesh = _as_mesh(mesh)
+        self.stream_chunk = stream_chunk
+        self.checkpoint = resilience.as_checkpoint_policy(checkpoint)
+        self.fault_plan = fault_plan
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.report = report if report is not None else RunReport()
+        self.sleeper = sleeper
+
+    # -- shared recovery machinery -----------------------------------------
+    def _checkpointer(self, meta: dict) -> Optional[SweepCheckpointer]:
+        if self.checkpoint is None:
+            return None
+        ckpt = SweepCheckpointer(self.checkpoint)
+        ckpt.verify_meta(meta)
+        return ckpt
+
+    def _fleet_devices(self):
+        mesh = self.mesh or Mesh(n_shards=1)
+        devices = mesh.resolve_devices()
+        return mesh, devices, FleetState(n_hosts=len(devices))
+
+    def _shard_device(self, shard: int, fleet: FleetState, devices):
+        live = fleet.live_hosts()
+        if not live:
+            raise resilience.ResilienceError(
+                "no surviving devices: every logical host was evicted")
+        return live[shard % len(live)], devices[live[shard % len(live)]]
+
+    def _dispatch(self, shard: int, segment: int, width: int,
+                  fleet: FleetState, devices, call):
+        """Run one device call under the full recovery policy.
+
+        ``call()`` is re-invoked on transient errors (bounded retry,
+        exponential backoff) and after device eviction; OOM and crash
+        propagate to the caller (the segment loop owns degradation, the
+        user owns resume).  Returns ``call()``'s value.
+        """
+        attempts = 0
+        while True:
+            try:
+                if self.fault_plan is not None:
+                    self.fault_plan.check(shard, segment, width=width,
+                                          report=self.report,
+                                          sleeper=self.sleeper)
+                return call()
+            except Exception as exc:     # RunKilled (BaseException) flies
+                kind = resilience.classify_failure(exc)
+                if kind == "fatal":
+                    raise
+                if kind == "oom":
+                    raise               # the segment loop halves + reruns
+                if kind == "device_lost":
+                    host, _ = self._shard_device(shard, fleet, devices)
+                    fleet.evict(host, "device_lost",
+                                log=self.report.events)
+                    # requeue onto a survivor; does not spend a retry
+                    self._shard_device(shard, fleet, devices)
+                    continue
+                if attempts >= self.retry.max_retries:
+                    raise resilience.ResilienceError(
+                        f"retry budget exhausted ({self.retry.max_retries}"
+                        f" retries) at shard {shard}, segment {segment}"
+                    ) from exc
+                backoff = self.retry.backoff(attempts)
+                self.report.add("retry", shard=shard, segment=segment,
+                                attempt=attempts + 1, backoff_s=backoff,
+                                error=str(exc))
+                self.sleeper(backoff)
+                attempts += 1
+
+    def _run_segment_degraded(self, shard: int, segment: int, carry,
+                              halvings: List[int], fleet, devices,
+                              units: int, unit_elems: int, advance):
+        """One top-level segment with OOM degradation.
+
+        ``advance(carry, lo, hi)`` advances the carry over the
+        ``[lo, hi)`` sub-slice of the segment's ``units`` (trace
+        columns for static rows, epoch slots for dynamic rows —
+        ``unit_elems`` trace elements per unit).  On OOM the whole
+        segment re-runs from the intact pre-segment carry in twice as
+        many pieces — sub-splitting is bitwise-neutral, so the degraded
+        result is identical.  The per-shard halving level sticks
+        (later segments stay degraded).
+        """
+        seg_carry = carry
+        while True:
+            pieces = 1 << halvings[shard]
+            step = max(1, -(-units // pieces))
+            try:
+                carry = seg_carry
+                for lo in range(0, units, step):
+                    hi = min(lo + step, units)
+                    carry = self._dispatch(
+                        shard, segment, (hi - lo) * unit_elems, fleet,
+                        devices,
+                        lambda c=carry, lo=lo, hi=hi: advance(c, lo, hi))
+                return carry
+            except Exception as exc:
+                if resilience.classify_failure(exc) != "oom":
+                    raise
+                if step <= 1 or halvings[shard] >= self.retry.max_halvings:
+                    raise resilience.ResilienceError(
+                        f"OOM persists at minimum segment width (shard "
+                        f"{shard}, segment {segment}, "
+                        f"{halvings[shard]} halvings)") from exc
+                halvings[shard] += 1
+                self.report.add("degrade", shard=shard, segment=segment,
+                                halvings=halvings[shard],
+                                pieces=1 << halvings[shard])
+
+    # -- static (flat-scan) rows -------------------------------------------
+    def run_static(self, p: cache_mod.CacheParams, batch: TraceBatch,
+                   *, backend: str, chunk: int) -> np.ndarray:
+        if backend != "reference":
+            raise NotImplementedError(
+                "ResilientExecutor requires the reference backend — "
+                "recovery replays the engine's segment carry, which the "
+                "Pallas kernel does not expose")
+        addr = jnp.asarray(batch.addr, jnp.int32)
+        b, n = addr.shape
+        z = jnp.zeros((b, n), jnp.int32)
+        fields = [z if a is None else jnp.asarray(a, jnp.int32)
+                  for a in (batch.is_write, batch.core, batch.tier)]
+        mesh, devices, fleet = self._fleet_devices()
+        n_shards = mesh.shard_count(b)
+        bp, b_pad = shard_plan(b, n_shards)
+        addr = _pad_rows(addr, b_pad, SENTINEL)
+        fields = [_pad_rows(a, b_pad, 0) for a in fields]
+        seg = min(self.stream_chunk or n, n)
+        n_pad = -(-n // seg) * seg
+        addr = engine._pad_to_segment(addr, n_pad, SENTINEL)
+        fields = [engine._pad_to_segment(a, n_pad, 0) for a in fields]
+        n_segments = n_pad // seg
+        ckpt = self._checkpointer({
+            "kind": "static", "b": b, "n": n, "n_shards": n_shards,
+            "segment": seg, "n_targets": p.n_targets})
+        halvings = [0] * n_shards
+        outs: List[np.ndarray] = []
+        for shard in range(n_shards):
+            rows = slice(shard * bp, (shard + 1) * bp)
+            sh = [a[rows] for a in (addr, *fields)]
+            carry = engine.init_batch_carry(p, bp)
+            start = 0
+            if ckpt is not None:
+                like = {"carry": resilience.host_tree(carry)}
+                got = ckpt.restore(shard, like, report=self.report)
+                if got is not None:
+                    start, tree = got
+                    carry = tree["carry"]
+
+            def advance(c, lo, hi, sh=sh, shard=shard, s0=0):
+                # placement follows the shard's current host (requeued
+                # shards land on a survivor); donate=False so a failed
+                # call leaves `c` intact for the retry
+                _, dev = self._shard_device(shard, fleet, devices)
+                args = [jax.device_put(a[:, s0 + lo:s0 + hi], dev)
+                        for a in sh]
+                return engine.run_batch_segment(
+                    p, jax.device_put(c, dev), *args, donate=False)
+
+            for si in range(start, n_segments):
+                carry = self._run_segment_degraded(
+                    shard, si, carry, halvings, fleet, devices, seg, 1,
+                    functools.partial(advance, s0=si * seg))
+                done = si + 1
+                if ckpt is not None and (
+                        done % self.checkpoint.every_segments == 0
+                        or done == n_segments):
+                    ckpt.save(shard, done,
+                              {"carry": resilience.host_tree(carry)},
+                              report=self.report)
+            outs.append(np.asarray(jax.block_until_ready(carry[2])))
+        if ckpt is not None:
+            ckpt.wait()
+        stats = np.concatenate(outs, axis=0)
+        return stats[:b].astype(np.int64)
+
+    # -- dynamic (epoch-structured) rows -----------------------------------
+    def run_dynamic(self, p: cache_mod.CacheParams, tb,
+                    *, slot_len: int, k_max: int):
+        batch = tb.batch
+        b = batch.batch
+        mesh, devices, fleet = self._fleet_devices()
+        n_shards = mesh.shard_count(b)
+        bp, b_pad = shard_plan(b, n_shards)
+        addr = _pad_rows(jnp.asarray(batch.addr, jnp.int32), b_pad,
+                         SENTINEL)
+        z = jnp.zeros(addr.shape, jnp.int32)
+        others = [z if a is None else _pad_rows(jnp.asarray(a, jnp.int32),
+                                                b_pad, 0)
+                  for a in (batch.is_write, batch.core, batch.tier)]
+        # padding rows are inert static rows — same fills as the
+        # sharded executor, so padded programs share its invariance
+        a3, w3, c3, t3, pmap0, scalars, k_max, count_bound = \
+            tiering_dyn.prep_dynamic_inputs(
+                addr, *others, slot_len=slot_len, k_max=k_max,
+                dyn_flag=_pad_rows(jnp.asarray(tb.dyn_flag, jnp.int32),
+                                   b_pad, 0),
+                page_map0=_pad_rows(jnp.asarray(tb.page_map0, jnp.int32),
+                                    b_pad, 1),
+                n_pages=_pad_rows(jnp.asarray(tb.n_pages, jnp.int32),
+                                  b_pad, 1),
+                budget=_pad_rows(jnp.asarray(tb.budget, jnp.int32),
+                                 b_pad, 0),
+                threshold=_pad_rows(jnp.asarray(tb.threshold, jnp.int32),
+                                    b_pad, 1),
+                period=_pad_rows(jnp.asarray(tb.period, jnp.int32),
+                                 b_pad, 1),
+                dram_cap=_pad_rows(jnp.asarray(tb.dram_cap, jnp.int32),
+                                   b_pad, engine._UNBOUNDED_PAGES),
+                page_target_lines=_pad_rows(
+                    jnp.asarray(tb.page_target_lines, jnp.int32),
+                    b_pad, 0))
+        e = a3.shape[1]
+        seg_slots = (e if self.stream_chunk is None
+                     else min(max(1, self.stream_chunk // slot_len), e))
+        n_segments = -(-e // seg_slots)
+        nstats = cache_mod.nstats(p.n_targets)
+        ckpt = self._checkpointer({
+            "kind": "dynamic", "b": b, "slots": e, "slot_len": slot_len,
+            "n_shards": n_shards, "segment_slots": seg_slots,
+            "n_targets": p.n_targets})
+        halvings = [0] * n_shards
+        outs = []
+        for shard in range(n_shards):
+            rows = slice(shard * bp, (shard + 1) * bp)
+            xs = [a[rows] for a in (a3, w3, c3, t3)]
+            sc = [s[rows] for s in scalars]
+            carry = tiering_dyn.init_dyn_carry(p, pmap0[rows])
+            # host accumulators keep the checkpoint tree shape-stable:
+            # completed segments fill their slice, the rest stays zero
+            slots_acc = np.zeros((bp, e, 4), np.int32)
+            snaps_acc = np.zeros((bp, e, nstats), np.int32)
+            start = 0
+            if ckpt is not None:
+                like = {"carry": resilience.host_tree(carry),
+                        "slots": slots_acc, "snaps": snaps_acc}
+                got = ckpt.restore(shard, like, report=self.report)
+                if got is not None:
+                    start, tree = got
+                    carry = tree["carry"]
+                    slots_acc = tree["slots"]
+                    snaps_acc = tree["snaps"]
+
+            def advance(c, lo, hi, xs=xs, sc=sc, shard=shard, s0=0,
+                        slots_acc=slots_acc, snaps_acc=snaps_acc):
+                _, dev = self._shard_device(shard, fleet, devices)
+                args = [jax.device_put(a[:, s0 + lo:s0 + hi], dev)
+                        for a in xs]
+                c, slots, snaps = tiering_dyn.run_dynamic_segment(
+                    p, k_max, count_bound, jax.device_put(c, dev),
+                    *args, *sc, donate=False)
+                sl = slice(s0 + lo, s0 + hi)
+                slots_acc[:, sl] = np.asarray(slots)
+                snaps_acc[:, sl] = np.asarray(snaps)
+                return c
+
+            for si in range(start, n_segments):
+                s0 = si * seg_slots
+                width = min(seg_slots, e - s0)
+                carry = self._run_segment_degraded(
+                    shard, si, carry, halvings, fleet, devices, width,
+                    slot_len, functools.partial(advance, s0=s0))
+                done = si + 1
+                if ckpt is not None and (
+                        done % self.checkpoint.every_segments == 0
+                        or done == n_segments):
+                    ckpt.save(shard, done,
+                              {"carry": resilience.host_tree(carry),
+                               "slots": slots_acc, "snaps": snaps_acc},
+                              report=self.report)
+            jax.block_until_ready(carry)
+            _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
+            outs.append(tiering_dyn.DynOutputs(
+                np.asarray(stats), np.asarray(pmap_f), np.asarray(mig_rd),
+                np.asarray(mig_wr), slots_acc, snaps_acc))
+        if ckpt is not None:
+            ckpt.wait()
+        return tiering_dyn.DynOutputs(*(
+            np.concatenate([getattr(o, f) for o in outs], axis=0)[:b]
+            for f in tiering_dyn.DynOutputs._fields))
+
+
+# ---------------------------------------------------------------------------
 # Facade: the sharded/streaming twins of engine.run_sweep
 # ---------------------------------------------------------------------------
 def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
               timing: TimingConfig, *, mesh=None,
               stream_chunk: Optional[int] = None,
-              chunk: int = 512) -> List[dict]:
-    """`engine.run_sweep` with sharding and streaming knobs.
+              chunk: int = 512, resume=None,
+              fault_plan: Optional[FaultPlan] = None,
+              retry: Optional[RetryPolicy] = None,
+              report: Optional[RunReport] = None) -> List[dict]:
+    """`engine.run_sweep` with sharding, streaming and resilience knobs.
 
     Parameters
     ----------
@@ -465,14 +861,31 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
     stream_chunk : int, optional
         Stream every trace through the scan carry in segments of this
         many accesses (bounded device memory per program).
+    resume : CheckpointPolicy, path, or None
+        Checkpoint directory for the :class:`ResilientExecutor`: scan
+        carries persist every
+        :attr:`~repro.core.resilience.CheckpointPolicy.every_segments`
+        segments, and a rerun against the same directory fast-forwards
+        past completed segments and shards — with rows bitwise-equal to
+        an uninterrupted run (test- and golden-enforced).
+    fault_plan : FaultPlan, optional
+        Deterministic failure injection; any of the resilience knobs
+        (``resume`` / ``fault_plan`` / ``retry`` / ``report``) selects
+        the :class:`ResilientExecutor`.
+    retry : RetryPolicy, optional
+        Retry/backoff/degradation bounds.
+    report : RunReport, optional
+        Event sink for retries, resumes, degradations, checkpoints.
 
     Returns
     -------
     list of dict
         Identical rows — schema and values — to `engine.run_sweep` for
-        any mesh/chunk choice (test-enforced).
+        any mesh/chunk/resilience choice (test-enforced).
     """
-    executor = _executor_for(mesh, stream_chunk)
+    executor = _executor_for(mesh, stream_chunk, resume=resume,
+                             fault_plan=fault_plan, retry=retry,
+                             report=report)
     return engine.run_sweep(spec, cache, timing, chunk=chunk,
                             executor=executor)
 
@@ -480,14 +893,25 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
 def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
                   timing: TimingConfig, *, mesh=None,
                   stream_chunk: Optional[int] = None,
-                  chunk: int = 512) -> List[RunResult]:
-    """`engine.sweep_results` with sharding and streaming knobs."""
-    executor = _executor_for(mesh, stream_chunk)
+                  chunk: int = 512, resume=None,
+                  fault_plan: Optional[FaultPlan] = None,
+                  retry: Optional[RetryPolicy] = None,
+                  report: Optional[RunReport] = None) -> List[RunResult]:
+    """`engine.sweep_results` with sharding/streaming/resilience knobs
+    (see :func:`run_sweep`)."""
+    executor = _executor_for(mesh, stream_chunk, resume=resume,
+                             fault_plan=fault_plan, retry=retry,
+                             report=report)
     return engine.sweep_results(spec, cache, timing, chunk=chunk,
                                 executor=executor)
 
 
-def _executor_for(mesh, stream_chunk):
+def _executor_for(mesh, stream_chunk, resume=None, fault_plan=None,
+                  retry=None, report=None):
+    if any(k is not None for k in (resume, fault_plan, retry, report)):
+        return ResilientExecutor(mesh=mesh, stream_chunk=stream_chunk,
+                                 checkpoint=resume, fault_plan=fault_plan,
+                                 retry=retry, report=report)
     if mesh is None and stream_chunk is None:
         return None                     # engine.LocalExecutor: legacy path
     return ShardedExecutor(mesh=mesh, stream_chunk=stream_chunk)

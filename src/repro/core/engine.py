@@ -592,9 +592,31 @@ class LocalExecutor:
 _LOCAL_EXECUTOR = LocalExecutor()
 
 
+def _resolve_executor(executor, resume, fault_plan, report):
+    """The executor the resilience knobs select (None = LocalExecutor).
+
+    ``resume`` / ``fault_plan`` / ``report`` build a
+    :class:`repro.core.distribute.ResilientExecutor` (deferred import —
+    distribute sits above engine); they are mutually exclusive with an
+    explicit ``executor``, which owns its own configuration.
+    """
+    if resume is None and fault_plan is None and report is None:
+        return executor
+    if executor is not None:
+        raise ValueError(
+            "pass either executor= or the resilience knobs "
+            "(resume/fault_plan/report), not both — configure a "
+            "ResilientExecutor directly for full control")
+    from repro.core import distribute
+    return distribute.ResilientExecutor(checkpoint=resume,
+                                        fault_plan=fault_plan,
+                                        report=report)
+
+
 def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
               timing: TimingConfig, *, chunk: int = 512,
-              executor=None) -> List[Dict]:
+              executor=None, resume=None, fault_plan=None,
+              report=None) -> List[Dict]:
     """Run the whole characterization suite as one batched device program.
 
     Parameters
@@ -614,6 +636,18 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
         ShardedExecutor` shards rows across devices and/or streams trace
         segments.  Any executor must return bitwise-identical counters,
         so rows never depend on the execution strategy (test-enforced).
+    resume : CheckpointPolicy, path, or None
+        Run (or resume) through a :class:`repro.core.distribute.
+        ResilientExecutor` checkpointing to this directory: a sweep
+        killed at an arbitrary segment boundary and rerun with the same
+        ``resume=`` fast-forwards past the completed segments/shards
+        and yields bitwise-identical rows (test- and golden-enforced).
+    fault_plan : repro.core.resilience.FaultPlan, optional
+        Deterministic failure injection (selects the resilient
+        executor, like ``resume``).
+    report : repro.core.resilience.RunReport, optional
+        Event sink recording retries, resumes, degradations and
+        checkpoint timings.
 
     Returns
     -------
@@ -628,7 +662,8 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
     """
     from repro.workloads.base import Stream  # deferred: wl builds on core
     results = sweep_results(spec, cache, timing, chunk=chunk,
-                            executor=executor)
+                            executor=executor, resume=resume,
+                            fault_plan=fault_plan, report=report)
     rows: List[Dict] = []
     i = 0
     for tr in spec.tiering_axis:
@@ -652,7 +687,8 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
 
 def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
                   timing: TimingConfig, *, chunk: int = 512,
-                  executor=None) -> List[RunResult]:
+                  executor=None, resume=None, fault_plan=None,
+                  report=None) -> List[RunResult]:
     """`run_sweep` returning full RunResults (row order identical).
 
     One device call simulates every (topology, workload, footprint,
@@ -669,7 +705,7 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
 
     Parameters
     ----------
-    spec, cache, timing, chunk
+    spec, cache, timing, chunk, resume, fault_plan, report
         As in :func:`run_sweep`.
 
     Returns
@@ -680,6 +716,7 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
     """
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}")
+    executor = _resolve_executor(executor, resume, fault_plan, report)
     executor = executor if executor is not None else _LOCAL_EXECUTOR
     routes = [None if tp is None else route_mod.build_route(tp, timing)
               for tp in spec.topology_axis]

@@ -117,7 +117,10 @@ class CXLRAMSim:
               workloads: Optional[Sequence] = None,
               tiering: Optional[Sequence] = None,
               mesh=None,
-              stream_chunk: Optional[int] = None) -> List[Dict]:
+              stream_chunk: Optional[int] = None,
+              resume=None,
+              fault_plan=None,
+              report=None) -> List[Dict]:
         """The full grid — (tiering x workload x topology x footprint x
         policy x CPU) — batched.
 
@@ -140,6 +143,17 @@ class CXLRAMSim:
         strategies, never result changes: any mesh/chunk choice yields
         rows bitwise-equal to the defaults (``None``/``None`` = the
         single-program path).  See ``docs/scaling.md``.
+
+        `resume` (a checkpoint directory or
+        :class:`repro.core.resilience.CheckpointPolicy`), `fault_plan`
+        (a :class:`repro.core.resilience.FaultPlan`) and `report` (a
+        :class:`repro.core.resilience.RunReport` event sink) run the
+        sweep through the fault-tolerant
+        :class:`repro.core.distribute.ResilientExecutor`: carries
+        checkpoint every N segments and a killed sweep rerun with the
+        same `resume=` fast-forwards to where it died — with rows
+        bitwise-identical to an uninterrupted run.  See
+        ``docs/resilience.md``.
         """
         policies = tuple(policies) if policies else (
             numa_mod.ZNuma(cxl_fraction=1.0),)
@@ -152,13 +166,16 @@ class CXLRAMSim:
             topologies=tuple(topologies) if topologies else (),
             workloads=tuple(workloads) if workloads else (),
             tiering=tuple(tiering) if tiering else ())
-        if mesh is None and stream_chunk is None:
+        if (mesh is None and stream_chunk is None and resume is None
+                and fault_plan is None and report is None):
             return engine_mod.run_sweep(spec, self.config.cache,
                                         self.config.timing)
         from repro.core import distribute  # deferred: builds on engine
         return distribute.run_sweep(spec, self.config.cache,
                                     self.config.timing, mesh=mesh,
-                                    stream_chunk=stream_chunk)
+                                    stream_chunk=stream_chunk,
+                                    resume=resume, fault_plan=fault_plan,
+                                    report=report)
 
     def stream_suite_sequential(self,
                                 footprint_factors: Sequence[int]

@@ -365,6 +365,63 @@ def _run_dynamic(p: cache_mod.CacheParams, k_max: int, count_bound: int,
     return DynOutputs(stats, pmap_f, mig_rd, mig_wr, slots, snaps)
 
 
+def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
+                        k_max: int, dyn_flag, page_map0, n_pages, budget,
+                        threshold, period, dram_cap, page_target_lines):
+    """Validate + reshape :func:`run_dynamic` inputs to slot-major form.
+
+    The shared front half of every dynamic-tiering execution path
+    (resident, streamed, and the resilient executor's checkpointed
+    segment loop): reshapes the (B, N) trace arrays to (B, E, slot_len),
+    clamps ``k_max`` to the page count, derives the epoch count bound
+    for the injective hotness keys (raising on int32 overflow), and
+    assembles the per-row scalar tuple in
+    :func:`run_dynamic_segment`'s argument order.
+
+    Returns ``(a3, w3, c3, t3, page_map0, scalars, k_max,
+    count_bound)`` where ``scalars = (dyn_flag, n_pages, budget,
+    threshold, period, dram_cap, page_target_lines)``.
+    """
+    addr = jnp.asarray(addr, jnp.int32)
+    if addr.ndim != 2:
+        raise ValueError("run_dynamic expects a (B, N) batch")
+    b, n = addr.shape
+    if n % slot_len != 0:
+        raise ValueError(f"trace length {n} is not a multiple of the "
+                         f"epoch slot length {slot_len}")
+    n_p = int(jnp.asarray(page_map0).shape[1])
+    # a budget beyond the page count can never be spent: clamp the top-k
+    # width to P (lax.top_k rejects k > minor dimension)
+    k_max = min(int(k_max), n_p)
+    # counts reset every epoch, so the coldness-key bound only needs to
+    # exceed the longest epoch (not the trace)
+    count_bound = int(np.max(np.asarray(period))) * slot_len + 1
+    if (count_bound + 1) * n_p + n_p >= 2 ** 31:
+        raise ValueError(
+            f"epoch hotness keys overflow int32: epoch_len * n_pages = "
+            f"{(count_bound - 1) * n_p}; shrink the epoch or page count")
+    e = n // slot_len
+    shape3 = (b, e, slot_len)
+
+    def r3(x):
+        return jnp.asarray(x, jnp.int32).reshape(shape3)
+
+    z = jnp.zeros((b, n), jnp.int32)
+    a3 = r3(addr)
+    w3 = r3(z if is_write is None else is_write)
+    c3 = r3(z if core is None else core)
+    t3 = r3(z if tier is None else tier)
+    scalars = (jnp.asarray(dyn_flag, jnp.int32),
+               jnp.asarray(n_pages, jnp.int32),
+               jnp.asarray(budget, jnp.int32),
+               jnp.asarray(threshold, jnp.int32),
+               jnp.asarray(period, jnp.int32),
+               jnp.asarray(dram_cap, jnp.int32),
+               jnp.asarray(page_target_lines, jnp.int32))
+    return (a3, w3, c3, t3, jnp.asarray(page_map0, jnp.int32), scalars,
+            k_max, count_bound)
+
+
 def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
                 *, slot_len: int, k_max: int, dyn_flag, page_map0,
                 n_pages, budget, threshold, period, dram_cap,
@@ -419,49 +476,19 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
         per-slot counters (:data:`SLOT_FIELDS`) and cumulative stat
         snapshots at each slot boundary.
     """
-    addr = jnp.asarray(addr, jnp.int32)
-    if addr.ndim != 2:
-        raise ValueError("run_dynamic expects a (B, N) batch")
-    b, n = addr.shape
-    if n % slot_len != 0:
-        raise ValueError(f"trace length {n} is not a multiple of the "
-                         f"epoch slot length {slot_len}")
-    n_p = int(jnp.asarray(page_map0).shape[1])
-    # a budget beyond the page count can never be spent: clamp the top-k
-    # width to P (lax.top_k rejects k > minor dimension)
-    k_max = min(int(k_max), n_p)
-    # counts reset every epoch, so the coldness-key bound only needs to
-    # exceed the longest epoch (not the trace)
-    count_bound = int(np.max(np.asarray(period))) * slot_len + 1
-    if (count_bound + 1) * n_p + n_p >= 2 ** 31:
-        raise ValueError(
-            f"epoch hotness keys overflow int32: epoch_len * n_pages = "
-            f"{(count_bound - 1) * n_p}; shrink the epoch or page count")
-    e = n // slot_len
-    shape3 = (b, e, slot_len)
-
-    def r3(x):
-        return jnp.asarray(x, jnp.int32).reshape(shape3)
-
-    z = jnp.zeros((b, n), jnp.int32)
-    a3 = r3(addr)
-    w3 = r3(z if is_write is None else is_write)
-    c3 = r3(z if core is None else core)
-    t3 = r3(z if tier is None else tier)
-    scalars = (jnp.asarray(dyn_flag, jnp.int32),
-               jnp.asarray(n_pages, jnp.int32),
-               jnp.asarray(budget, jnp.int32),
-               jnp.asarray(threshold, jnp.int32),
-               jnp.asarray(period, jnp.int32),
-               jnp.asarray(dram_cap, jnp.int32),
-               jnp.asarray(page_target_lines, jnp.int32))
+    a3, w3, c3, t3, page_map0, scalars, k_max, count_bound = \
+        prep_dynamic_inputs(
+            addr, is_write, core, tier, slot_len=slot_len, k_max=k_max,
+            dyn_flag=dyn_flag, page_map0=page_map0, n_pages=n_pages,
+            budget=budget, threshold=threshold, period=period,
+            dram_cap=dram_cap, page_target_lines=page_target_lines)
+    e = a3.shape[1]
     if segment_slots is None:
         return _run_dynamic(p, int(k_max), count_bound, a3, w3, c3, t3,
-                            scalars[0], jnp.asarray(page_map0, jnp.int32),
-                            *scalars[1:])
+                            scalars[0], page_map0, *scalars[1:])
     if segment_slots < 1:
         raise ValueError(f"segment_slots must be >= 1, got {segment_slots}")
-    carry = init_dyn_carry(p, jnp.asarray(page_map0, jnp.int32))
+    carry = init_dyn_carry(p, page_map0)
     slots_parts, snaps_parts = [], []
     for s in range(0, e, segment_slots):
         sl = slice(s, min(s + segment_slots, e))

@@ -45,6 +45,29 @@ class FleetState:
     def live_hosts(self) -> List[int]:
         return [h for h in range(self.n_hosts) if h not in self.evicted]
 
+    def evict(self, host: int, reason: str,
+              log: Optional[List[Dict]] = None,
+              on_resize: Optional[Callable[[int], None]] = None) -> bool:
+        """Mark a host dead (idempotent); returns True if newly evicted.
+
+        The shared eviction bookkeeping: appends an ``evict`` event to
+        ``log`` (the runtime's log, or a
+        :class:`repro.core.resilience.RunReport`'s ``events``) and calls
+        ``on_resize`` with the surviving host count.  Used by both the
+        training runtime's straggler/failure policy and the sweep
+        :class:`repro.core.distribute.ResilientExecutor`'s shard
+        requeue.
+        """
+        if host in self.evicted:
+            return False
+        self.evicted.append(host)
+        if log is not None:
+            log.append({"event": "evict", "host": host, "reason": reason,
+                        "live": len(self.live_hosts())})
+        if on_resize:
+            on_resize(len(self.live_hosts()))
+        return True
+
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
@@ -100,13 +123,8 @@ class TrainingRuntime:
                 self.fleet.flagged.pop(h, None)
 
     def _evict(self, host: int, reason: str) -> None:
-        if host in self.fleet.evicted:
-            return
-        self.fleet.evicted.append(host)
-        self.log.append({"event": "evict", "host": host, "reason": reason,
-                         "live": len(self.fleet.live_hosts())})
-        if self.on_resize:
-            self.on_resize(len(self.fleet.live_hosts()))
+        self.fleet.evict(host, reason, log=self.log,
+                         on_resize=self.on_resize)
 
     # ---- main loop ----------------------------------------------------------
     def run(self, state, start_step: int, n_steps: int):

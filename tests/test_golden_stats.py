@@ -69,11 +69,36 @@ def _distribute_rows() -> list:
                                 stream_chunk=512)
 
 
+def _resilience_rows() -> list:
+    """The resilience family: the distribute-family grid run through the
+    `ResilientExecutor` with an injected crash mid-run, then *resumed*
+    from its checkpoints — pinning that a killed-and-resumed sweep stays
+    bitwise on the legacy numbers (rows, stats and floats)."""
+    import tempfile
+
+    from repro.core import resilience as R
+    spec = engine.SweepSpec(
+        footprint_factors=(2,),
+        policies=(numa.WeightedInterleave(1, 1), numa.ZNuma(1.0)),
+        cpus=_CPU)
+    with tempfile.TemporaryDirectory() as d:
+        pol = R.CheckpointPolicy(d, every_segments=1, blocking=True)
+        plan = R.FaultPlan((R.Fault("crash", shard=0, segment=2),))
+        try:
+            distribute.run_sweep(spec, _CACHE, _TIMING, stream_chunk=512,
+                                 resume=pol, fault_plan=plan)
+        except R.RunKilled:
+            pass
+        return distribute.run_sweep(spec, _CACHE, _TIMING,
+                                    stream_chunk=512, resume=pol)
+
+
 GOLDEN_CASES = {
     "engine": _engine_row,
     "topology": _topology_row,
     "workloads": _workloads_row,
     "distribute": _distribute_rows,
+    "resilience": _resilience_rows,
 }
 
 

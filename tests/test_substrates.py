@@ -88,11 +88,12 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
 
 
 def test_checkpoint_async_and_structure_guard(tmp_path):
+    from repro.checkpoint.manager import CheckpointError
     mgr = CheckpointManager(tmp_path)
     tree = {"w": jnp.ones((4, 4))}
     mgr.save(1, tree, blocking=False)
     mgr.wait()
-    with pytest.raises(AssertionError):
+    with pytest.raises(CheckpointError):          # real error, not assert —
         mgr.restore(1, {"w": jnp.ones((2, 2))})   # shape mismatch
 
 

@@ -29,6 +29,14 @@ def summarize(name: str, d: dict) -> str:
                 f"; streaming {s.get('resident_bytes', 0) / 2**20:.1f} MiB "
                 f"trace in {s.get('segment_bytes', 0) / 2**20:.1f} MiB "
                 f"segments, parity={s.get('bitwise_equal_resident')}")
+    if name == "resilience":
+        r, t = d.get("resume", {}), d.get("retry", {})
+        return (f"checkpoint overhead {d.get('checkpoint_overhead_pct')}% "
+                f"({d.get('checkpoints_written')} ckpts); resume "
+                f"fast-forwarded {r.get('fast_forwarded_segments')} segments "
+                f"in {r.get('resume_s')}s, parity="
+                f"{r.get('rows_bitwise_equal_uninterrupted')}; "
+                f"{t.get('retries')} retries absorbed")
     if name == "engine":
         return (f"batched vs sequential speedup {d.get('speedup_warm')}x "
                 f"warm ({d.get('batched_warm_maccess_per_s')} Maccess/s); "
