@@ -1,0 +1,34 @@
+"""Determinism & parity-contract static analysis for the repro tree.
+
+The repo's central invariant — every device path is bitwise-equal to its
+host twin and to every other execution strategy — is enforced dynamically
+by the tier-1 suite and the golden fixtures.  This package enforces it
+*statically*, before a sweep ever runs, with two cooperating passes:
+
+**AST lint** (:mod:`repro.analysis.rules` / :mod:`repro.analysis.visitor`)
+    Pure-``ast`` rules over the source tree: seedless global RNG,
+    wall-clock reads in simulation paths, host-sync calls and
+    data-dependent Python branches inside jitted/scanned scopes, mutable
+    default arguments, and bare ``assert`` in library code.  Findings can
+    be suppressed inline (``# repro-lint: disable=CODE``) or carried in a
+    committed baseline file; anything new fails the run.
+
+**jaxpr audit** (:mod:`repro.analysis.jaxpr_audit` /
+:mod:`repro.analysis.contracts`)
+    Abstractly traces the registered entry points (``run_traces``,
+    ``run_dynamic``, ``simulate_trace``, every registered workload's
+    ``device_trace``) and walks the closed jaxprs for float-dtype ops in
+    the parity-critical integer pipelines, callbacks, and RNG primitives;
+    verifies the :class:`~repro.workloads.base.Workload` device/host twin
+    contract; and cross-checks the ``CacheParams.nstats``/``stat_names``
+    layout against the packed step and the Pallas kernel by triangulating
+    all three backends on one tiny trace.
+
+Run it as ``python -m repro.analysis`` or via ``tools/repro_lint.py``;
+the rule catalog and workflow live in ``docs/analysis.md``.
+"""
+from repro.analysis.cli import main  # noqa: F401
+from repro.analysis.contracts import run_audit  # noqa: F401
+from repro.analysis.findings import Finding  # noqa: F401
+from repro.analysis.rules import RULES  # noqa: F401
+from repro.analysis.visitor import lint_paths  # noqa: F401

@@ -1,0 +1,314 @@
+"""Registered entry points and the cross-layer contract checks.
+
+This module is the audit's registry: every parity-critical entry point
+gets traced on a tiny concrete example and handed to
+:func:`~repro.analysis.jaxpr_audit.audit_jaxpr`, and two structural
+contracts are checked directly:
+
+* **workload twins** (RA403) — every registered workload must expose
+  both ``device_trace`` and ``host_trace``, and at one small footprint
+  the two must agree bitwise (full-trace parity across footprints stays
+  tier-1's job; this is the cheap always-on gate);
+* **stat layout** (RA404) — ``nstats``/``stat_names``/
+  ``mem_write_base``/``coherence_base`` must satisfy the layout
+  identities, the Pallas kernel must import them from
+  :mod:`repro.core.cache` (single source of truth), and the reference
+  scan, the packed engine path, and the Pallas kernel must produce
+  bitwise-identical stats of width ``nstats`` on one tiny trace
+  (triangulation — a scratch-layout drift in any one backend breaks the
+  equality).
+
+Entry points are registered in :data:`ENTRY_POINTS`; adding a new
+parity-critical device program to the engine means adding one line
+here (``docs/analysis.md`` documents the workflow).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.analysis.findings import ERROR, Finding
+from repro.analysis.jaxpr_audit import audit_jaxpr, trace_entry
+
+# Footprint used for the tiny workload twin check: two L2s of the tiny
+# geometry below — enough for every registered generator to produce a
+# non-degenerate trace, small enough to stay sub-second on CPU.
+TWIN_FOOTPRINT_BYTES = 1 << 15
+
+
+def _tiny_params():
+    from repro.core.cache import CacheParams
+
+    return CacheParams(l1_bytes=2048, l1_ways=2, l2_bytes=8192, l2_ways=4, cores=2)
+
+
+def _tiny_trace(n: int = 16):
+    import jax.numpy as jnp
+
+    addr = jnp.arange(n, dtype=jnp.int32) % 12
+    is_write = (jnp.arange(n, dtype=jnp.int32) % 3 == 0).astype(jnp.int32)
+    core = (jnp.arange(n, dtype=jnp.int32) % 2).astype(jnp.int32)
+    tier = (addr % 2).astype(jnp.int32)
+    return addr, is_write, core, tier
+
+
+def _trace_simulate_trace():
+    from repro.core import cache
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace()
+    return trace_entry(
+        lambda a, w, c, t: cache.simulate_trace(p, cache.init_state(p), a, w, c, t),
+        addr,
+        is_write,
+        core,
+        tier,
+    )
+
+
+def _trace_run_traces_reference():
+    from repro.core import engine
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace()
+    return trace_entry(
+        lambda a, w, c, t: engine.run_traces(p, a, w, c, t, backend="reference"),
+        addr[None],
+        is_write[None],
+        core[None],
+        tier[None],
+    )
+
+
+def _trace_run_dynamic():
+    from repro.core import tiering_dyn
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace(n=8)
+    # Per-row scalars stay host-side numpy: `prep_dynamic_inputs` reads
+    # `period` concretely to bound the hotness keys, so they must not be
+    # staged into the trace.
+    scalars = dict(
+        dyn_flag=np.asarray([1], np.int32),
+        page_map0=np.zeros((1, 2), np.int32),
+        n_pages=np.asarray([2], np.int32),
+        budget=np.asarray([1], np.int32),
+        threshold=np.asarray([1], np.int32),
+        period=np.asarray([1], np.int32),
+        dram_cap=np.asarray([2], np.int32),
+        page_target_lines=np.ones((1, 2), np.int32),
+    )
+
+    def entry(a, w, c, t):
+        return tiering_dyn.run_dynamic(p, a, w, c, t, slot_len=4, k_max=1, **scalars)
+
+    return trace_entry(entry, addr[None], is_write[None], core[None], tier[None])
+
+
+def _workload_entries() -> List[Tuple[str, Callable, bool]]:
+    from repro import workloads
+
+    entries: List[Tuple[str, Callable, bool]] = []
+    for name in sorted(workloads.REGISTRY):
+        wl = workloads.get(name)
+
+        def tracer(wl=wl):
+            # WorkloadTrace is a plain dataclass, not a pytree: trace
+            # the array fields as a tuple.
+            def entry():
+                wt = wl.device_trace(TWIN_FOOTPRINT_BYTES)
+                out = (wt.addr, wt.is_write)
+                return out if wt.tier is None else out + (wt.tier,)
+
+            return trace_entry(entry)
+
+        entries.append((f"{name}.device_trace", tracer, False))
+    return entries
+
+
+def entry_points() -> List[Tuple[str, Callable, bool]]:
+    """``(name, thunk -> ClosedJaxpr, allow_floats)`` per entry point."""
+    static: List[Tuple[str, Callable, bool]] = [
+        ("simulate_trace", _trace_simulate_trace, False),
+        ("run_traces[reference]", _trace_run_traces_reference, False),
+        ("run_dynamic", _trace_run_dynamic, False),
+    ]
+    return static + _workload_entries()
+
+
+# Back-compat alias some callers may prefer to read.
+ENTRY_POINTS = entry_points
+
+
+def _audit_finding(code: str, name: str, where: str, msg: str) -> Finding:
+    return Finding(
+        code=code,
+        name=name,
+        severity=ERROR,
+        path=f"<jaxpr:{where}>",
+        line=0,
+        col=0,
+        message=msg,
+        symbol=where,
+    )
+
+
+def check_workload_twins() -> List[Finding]:
+    """RA403: every registered workload has an agreeing host twin."""
+    from repro import workloads
+
+    findings: List[Finding] = []
+    for name in sorted(workloads.REGISTRY):
+        wl = workloads.get(name)
+        for attr in ("device_trace", "host_trace"):
+            if not callable(getattr(wl, attr, None)):
+                findings.append(
+                    _audit_finding(
+                        "RA403",
+                        "missing-host-twin",
+                        name,
+                        f"workload `{name}` lacks a callable {attr}; "
+                        f"the device/host twin contract requires both",
+                    )
+                )
+        if findings and findings[-1].symbol == name:
+            continue
+        dt = wl.device_trace(TWIN_FOOTPRINT_BYTES)
+        ht = wl.host_trace(TWIN_FOOTPRINT_BYTES)
+        d_addr = np.asarray(dt.addr)
+        h_addr = np.asarray(ht.addr)
+        if dt.n_pages != ht.n_pages:
+            findings.append(
+                _audit_finding(
+                    "RA403",
+                    "missing-host-twin",
+                    name,
+                    f"workload `{name}` twin mismatch: device n_pages "
+                    f"{dt.n_pages} != host n_pages {ht.n_pages}",
+                )
+            )
+        elif d_addr.shape != h_addr.shape or not (
+            np.array_equal(d_addr, h_addr)
+            and np.array_equal(
+                np.asarray(dt.is_write), np.asarray(ht.is_write)
+            )
+        ):
+            findings.append(
+                _audit_finding(
+                    "RA403",
+                    "missing-host-twin",
+                    name,
+                    f"workload `{name}` device_trace != host_trace at "
+                    f"footprint {TWIN_FOOTPRINT_BYTES}: the twins must "
+                    f"be bitwise-equal",
+                )
+            )
+    return findings
+
+
+def check_stat_layout() -> List[Finding]:
+    """RA404: layout identities + three-backend stats triangulation."""
+    import jax.numpy as jnp
+
+    from repro.core import cache, engine
+    from repro.kernels import cache_sim
+
+    findings: List[Finding] = []
+
+    def fail(msg: str) -> None:
+        findings.append(_audit_finding("RA404", "stat-layout-mismatch", "stat_layout", msg))
+
+    for t in (2, 3, 4):
+        names = cache.stat_names(t)
+        if len(names) != cache.nstats(t):
+            fail(f"len(stat_names({t})) == {len(names)} != nstats({t}) == {cache.nstats(t)}")
+        if len(set(names)) != len(names):
+            fail(f"stat_names({t}) has duplicate counter names")
+        if cache.coherence_base(t) - cache.mem_write_base(t) != t:
+            fail(
+                f"mem-write block width at T={t} is "
+                f"{cache.coherence_base(t) - cache.mem_write_base(t)}, "
+                f"expected {t}"
+            )
+        if cache.nstats(t) - cache.coherence_base(t) != 4:
+            fail(
+                f"coherence block at T={t} has "
+                f"{cache.nstats(t) - cache.coherence_base(t)} counters, "
+                f"expected 4"
+            )
+
+    # The kernel must read its layout from core.cache, not a copy.
+    for fname in ("nstats", "mem_write_base", "coherence_base"):
+        if getattr(cache_sim, fname, None) is not getattr(cache, fname):
+            fail(
+                f"kernels.cache_sim.{fname} is not repro.core.cache."
+                f"{fname}: the stats layout has a second source of truth"
+            )
+
+    # Triangulate: reference scan vs packed engine path vs Pallas kernel
+    # on one tiny trace — any scratch-layout drift breaks the equality.
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace()
+    width = cache.nstats(p.n_targets)
+    _, ref = cache.simulate_trace(p, cache.init_state(p), addr, is_write, core, tier)
+    eng, _ = engine.run_traces(
+        p,
+        addr[None],
+        is_write[None],
+        core[None],
+        tier[None],
+        backend="reference",
+    )
+    pal, _ = cache_sim.mesi_cache_sim(
+        addr[None],
+        is_write[None],
+        core[None],
+        tier[None],
+        params=p,
+        chunk=8,
+        interpret=True,
+    )
+    for label, stats in (
+        ("simulate_trace", ref),
+        ("run_traces[reference]", eng[0]),
+        ("mesi_cache_sim", pal[0]),
+    ):
+        got = int(np.asarray(stats).shape[-1])
+        if got != width:
+            fail(
+                f"{label} returned a {got}-wide stats vector, expected "
+                f"nstats({p.n_targets}) == {width}"
+            )
+    a, b, c = (np.asarray(x, np.int64) for x in (ref, eng[0], pal[0]))
+    if not (np.array_equal(a, b) and np.array_equal(b, c)):
+        fail(
+            "stats triangulation failed: reference scan, engine path "
+            "and Pallas kernel disagree on the tiny trace — the three "
+            "backends no longer share one stats layout"
+        )
+    if not jnp.issubdtype(np.asarray(ref).dtype, np.integer):
+        fail(f"simulate_trace stats dtype {np.asarray(ref).dtype} is not integer")
+    return findings
+
+
+def run_audit() -> List[Finding]:
+    """Run the full jaxpr audit: entry points + both contract checks."""
+    findings: List[Finding] = []
+    for name, thunk, allow_floats in entry_points():
+        try:
+            closed = thunk()
+        except Exception as exc:  # pragma: no cover - trace regression
+            findings.append(
+                _audit_finding(
+                    "RA402",
+                    "forbidden-primitive",
+                    name,
+                    f"entry point {name} failed to trace: {type(exc).__name__}: {exc}",
+                )
+            )
+            continue
+        findings.extend(audit_jaxpr(name, closed, allow_floats=allow_floats))
+    findings.extend(check_workload_twins())
+    findings.extend(check_stat_layout())
+    return findings

@@ -1,0 +1,173 @@
+"""Closed-jaxpr walking: the dynamic half of the analyzer.
+
+:func:`trace_entry` abstractly traces a callable on tiny concrete inputs
+(``jax.make_jaxpr``) and :func:`audit_jaxpr` walks every equation — in
+the top-level jaxpr and recursively through ``scan``/``cond``/``pjit``
+sub-jaxprs carried in ``eqn.params`` — looking for two contract breaks:
+
+* **forbidden primitives** (:data:`FORBIDDEN_PRIMITIVES`): host
+  callbacks and backend-dependent RNG have no place in a parity-critical
+  entry point, whatever their dtype;
+* **float leakage**: the stat pipelines are integer-only by design
+  (int32 counters, integer hotness keys), so *any* float-dtype
+  intermediate inside one is a weak-type promotion waiting to break
+  bitwise device/host parity.
+
+Findings use the same :class:`~repro.analysis.findings.Finding` model as
+the AST lint, with ``path="<jaxpr:NAME>"`` since there is no single
+source line to point at.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import ERROR, Finding
+
+# Primitives that must never appear in a parity-critical entry point.
+FORBIDDEN_PRIMITIVES: Dict[str, str] = {
+    "io_callback": "host callback breaks pure-function replay",
+    "pure_callback": "host callback escapes the traced program",
+    "debug_callback": "debug callback is unordered across backends",
+    "debug_print": "debug print is a hidden host callback",
+    "rng_bit_generator": "backend-dependent RNG is not bitwise portable",
+    "rng_uniform": "legacy RNG primitive is not bitwise deterministic",
+}
+
+# Integer-only pipelines may still contain these float-dtype equations:
+# none.  (The allowlist exists so a future, reviewed exception is a
+# one-line diff here instead of a weaker rule.)
+FLOAT_ALLOWLIST: Set[str] = set()
+
+
+def iter_eqns(jaxpr: Any) -> Iterator[Any]:
+    """Yield every equation, recursing into sub-jaxprs in ``params``."""
+    closed = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in closed.eqns:
+        yield eqn
+        for value in eqn.params.values():
+            for sub in _sub_jaxprs(value):
+                yield from iter_eqns(sub)
+
+
+def _is_var(v: Any) -> bool:
+    # Literals carry a concrete `.val`; Vars (and DropVars) do not.
+    return not hasattr(v, "val")
+
+
+def iter_live_eqns(jaxpr: Any) -> Iterator[Any]:
+    """Yield equations on the backward slice from the jaxpr's outputs.
+
+    ``make_jaxpr`` stages every operation the Python executed, including
+    ones whose results never reach the return value (dead code).  The
+    float-purity check only cares about values that *feed the outputs*,
+    so it walks this slice; the forbidden-primitive check deliberately
+    walks :func:`iter_eqns` instead — a callback is a contract break
+    even when its result is discarded.
+
+    Recursion into a live call-like equation (``pjit``/``scan``/...) is
+    coarse: all of the sub-jaxpr's outputs are treated as live.
+    """
+    closed = getattr(jaxpr, "jaxpr", jaxpr)
+    live_vars = {v for v in closed.outvars if _is_var(v)}
+    live: List[Any] = []
+    for eqn in reversed(closed.eqns):
+        if any(ov in live_vars for ov in eqn.outvars):
+            live.append(eqn)
+            live_vars.update(iv for iv in eqn.invars if _is_var(iv))
+    for eqn in reversed(live):
+        yield eqn
+        for value in eqn.params.values():
+            for sub in _sub_jaxprs(value):
+                yield from iter_live_eqns(sub)
+
+
+def _sub_jaxprs(value: Any) -> List[Any]:
+    if hasattr(value, "eqns") or hasattr(value, "jaxpr"):
+        return [value]
+    if isinstance(value, (tuple, list)):
+        out: List[Any] = []
+        for v in value:
+            out.extend(_sub_jaxprs(v))
+        return out
+    return []
+
+
+def trace_entry(fn, *args, **kwargs):
+    """``jax.make_jaxpr`` on concrete (tiny) example inputs."""
+    return jax.make_jaxpr(fn)(*args, **kwargs)
+
+
+def _is_float(aval: Any) -> bool:
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and jnp.issubdtype(dtype, jnp.floating)
+
+
+def audit_jaxpr(
+    name: str,
+    closed_jaxpr: Any,
+    *,
+    allow_floats: bool = False,
+) -> List[Finding]:
+    """Audit one traced entry point; returns deduplicated findings.
+
+    Parameters
+    ----------
+    name : str
+        Entry-point label, reported as ``<jaxpr:NAME>``.
+    closed_jaxpr
+        A ``ClosedJaxpr`` from :func:`trace_entry`.
+    allow_floats : bool
+        True for entry points that legitimately compute in floats
+        (timing models); False for the integer stat pipelines, where
+        any float equation is flagged as RA401.
+    """
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, str]] = set()
+    path = f"<jaxpr:{name}>"
+    for eqn in iter_eqns(closed_jaxpr):
+        prim = eqn.primitive.name
+        if prim in FORBIDDEN_PRIMITIVES and ("RA402", prim) not in seen:
+            seen.add(("RA402", prim))
+            findings.append(
+                Finding(
+                    code="RA402",
+                    name="forbidden-primitive",
+                    severity=ERROR,
+                    path=path,
+                    line=0,
+                    col=0,
+                    message=(
+                        f"primitive `{prim}` in entry point {name}: "
+                        f"{FORBIDDEN_PRIMITIVES[prim]}"
+                    ),
+                    symbol=name,
+                )
+            )
+    if allow_floats:
+        return findings
+    for eqn in iter_live_eqns(closed_jaxpr):
+        prim = eqn.primitive.name
+        if prim in FLOAT_ALLOWLIST or ("RA401", prim) in seen:
+            continue
+        if any(_is_float(getattr(var, "aval", None)) for var in eqn.outvars):
+            seen.add(("RA401", prim))
+            findings.append(
+                Finding(
+                    code="RA401",
+                    name="float-in-int-pipeline",
+                    severity=ERROR,
+                    path=path,
+                    line=0,
+                    col=0,
+                    message=(
+                        f"float-dtype `{prim}` feeding the integer "
+                        f"stat pipeline {name}; parity requires "
+                        f"int-only arithmetic end to end"
+                    ),
+                    symbol=name,
+                )
+            )
+    return findings

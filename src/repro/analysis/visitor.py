@@ -1,0 +1,303 @@
+"""Module-level AST context shared by every lint rule, and the runner.
+
+One :class:`ModuleContext` per source file precomputes everything the
+rules need so each rule stays a small, independent query:
+
+* **alias resolution** — ``import jax.numpy as jnp`` / ``from jax import
+  lax`` are folded into canonical dotted names, so a rule matches
+  ``numpy.random.rand`` however the module spelled it;
+* **jit scopes** — functions that execute under a tracer: decorated with
+  ``jax.jit``/``vmap``/``pmap`` (directly or through
+  ``functools.partial``), or passed as a body to ``lax.scan`` /
+  ``fori_loop`` / ``while_loop`` / ``cond`` / ``pallas_call`` (again,
+  possibly wrapped in ``partial``).  Functions nested inside a jit scope
+  are jit scopes;
+* **tracer taint** — per jit scope, the set of local names assigned from
+  expressions that call into ``jax.numpy``/``jax.lax`` (or reference an
+  already-tainted name): these hold tracers, so a Python ``if``/``while``
+  on them is a concretization error waiting for a different input;
+* **inline suppressions** — ``# repro-lint: disable=CODE`` comments
+  (:func:`repro.analysis.findings.parse_suppressions`).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import (
+    Finding,
+    apply_suppressions,
+    parse_suppressions,
+)
+
+# Call targets whose function-valued arguments run under a tracer.
+JIT_WRAPPERS = frozenset(
+    {
+        "jax.jit",
+        "jax.vmap",
+        "jax.pmap",
+        "jax.lax.scan",
+        "jax.lax.fori_loop",
+        "jax.lax.while_loop",
+        "jax.lax.cond",
+        "jax.lax.switch",
+        "jax.lax.map",
+        "jax.checkpoint",
+        "jax.experimental.pallas.pallas_call",
+    }
+)
+
+# Canonical prefixes of calls that produce tracers inside a jit scope.
+_TRACER_SOURCES = ("jax.numpy.", "jax.lax.", "jax.nn.")
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+class ModuleContext:
+    """Parsed source file plus the resolved facts the rules query."""
+
+    def __init__(self, path: pathlib.Path, rel_path: str, source: str):
+        self.path = path
+        self.rel_path = rel_path
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.suppressions = parse_suppressions(source)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self._aliases = self._collect_aliases()
+        self._functions = self._collect_functions()
+        self._jit_roots = self._collect_jit_roots()
+        self._taints: Dict[ast.AST, Set[str]] = {
+            fn: _tainted_names(self, fn) for fn in self.jit_scopes()
+        }
+
+    # -- name resolution ----------------------------------------------------
+    def _collect_aliases(self) -> Dict[str, str]:
+        aliases: Dict[str, str] = {"jnp": "jax.numpy", "np": "numpy"}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name != "*":
+                        aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+        return aliases
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name of a Name/Attribute chain, or None.
+
+        ``pl.pallas_call`` resolves through the import aliases to
+        ``jax.experimental.pallas.pallas_call``; non-name expressions
+        (calls, subscripts) resolve to None.
+        """
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self._aliases.get(node.id, node.id)
+        parts.append(root)
+        return ".".join(reversed(parts))
+
+    # -- scopes -------------------------------------------------------------
+    def _collect_functions(self) -> Dict[str, List[ast.AST]]:
+        by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                by_name.setdefault(node.name, []).append(node)
+        return by_name
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def enclosing_symbol(self, node: ast.AST) -> str:
+        names: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names.append(cur.name)
+            elif isinstance(cur, ast.ClassDef):
+                names.append(cur.name)
+            cur = self._parents.get(cur)
+        return ".".join(reversed(names)) or "<module>"
+
+    def _callable_targets(self, node: ast.AST) -> List[str]:
+        """Local function names an argument expression refers to."""
+        if isinstance(node, ast.Name):
+            return [node.id]
+        if isinstance(node, ast.Call):
+            canon = self.dotted(node.func)
+            if canon in ("functools.partial", "partial") and node.args:
+                return self._callable_targets(node.args[0])
+        return []
+
+    def _collect_jit_roots(self) -> Set[ast.AST]:
+        roots: Set[ast.AST] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if self._mentions_jit(dec):
+                        roots.add(node)
+            elif isinstance(node, ast.Call):
+                canon = self.dotted(node.func)
+                if canon not in JIT_WRAPPERS:
+                    continue
+                for arg in node.args:
+                    for name in self._callable_targets(arg):
+                        for fn in self._functions.get(name, []):
+                            roots.add(fn)
+                    if isinstance(arg, ast.Lambda):
+                        roots.add(arg)
+        return roots
+
+    def _mentions_jit(self, dec: ast.AST) -> bool:
+        for sub in ast.walk(dec):
+            canon = self.dotted(sub)
+            if canon in JIT_WRAPPERS:
+                return True
+        return False
+
+    def jit_scopes(self) -> Set[ast.AST]:
+        """Every function node whose body executes under a tracer."""
+        scopes: Set[ast.AST] = set(self._jit_roots)
+        for node in ast.walk(self.tree):
+            if isinstance(node, _FuncNode) and node not in scopes:
+                cur = self._parents.get(node)
+                while cur is not None:
+                    if cur in self._jit_roots:
+                        scopes.add(node)
+                        break
+                    cur = self._parents.get(cur)
+        return scopes
+
+    def enclosing_jit_scope(self, node: ast.AST) -> Optional[ast.AST]:
+        cur: Optional[ast.AST] = node
+        scopes = self.jit_scopes()
+        while cur is not None:
+            if cur in scopes:
+                return cur
+            cur = self._parents.get(cur)
+        return None
+
+    def tainted(self, fn: ast.AST) -> Set[str]:
+        return self._taints.get(fn, set())
+
+
+def _calls_tracer_source(ctx: ModuleContext, expr: ast.AST) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call):
+            canon = ctx.dotted(sub.func)
+            if canon and (canon.startswith(_TRACER_SOURCES) or canon == "jax.lax"):
+                return True
+    return False
+
+
+def _references(names: Set[str], expr: ast.AST) -> bool:
+    return any(isinstance(sub, ast.Name) and sub.id in names for sub in ast.walk(expr))
+
+
+def _tainted_names(ctx: ModuleContext, fn: ast.AST) -> Set[str]:
+    """Names in `fn` assigned from jnp/lax results (transitively)."""
+    tainted: Set[str] = set()
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+
+    def visit(stmts: Sequence[ast.stmt]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, _FuncNode):
+                continue  # nested scopes run their own pass
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = stmt.value
+                if value is not None and (
+                    _calls_tracer_source(ctx, value) or _references(tainted, value)
+                ):
+                    targets = stmt.targets if isinstance(stmt, ast.Assign) else [stmt.target]
+                    for t in targets:
+                        for sub in ast.walk(t):
+                            if isinstance(sub, ast.Name):
+                                tainted.add(sub.id)
+            # recurse into compound statement bodies in source order
+            for field in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, field, None)
+                if isinstance(sub, list):
+                    visit([s for s in sub if isinstance(s, ast.stmt)])
+            for handler in getattr(stmt, "handlers", []):
+                visit(handler.body)
+
+    visit([s for s in body if isinstance(s, ast.stmt)])
+    return tainted
+
+
+def iter_source_files(paths: Sequence[pathlib.Path]) -> List[pathlib.Path]:
+    """Expand files/directories into the .py files to lint."""
+    out: List[pathlib.Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(f for f in sorted(p.rglob("*.py")) if "__pycache__" not in f.parts)
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def lint_file(
+    path: pathlib.Path,
+    rules: Sequence,
+    root: Optional[pathlib.Path] = None,
+) -> Tuple[List[Finding], List[Finding]]:
+    """Run every applicable rule over one file.
+
+    Returns ``(kept, suppressed)`` — findings surviving the inline
+    ``# repro-lint: disable=`` comments, and the ones those silenced.
+    """
+    root = root or pathlib.Path.cwd()
+    try:
+        rel = str(path.resolve().relative_to(root.resolve()))
+    except ValueError:
+        rel = str(path)
+    ctx = ModuleContext(path, rel, path.read_text())
+    findings: List[Finding] = []
+    for rule in rules:
+        if rule.applies_to(rel):
+            findings.extend(rule.check(ctx))
+    findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return apply_suppressions(findings, ctx.suppressions)
+
+
+def lint_paths(
+    paths: Sequence[pathlib.Path],
+    rules: Optional[Sequence] = None,
+    root: Optional[pathlib.Path] = None,
+) -> Tuple[List[Finding], List[Finding]]:
+    """Lint every source file under `paths` with `rules`.
+
+    Parameters
+    ----------
+    paths : sequence of pathlib.Path
+        Files or directories to scan.
+    rules : sequence of Rule, optional
+        Defaults to the full registry (:data:`repro.analysis.rules.RULES`).
+    root : pathlib.Path, optional
+        Paths in findings are reported relative to this (default: cwd).
+
+    Returns
+    -------
+    (list of Finding, list of Finding)
+        ``(findings, inline_suppressed)``.
+    """
+    if rules is None:
+        from repro.analysis.rules import RULES
+
+        rules = RULES
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for f in iter_source_files(list(paths)):
+        k, s = lint_file(f, rules, root=root)
+        kept.extend(k)
+        suppressed.extend(s)
+    return kept, suppressed

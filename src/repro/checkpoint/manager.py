@@ -17,7 +17,6 @@ Properties the runtime relies on (deliverable: fault tolerance):
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import pathlib
 import shutil

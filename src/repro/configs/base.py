@@ -140,7 +140,9 @@ class ModelConfig:
                       else f)
                 total += 3 * d * ff
             elif k == "moe":
-                assert self.moe
+                if not self.moe:
+                    raise ValueError(
+                        "block kind 'moe' requires a MoE config")
                 total += d * self.moe.n_experts     # router
                 total += self.moe.n_experts * 3 * d * self.moe.expert_d_ff
                 sh = self.moe.shared_d_ff or self.moe.expert_d_ff

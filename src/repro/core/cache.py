@@ -79,7 +79,7 @@ def stat_names(n_targets: int = 2) -> Tuple[str, ...]:
                "mem_write_dram", "mem_write_cxl")
     else:
         cxl = [f"cxl{k}" for k in range(n_targets - 1)]
-        mem = tuple([f"mem_read_dram"] + [f"mem_read_{c}" for c in cxl]
+        mem = tuple(["mem_read_dram"] + [f"mem_read_{c}" for c in cxl]
                     + ["mem_write_dram"] + [f"mem_write_{c}" for c in cxl])
     return ("l1_hit", "l1_miss", "l2_hit", "l2_miss", *mem,
             "upgrades", "invalidations", "back_invalidations",
@@ -114,13 +114,15 @@ class CacheParams:
     @property
     def l1_sets(self) -> int:
         s = self.l1_bytes // (self.l1_ways * self.line_bytes)
-        assert s & (s - 1) == 0 and s > 0, "L1 sets must be a power of two"
+        if s <= 0 or s & (s - 1) != 0:
+            raise ValueError(f"L1 sets must be a power of two, got {s}")
         return s
 
     @property
     def l2_sets(self) -> int:
         s = self.l2_bytes // (self.l2_ways * self.line_bytes)
-        assert s & (s - 1) == 0 and s > 0, "L2 sets must be a power of two"
+        if s <= 0 or s & (s - 1) != 0:
+            raise ValueError(f"L2 sets must be a power of two, got {s}")
         return s
 
 
@@ -245,7 +247,6 @@ def _step(p: CacheParams, carry, x, valid=None):
     v_tag = st.l2_tag[set2, way2]
     v_state = st.l2_state[set2, way2]
     v_tier = st.l2_tier[set2, way2]
-    v_sharers = st.l2_sharers[set2, way2]
     v_valid = l2_miss & (v_state != I) & (v_tag != addr)
     # back-invalidate L1 copies of the victim (inclusive hierarchy)
     vset1 = v_tag & (p.l1_sets - 1)

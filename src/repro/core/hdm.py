@@ -39,10 +39,16 @@ class InterleaveProgram:
     targets: Tuple[int, ...]  # global target (endpoint/region) ids
 
     def __post_init__(self):
-        assert len(self.targets) == self.ways, "targets must match ways"
-        assert self.granularity % CACHELINE_BYTES == 0
-        assert self.size % (self.granularity * self.ways) == 0, \
-            "window must hold whole interleave sets"
+        if len(self.targets) != self.ways:
+            raise ValueError(
+                f"targets ({len(self.targets)}) must match ways "
+                f"({self.ways})")
+        if self.granularity % CACHELINE_BYTES != 0:
+            raise ValueError(
+                f"granularity {self.granularity} must be a multiple of "
+                f"{CACHELINE_BYTES}")
+        if self.size % (self.granularity * self.ways) != 0:
+            raise ValueError("window must hold whole interleave sets")
 
     # -- pure-Python (full-width addresses) --------------------------------
     def decode(self, hpa: int) -> Tuple[int, int]:

@@ -27,7 +27,7 @@ flits, so wire bytes = slots x 17.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Sequence, Tuple
+from typing import Dict, Mapping, Tuple
 
 import jax
 import jax.numpy as jnp

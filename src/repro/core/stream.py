@@ -25,7 +25,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.numa import LINES_PER_PAGE, PAGE_BYTES
+from repro.core.numa import LINES_PER_PAGE
 from repro.core.spec import CACHELINE_BYTES
 
 Array = jax.Array
@@ -91,7 +91,10 @@ def stream_trace(kernel: str, layout: StreamLayout) -> Tuple[Array, Array]:
     addr = jnp.stack(addr_cols, axis=1).reshape(-1)          # (n*ops,)
     is_write = jnp.tile(
         jnp.asarray([False] * len(reads) + [True]), (n,))
-    assert addr.shape[0] == n * ops_per_elem
+    if addr.shape[0] != n * ops_per_elem:
+        raise ValueError(
+            f"stream trace length {addr.shape[0]} != n * ops_per_elem "
+            f"({n} * {ops_per_elem})")
     return addr, is_write
 
 

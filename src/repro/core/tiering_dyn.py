@@ -50,7 +50,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

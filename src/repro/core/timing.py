@@ -21,7 +21,7 @@ tiering planner (:mod:`repro.memory.tiering`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 

@@ -14,7 +14,7 @@ qwen2-vl gets patch embeddings + M-RoPE positions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -137,7 +137,8 @@ def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
     Returns: (hits (N,) int32, tags (n_sets, n_ways) int32, use int32).
     """
     n = addr.shape[0]
-    assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
+    if n_sets & (n_sets - 1) != 0:
+        raise ValueError(f"n_sets must be a power of two, got {n_sets}")
     (addr,) = pad_trace(chunk, addr)
     n_chunks = addr.shape[0] // chunk
 

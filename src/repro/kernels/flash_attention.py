@@ -95,7 +95,9 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     sk = k.shape[2]
     bq = min(bq, sq)
     bk = min(bk, sk)
-    assert sq % bq == 0 and sk % bk == 0, "pad seq to block multiples"
+    if sq % bq != 0 or sk % bk != 0:
+        raise ValueError(
+            f"pad seq to block multiples: sq={sq} bq={bq} sk={sk} bk={bk}")
     scale = d ** -0.5
     kern = functools.partial(_flash_kernel, bq=bq, bk=bk, sk=sk,
                              q_offset=sk - sq, causal=causal, window=window,

@@ -84,7 +84,8 @@ def paged_attention(q: Array, k_pages: Array, v_pages: Array,
     b, h, d = q.shape
     p_, page, kh, _ = k_pages.shape
     nblk = block_table.shape[1]
-    assert h % kh == 0
+    if h % kh != 0:
+        raise ValueError(f"q heads {h} must be a multiple of kv heads {kh}")
     groups = h // kh
     scale = d ** -0.5
     kern = functools.partial(_paged_kernel, page=page, nblk=nblk, kh=kh,

@@ -29,9 +29,15 @@ def stream_triad(b: Array, c: Array, s, *, block_rows: int = 8,
 
     L should be a multiple of 128 (TPU lanes); R a multiple of block_rows.
     """
-    assert b.shape == c.shape and b.ndim == 2
+    if b.shape != c.shape or b.ndim != 2:
+        raise ValueError(
+            f"b and c must be equal-shape 2-D arrays, got {b.shape} "
+            f"and {c.shape}")
     rows, lanes = b.shape
-    assert rows % block_rows == 0, "pad rows to block multiple"
+    if rows % block_rows != 0:
+        raise ValueError(
+            f"pad rows to block multiple: rows={rows} "
+            f"block_rows={block_rows}")
     s_arr = jnp.asarray([s], b.dtype)
     return pl.pallas_call(
         _triad_kernel,

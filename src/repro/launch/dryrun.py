@@ -16,7 +16,6 @@ Usage:
 """
 import argparse
 import dataclasses
-import functools
 import json
 import pathlib
 import re
@@ -24,7 +23,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, get_config
@@ -211,7 +209,6 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             save_hlo.parent.mkdir(parents=True, exist_ok=True)
             save_hlo.write_text(hlo)
         coll = collective_bytes(hlo)
-        n_dev = 512 if multi_pod else 256
         res = CellResult(
             arch=arch, shape=shape, mesh=tag, status="ok",
             compile_s=round(time.time() - t0, 1),

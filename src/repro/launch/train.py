@@ -12,10 +12,8 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCHS, get_config, get_smoke

@@ -20,7 +20,7 @@ The plan feeds the roofline's fourth (`cxl`) term and the offload schedule
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core import spec

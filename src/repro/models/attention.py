@@ -18,7 +18,6 @@ Caches:
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

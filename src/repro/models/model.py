@@ -13,7 +13,6 @@ Everything the launcher (and the dry-run) needs per architecture:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

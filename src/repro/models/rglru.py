@@ -115,7 +115,6 @@ def recurrent_block_step(p: Dict, x: Array, state: Dict, cfg: ModelConfig
     gate = jax.nn.gelu((x[:, 0] @ p["wgate"]).astype(F32))
     u = x[:, 0] @ p["wx"]
     # conv over (hist, u)
-    cw = p["conv_w"].shape[0]
     ext = jnp.concatenate([state["conv"].astype(F32),
                            u.astype(F32)[:, None, :]], axis=1)  # (B,cw,W)
     uc = jnp.einsum("bcw,cw->bw", ext, p["conv_w"]) + p["conv_b"]

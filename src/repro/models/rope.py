@@ -7,7 +7,7 @@ positions simply replicate the temporal stream.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,10 @@ def apply_mrope(x: Array, positions: Array, theta: float,
                 sections: Tuple[int, ...]) -> Array:
     """Qwen2-VL M-RoPE. x (B,S,N,H); positions (3,B,S); sections sum to H/2."""
     h = x.shape[-1]
-    assert sum(sections) == h // 2, "mrope sections must cover half dim"
+    if sum(sections) != h // 2:
+        raise ValueError(
+            f"mrope sections must cover half dim: sum={sum(sections)} "
+            f"h//2={h // 2}")
     freqs = rope_freqs(h, theta)                            # (H/2,)
     # choose the position stream per frequency slot
     stream = jnp.concatenate([

@@ -166,7 +166,8 @@ def _wkv_chunked(r, k, v, w, u, S0, chunk: int):
     (tests/test_models.py::test_rwkv_chunked_matches_scan).
     """
     b, t, h, hd = r.shape
-    assert t % chunk == 0
+    if t % chunk != 0:
+        raise ValueError(f"seq len {t} must be a multiple of chunk {chunk}")
     nc = t // chunk
     rs = r.reshape(b, nc, chunk, h, hd)
     ks = k.reshape(b, nc, chunk, h, hd)

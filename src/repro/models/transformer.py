@@ -47,7 +47,6 @@ class Segment:
 def segments(cfg: ModelConfig) -> List[Segment]:
     kinds = cfg.layer_kinds()
     segs: List[Segment] = []
-    i = 0
     # leading homogeneous run (covers first_dense and pure stacks)
     if len(set(kinds)) == 1:
         return [Segment((kinds[0],), len(kinds))]

@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig

@@ -8,7 +8,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import List
 
 from repro.roofline.analysis import Roofline, analyze_dir
 

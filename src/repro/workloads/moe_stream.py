@@ -18,8 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.workloads.base import (Workload, WorkloadTrace,

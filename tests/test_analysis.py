@@ -1,0 +1,499 @@
+"""The analyzer's own test suite: rules, suppressions, baseline, audit.
+
+Layout mirrors the package: per-rule positive/negative snippet fixtures
+for the AST lint, escape-hatch semantics (inline suppressions + the
+committed baseline's multiset matching), CLI exit codes on an injected
+violation, jaxpr-audit detection of an injected float op / forbidden
+callback, the Workload twin contract, and the self-scan gate holding
+``src/repro`` clean modulo the committed baseline.
+"""
+import json
+import pathlib
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import contracts, jaxpr_audit
+from repro.analysis.cli import main as cli_main
+from repro.analysis.findings import (
+    Finding,
+    load_baseline,
+    parse_suppressions,
+    save_baseline,
+    split_new,
+)
+from repro.analysis.visitor import lint_paths
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def lint_snippet(tmp_path, code, name="snippet.py"):
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(code))
+    kept, suppressed = lint_paths([f], root=tmp_path)
+    return kept, suppressed
+
+
+def codes(findings):
+    return [f.code for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# AST lint rules: positive + negative fixture per rule
+# ---------------------------------------------------------------------------
+def test_rl101_seedless_rng_positive(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import numpy as np
+        import random
+
+        x = np.random.rand(4)
+        g = np.random.default_rng()
+        r = random.random()
+        u = random.Random()
+        """,
+    )
+    assert codes(kept) == ["RL101"] * 4
+
+
+def test_rl101_seeded_rng_negative(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import numpy as np
+        import random
+
+        g = np.random.default_rng(17)
+        y = g.integers(0, 10, 4)
+        r = random.Random(3).random()
+        """,
+    )
+    assert kept == []
+
+
+def test_rl101_sees_through_aliases(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import numpy.random as npr
+
+        z = npr.randint(0, 4)
+        """,
+    )
+    assert codes(kept) == ["RL101"]
+
+
+def test_rl102_wall_clock_scoped_to_sim_paths(tmp_path):
+    code = """
+    import time
+    import datetime
+
+    t0 = time.time()
+    d = datetime.datetime.now()
+    """
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "mod.py").write_text(textwrap.dedent(code))
+    kept, _ = lint_paths([core / "mod.py"], root=tmp_path)
+    assert codes(kept) == ["RL102", "RL102"]
+
+    launch = tmp_path / "launch"
+    launch.mkdir()
+    (launch / "mod.py").write_text(textwrap.dedent(code))
+    kept, _ = lint_paths([launch / "mod.py"], root=tmp_path)
+    assert kept == []  # wall clock is fine outside simulation paths
+
+
+def test_rl102_tz_aware_now_negative(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    (core / "mod.py").write_text(
+        "import datetime\n"
+        "d = datetime.datetime.now(datetime.timezone.utc)\n"
+    )
+    kept, _ = lint_paths([core / "mod.py"], root=tmp_path)
+    assert kept == []
+
+
+def test_rl201_host_sync_in_jit_positive(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            a = y.item()
+            b = float(y)
+            c = np.asarray(y)
+            return a + b + c.sum()
+        """,
+    )
+    assert codes(kept) == ["RL201"] * 3
+
+
+def test_rl201_negative_outside_jit_and_static(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        def host(x):
+            return float(jnp.sum(x))  # no jit scope: fine
+
+        @jax.jit
+        def f(x):
+            n = int(x.shape[0])  # static metadata: fine
+            return x * n
+        """,
+    )
+    assert kept == []
+
+
+def test_rl201_scan_body_is_a_jit_scope(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        def run(xs):
+            def body(c, x):
+                v = jnp.add(c, x)
+                return c, v.item()
+            return jax.lax.scan(body, 0, xs)
+        """,
+    )
+    assert codes(kept) == ["RL201"]
+
+
+def test_rl202_tracer_branch_positive(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            s = jnp.sum(x)
+            if s > 0:
+                return x
+            while s < 3:
+                s = s + 1
+            return -x
+        """,
+    )
+    assert codes(kept) == ["RL202", "RL202"]
+
+
+def test_rl202_static_branches_negative(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, flag=None):
+            s = jnp.sum(x)
+            if flag is None:           # staticness check: fine
+                x = x + 1
+            if x.shape[0] > 2:         # static metadata: fine
+                x = x * 2
+            if isinstance(s, bool):    # type dispatch: fine
+                return x
+            return x + s
+        """,
+    )
+    assert kept == []
+
+
+def test_rl301_mutable_default_arg(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        def f(xs=[], d={}, s=None):
+            return xs, d, s
+
+        def g(xs=None, d=()):
+            return xs, d
+        """,
+    )
+    assert codes(kept) == ["RL301", "RL301"]
+
+
+def test_rl302_bare_assert(tmp_path):
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        def f(n):
+            assert n > 0, "n must be positive"
+            return n
+        """,
+    )
+    assert codes(kept) == ["RL302"]
+    kept, _ = lint_snippet(
+        tmp_path,
+        """
+        def f(n):
+            if n <= 0:
+                raise ValueError("n must be positive")
+            return n
+        """,
+        name="ok.py",
+    )
+    assert kept == []
+
+
+# ---------------------------------------------------------------------------
+# Escape hatches: inline suppressions + the committed baseline
+# ---------------------------------------------------------------------------
+def test_inline_suppression_same_and_previous_line(tmp_path):
+    kept, suppressed = lint_snippet(
+        tmp_path,
+        """
+        def f(n):
+            assert n > 0  # repro-lint: disable=RL302
+            # repro-lint: disable=RL302
+            assert n < 10
+            assert n != 5
+        """,
+    )
+    assert codes(kept) == ["RL302"]  # only the unsuppressed one
+    assert codes(suppressed) == ["RL302", "RL302"]
+
+
+def test_suppression_is_code_specific(tmp_path):
+    kept, suppressed = lint_snippet(
+        tmp_path,
+        """
+        def f(n):
+            assert n > 0  # repro-lint: disable=RL101
+        """,
+    )
+    assert codes(kept) == ["RL302"]  # wrong code: not silenced
+    assert suppressed == []
+
+
+def test_parse_suppressions_multiple_codes():
+    sup = parse_suppressions("x = 1  # repro-lint: disable=RL101, RL302\n")
+    assert sup[1] == frozenset({"RL101", "RL302"})
+
+
+def _finding(message="m", path="p.py", symbol="f"):
+    return Finding(
+        code="RL302",
+        name="bare-assert",
+        severity="warning",
+        path=path,
+        line=3,
+        col=4,
+        message=message,
+        symbol=symbol,
+    )
+
+
+def test_baseline_roundtrip_and_multiset_semantics(tmp_path):
+    f = _finding()
+    path = tmp_path / "baseline.json"
+    save_baseline(path, [f])
+    baseline = load_baseline(path)
+    assert baseline == [f.baseline_key]
+
+    # one baseline entry absorbs exactly one identical finding
+    new, matched = split_new([f, f], baseline)
+    assert len(matched) == 1 and len(new) == 1
+
+    # line numbers are not part of the identity
+    moved = Finding(**{**f.to_dict(), "line": 99})
+    new, matched = split_new([moved], baseline)
+    assert new == [] and matched == [moved]
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(tmp_path / "nope.json") == []
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes, formats, injected violation
+# ---------------------------------------------------------------------------
+def test_cli_fails_on_injected_violation(tmp_path, capsys):
+    bad = tmp_path / "core"
+    bad.mkdir()
+    (bad / "sim.py").write_text(
+        "import numpy as np\nx = np.random.rand(3)\n"
+    )
+    rc = cli_main([str(bad), "--no-audit", "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "RL101" in out
+    assert out.strip().splitlines()[-1].startswith("repro-lint:")
+
+
+def test_cli_baseline_makes_known_findings_pass(tmp_path, capsys):
+    bad = tmp_path / "mod.py"
+    bad.write_text("def f(n):\n    assert n\n")
+    baseline = tmp_path / "baseline.json"
+    rc = cli_main(
+        [str(bad), "--no-audit", "--write-baseline", str(baseline)]
+    )
+    assert rc == 0 and baseline.exists()
+    capsys.readouterr()
+
+    rc = cli_main([str(bad), "--no-audit", "--baseline", str(baseline)])
+    assert rc == 0  # baselined finding does not fail
+
+    # a *second* occurrence of the same pattern is still new
+    bad.write_text("def f(n):\n    assert n\n    assert n\n")
+    rc = cli_main([str(bad), "--no-audit", "--baseline", str(baseline)])
+    assert rc == 1
+
+
+def test_cli_json_format(tmp_path, capsys):
+    bad = tmp_path / "mod.py"
+    bad.write_text("def f(n):\n    assert n\n")
+    rc = cli_main([str(bad), "--no-audit", "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["exit"] == 1
+    assert payload["counts"] == {"RL302": 1}
+    assert payload["findings"][0]["code"] == "RL302"
+    assert payload["audit"] == "skipped"
+
+
+# ---------------------------------------------------------------------------
+# jaxpr audit
+# ---------------------------------------------------------------------------
+def test_audit_detects_float_in_int_pipeline():
+    def leaky(x):
+        return (x.astype(jnp.float32) * 1.5).astype(jnp.int32)
+
+    closed = jax.make_jaxpr(leaky)(jnp.arange(4, dtype=jnp.int32))
+    findings = jaxpr_audit.audit_jaxpr("leaky", closed)
+    assert "RA401" in codes(findings)
+
+
+def test_audit_ignores_dead_float_code():
+    def payload(x):
+        _unused = x.astype(jnp.float32) * 2.0  # never feeds the output
+        return x + 1
+
+    closed = jax.make_jaxpr(payload)(jnp.arange(4, dtype=jnp.int32))
+    assert jaxpr_audit.audit_jaxpr("payload", closed) == []
+
+
+def test_audit_allow_floats_gates_ra401():
+    def timing(x):
+        return x.astype(jnp.float32) / 3.0
+
+    closed = jax.make_jaxpr(timing)(jnp.arange(4, dtype=jnp.int32))
+    assert jaxpr_audit.audit_jaxpr("t", closed, allow_floats=True) == []
+    assert set(codes(jaxpr_audit.audit_jaxpr("t", closed))) == {"RA401"}
+
+
+def test_audit_flags_forbidden_callback():
+    def noisy(x):
+        jax.debug.callback(lambda v: None, x)
+        return x * 2
+
+    closed = jax.make_jaxpr(noisy)(jnp.arange(4, dtype=jnp.int32))
+    findings = jaxpr_audit.audit_jaxpr("noisy", closed)
+    assert "RA402" in codes(findings)
+
+
+def test_audit_recurses_into_scan_bodies():
+    def run(xs):
+        def body(c, x):
+            return c + (x.astype(jnp.float32) * 2.0).astype(jnp.int32), x
+
+        return jax.lax.scan(body, jnp.int32(0), xs)
+
+    closed = jax.make_jaxpr(run)(jnp.arange(4, dtype=jnp.int32))
+    assert "RA401" in codes(jaxpr_audit.audit_jaxpr("run", closed))
+
+
+# ---------------------------------------------------------------------------
+# Contracts: workload twins + stat layout
+# ---------------------------------------------------------------------------
+def test_workload_twin_contract_holds():
+    assert contracts.check_workload_twins() == []
+
+
+def test_twin_contract_detects_divergence(monkeypatch):
+    from repro import workloads
+    from repro.workloads.base import WorkloadTrace
+
+    class Broken:
+        def device_trace(self, footprint_bytes):
+            return WorkloadTrace(
+                addr=np.arange(8, dtype=np.int32),
+                is_write=np.zeros(8, np.int32),
+                n_pages=1,
+            )
+
+        def host_trace(self, footprint_bytes):
+            return WorkloadTrace(
+                addr=np.arange(1, 9, dtype=np.int32),  # shifted: diverges
+                is_write=np.zeros(8, np.int32),
+                n_pages=1,
+            )
+
+    monkeypatch.setattr(workloads, "REGISTRY", {"broken": Broken})
+    monkeypatch.setattr(workloads, "get", lambda name, **kw: Broken())
+    findings = contracts.check_workload_twins()
+    assert codes(findings) == ["RA403"]
+    assert "broken" in findings[0].message
+
+
+def test_twin_contract_detects_missing_host_twin(monkeypatch):
+    from repro import workloads
+
+    class NoTwin:
+        def device_trace(self, footprint_bytes):  # pragma: no cover
+            raise NotImplementedError
+
+    monkeypatch.setattr(workloads, "REGISTRY", {"notwin": NoTwin})
+    monkeypatch.setattr(workloads, "get", lambda name, **kw: NoTwin())
+    findings = contracts.check_workload_twins()
+    assert codes(findings) == ["RA403"]
+    assert "host_trace" in findings[0].message
+
+
+def test_stat_layout_gate_holds():
+    assert contracts.check_stat_layout() == []
+
+
+def test_registered_entry_points_trace_clean():
+    for name, thunk, allow_floats in contracts.entry_points():
+        closed = thunk()
+        findings = jaxpr_audit.audit_jaxpr(
+            name, closed, allow_floats=allow_floats
+        )
+        assert findings == [], f"{name}: {[f.message for f in findings]}"
+
+
+# ---------------------------------------------------------------------------
+# Self-scan gate: src/repro stays clean modulo the committed baseline
+# ---------------------------------------------------------------------------
+def test_self_scan_is_clean_modulo_baseline():
+    baseline = load_baseline(ROOT / "tools" / "repro_lint_baseline.json")
+    assert len(baseline) <= 10, "baseline budget exceeded (max 10 entries)"
+    kept, _ = lint_paths([ROOT / "src" / "repro"], root=ROOT)
+    new, _ = split_new(kept, baseline)
+    assert new == [], "\n".join(f.format() for f in new)
+
+
+def test_full_audit_is_clean():
+    from repro.analysis.contracts import run_audit
+
+    findings = run_audit()
+    assert findings == [], "\n".join(f.format() for f in findings)

@@ -2,7 +2,6 @@
 and the HLO roofline analyzer."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -40,7 +39,7 @@ def test_param_pspecs_cover_tree():
 
 def test_moe_and_vocab_sharded_over_model():
     cfg = get_config("qwen3-moe-235b-a22b")
-    shapes = tf.param_shapes(cfg)
+    tf.param_shapes(cfg)
     specs = M.param_pspecs(cfg)
     moe_spec = specs["segments"][0]["b0"]["moe"]["wiu"]
     assert moe_spec[1] == "model"          # experts dim (after stack dim)

@@ -119,7 +119,6 @@ def test_reference_backend_matches_sequential(cores, n):
 def test_extra_padding_is_inert():
     p = params(8, 2, 1)
     addr, wr, core, tier = rand_trace(50, 1)
-    row = lambda x, n: np.asarray(pad_trace(n, jnp.asarray(x)))[0][None]
     stats_a, _ = engine.run_traces(
         p, addr[None], wr[None], core[None], tier[None])
     padded = pad_trace(128, *(jnp.asarray(x) for x in (addr, wr, core, tier)))

@@ -10,7 +10,6 @@ from _hypothesis_compat import given, settings, st
 from repro.configs import get_smoke
 from repro.models import moe as moe_mod
 from repro.models import sharding as sh
-from repro.models import transformer as tf
 
 
 def test_dispatch_tables_invariants():

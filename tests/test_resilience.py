@@ -17,7 +17,6 @@ degraded, retried, or requeued produces **bitwise-identical**
 Everything runs on one CPU host via the deterministic `FaultPlan`
 injector — no real failures required.
 """
-import pathlib
 
 import numpy as np
 import pytest

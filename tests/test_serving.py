@@ -1,6 +1,5 @@
 """Continuous-batching scheduler policy tests (stub model functions)."""
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke
 from repro.memory.kvcache import PagedKVCache
@@ -50,7 +49,7 @@ def test_admission_respects_pool_and_batch_limit():
     eng.step(prefill, decode)
     eng.step(prefill, decode)
     assert len(eng.running) == 2 and len(eng.waiting) == 2
-    stats = eng.run_until_drained(prefill, decode)
+    eng.run_until_drained(prefill, decode)
     assert len(eng.done) == 4                     # drained despite pressure
 
 

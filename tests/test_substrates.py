@@ -1,6 +1,4 @@
 """Substrate tests: optimizer, data, checkpoint, tiering, KV cache, runtime."""
-import dataclasses
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +11,6 @@ from repro.data import DataConfig, batch_at_step
 from repro.memory import plan_serving, plan_training
 from repro.memory.kvcache import PagedKVCache
 from repro.memory.offload import schedule
-from repro.models.model import SHAPES
 from repro.optim import adamw
 from repro.runtime import RuntimeConfig, TrainingRuntime, WorkerFailure
 

@@ -1,6 +1,4 @@
 """End-to-end behaviour tests: build -> enumerate -> online -> characterize."""
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import CXLRAMSim, SimConfig

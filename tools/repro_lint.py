@@ -1,0 +1,20 @@
+#!/usr/bin/env python3
+"""Repo entry point for the determinism & parity-contract analyzer.
+
+Thin wrapper so the tool runs without installing the package:
+
+    python tools/repro_lint.py --baseline tools/repro_lint_baseline.json
+
+is equivalent to ``PYTHONPATH=src python -m repro.analysis ...``.  See
+``docs/analysis.md`` for the rule catalog and workflow.
+"""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
