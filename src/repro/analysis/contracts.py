@@ -106,6 +106,36 @@ def _trace_run_dynamic():
     return trace_entry(entry, addr[None], is_write[None], core[None], tier[None])
 
 
+def _trace_run_dynamic_sampling():
+    from repro.core import tiering_dyn
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace(n=8)
+    # One sampled row: warm 1 / measure 1 / period 2 in scan slots.  The
+    # stat-masking select rides the same scan body as `run_dynamic`; the
+    # audit re-traces it with non-zero sampling scalars so a float or
+    # forbidden primitive sneaking into the masking arithmetic is caught
+    # even if the exact path stays clean.
+    scalars = dict(
+        dyn_flag=np.asarray([1], np.int32),
+        page_map0=np.zeros((1, 2), np.int32),
+        n_pages=np.asarray([2], np.int32),
+        budget=np.asarray([1], np.int32),
+        threshold=np.asarray([1], np.int32),
+        period=np.asarray([1], np.int32),
+        dram_cap=np.asarray([2], np.int32),
+        page_target_lines=np.ones((1, 2), np.int32),
+        s_warm=np.asarray([1], np.int32),
+        s_meas=np.asarray([1], np.int32),
+        s_per=np.asarray([2], np.int32),
+    )
+
+    def entry(a, w, c, t):
+        return tiering_dyn.run_dynamic(p, a, w, c, t, slot_len=4, k_max=1, **scalars)
+
+    return trace_entry(entry, addr[None], is_write[None], core[None], tier[None])
+
+
 def _workload_entries() -> List[Tuple[str, Callable, bool]]:
     from repro import workloads
 
@@ -133,6 +163,7 @@ def entry_points() -> List[Tuple[str, Callable, bool]]:
         ("simulate_trace", _trace_simulate_trace, False),
         ("run_traces[reference]", _trace_run_traces_reference, False),
         ("run_dynamic", _trace_run_dynamic, False),
+        ("run_dynamic[sampling]", _trace_run_dynamic_sampling, False),
     ]
     return static + _workload_entries()
 
@@ -236,6 +267,22 @@ def check_stat_layout() -> List[Finding]:
                 f"coherence block at T={t} has "
                 f"{cache.nstats(t) - cache.coherence_base(t)} counters, "
                 f"expected 4"
+            )
+        # The sampling ci-column family must derive offsets from the one
+        # stats layout: column i of ci_column_names(t) is stat_names(t)[i]
+        # with the `_ci95` suffix, width exactly nstats(t).
+        from repro.core import sampling
+        ci_names = sampling.ci_column_names(t)
+        if len(ci_names) != cache.nstats(t):
+            fail(
+                f"len(ci_column_names({t})) == {len(ci_names)} != "
+                f"nstats({t}) == {cache.nstats(t)}"
+            )
+        if ci_names != tuple(f"{n}_ci95" for n in names):
+            fail(
+                f"ci_column_names({t}) does not derive from "
+                f"stat_names({t}): the ci family has drifted from the "
+                f"stats layout"
             )
 
     # The kernel must read its layout from core.cache, not a copy.

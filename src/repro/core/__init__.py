@@ -8,6 +8,7 @@ from repro.core.distribute import (  # noqa: F401
     Mesh, ResilientExecutor, ShardedExecutor, auto_mesh, stream_traces,
 )
 from repro.core.engine import SweepSpec, run_sweep, run_traces  # noqa: F401
+from repro.core.sampling import SamplingSpec  # noqa: F401
 from repro.core.resilience import (  # noqa: F401
     CheckpointPolicy, Fault, FaultPlan, ResilienceError, RetryPolicy,
     RunKilled, RunReport,

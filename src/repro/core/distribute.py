@@ -463,6 +463,14 @@ class ShardedExecutor:
                                   b_pad, engine._UNBOUNDED_PAGES),
             "page_target_lines": _pad_rows(
                 jnp.asarray(tb.page_target_lines, jnp.int32), b_pad, 0),
+            # sampling window scalars: zero fill = measure-every-slot
+            # (padding rows never reach the results anyway)
+            "s_warm": _pad_rows(jnp.asarray(tb.s_warm, jnp.int32),
+                                b_pad, 0),
+            "s_meas": _pad_rows(jnp.asarray(tb.s_meas, jnp.int32),
+                                b_pad, 0),
+            "s_per": _pad_rows(jnp.asarray(tb.s_per, jnp.int32),
+                               b_pad, 0),
         }
         devices = mesh.resolve_devices()
         outs = []
@@ -767,7 +775,13 @@ class ResilientExecutor:
                                    b_pad, engine._UNBOUNDED_PAGES),
                 page_target_lines=_pad_rows(
                     jnp.asarray(tb.page_target_lines, jnp.int32),
-                    b_pad, 0))
+                    b_pad, 0),
+                s_warm=_pad_rows(jnp.asarray(tb.s_warm, jnp.int32),
+                                 b_pad, 0),
+                s_meas=_pad_rows(jnp.asarray(tb.s_meas, jnp.int32),
+                                 b_pad, 0),
+                s_per=_pad_rows(jnp.asarray(tb.s_per, jnp.int32),
+                                b_pad, 0))
         e = a3.shape[1]
         seg_slots = (e if self.stream_chunk is None
                      else min(max(1, self.stream_chunk // slot_len), e))
@@ -786,30 +800,28 @@ class ResilientExecutor:
             carry = tiering_dyn.init_dyn_carry(p, pmap0[rows])
             # host accumulators keep the checkpoint tree shape-stable:
             # completed segments fill their slice, the rest stays zero
-            slots_acc = np.zeros((bp, e, 4), np.int32)
-            snaps_acc = np.zeros((bp, e, nstats), np.int32)
+            acc = resilience.dyn_accumulators(bp, e, nstats)
             start = 0
             if ckpt is not None:
-                like = {"carry": resilience.host_tree(carry),
-                        "slots": slots_acc, "snaps": snaps_acc}
+                like = {"carry": resilience.host_tree(carry), **acc}
                 got = ckpt.restore(shard, like, report=self.report)
                 if got is not None:
                     start, tree = got
                     carry = tree["carry"]
-                    slots_acc = tree["slots"]
-                    snaps_acc = tree["snaps"]
+                    acc = {k: tree[k] for k in acc}
 
             def advance(c, lo, hi, xs=xs, sc=sc, shard=shard, s0=0,
-                        slots_acc=slots_acc, snaps_acc=snaps_acc):
+                        acc=acc):
                 _, dev = self._shard_device(shard, fleet, devices)
                 args = [jax.device_put(a[:, s0 + lo:s0 + hi], dev)
                         for a in xs]
-                c, slots, snaps = tiering_dyn.run_dynamic_segment(
+                c, slots, snaps, meas = tiering_dyn.run_dynamic_segment(
                     p, k_max, count_bound, jax.device_put(c, dev),
                     *args, *sc, donate=False)
                 sl = slice(s0 + lo, s0 + hi)
-                slots_acc[:, sl] = np.asarray(slots)
-                snaps_acc[:, sl] = np.asarray(snaps)
+                acc["slots"][:, sl] = np.asarray(slots)
+                acc["snaps"][:, sl] = np.asarray(snaps)
+                acc["meas"][:, sl] = np.asarray(meas)
                 return c
 
             for si in range(start, n_segments):
@@ -824,13 +836,14 @@ class ResilientExecutor:
                         or done == n_segments):
                     ckpt.save(shard, done,
                               {"carry": resilience.host_tree(carry),
-                               "slots": slots_acc, "snaps": snaps_acc},
+                               **acc},
                               report=self.report)
             jax.block_until_ready(carry)
             _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
             outs.append(tiering_dyn.DynOutputs(
                 np.asarray(stats), np.asarray(pmap_f), np.asarray(mig_rd),
-                np.asarray(mig_wr), slots_acc, snaps_acc))
+                np.asarray(mig_wr), acc["slots"], acc["snaps"],
+                acc["meas"]))
         if ckpt is not None:
             ckpt.wait()
         return tiering_dyn.DynOutputs(*(

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -50,6 +51,7 @@ import numpy as np
 from repro.core import cache as cache_mod
 from repro.core import numa as numa_mod
 from repro.core import route as route_mod
+from repro.core import sampling as sampling_mod
 from repro.core import tiering_dyn
 from repro.core.machine import CPUModel, RunResult, time_batch
 from repro.core.timing import TimingConfig
@@ -110,6 +112,16 @@ class SweepSpec:
         promote/demote at epoch boundaries and charge migration traffic
         into the timing fixed point.  Mixed static/dynamic axes still
         run as ONE vmapped device program.  Empty = static only.
+    sampling : tuple of Optional[sampling.SamplingSpec]
+        Scenario axis #4: SMARTS-style sampled simulation
+        (:mod:`repro.core.sampling`).  ``None`` entries run exact —
+        bitwise-equal to the legacy rows (test-enforced) — while
+        sampled entries alternate functional-warming slots (cache/tier
+        state updated, stat accumulation masked) with detailed
+        measurement windows, then scale the window stats to whole-trace
+        estimates with CLT confidence intervals (``*_ci95`` /
+        ``sampled_frac`` row columns).  Mixed exact/sampled axes still
+        run as ONE vmapped device program.  Empty = exact only.
     """
     footprint_factors: Tuple[int, ...] = (2, 4, 6, 8)
     policies: Tuple[numa_mod.Policy, ...] = (numa_mod.ZNuma(1.0),)
@@ -119,6 +131,7 @@ class SweepSpec:
     topologies: Tuple[route_mod.TopologySpec, ...] = ()
     workloads: Tuple["Workload", ...] = ()
     tiering: Tuple[Optional[tiering_dyn.DynamicTiering], ...] = ()
+    sampling: Tuple[Optional[sampling_mod.SamplingSpec], ...] = ()
 
     @property
     def workload_axis(self) -> Tuple["Workload", ...]:
@@ -145,6 +158,12 @@ class SweepSpec:
             Optional[tiering_dyn.DynamicTiering], ...]:
         """The tiering loop: `(None,)` = static placement only."""
         return self.tiering if self.tiering else (None,)
+
+    @property
+    def sampling_axis(self) -> Tuple[
+            Optional[sampling_mod.SamplingSpec], ...]:
+        """The sampling loop: `(None,)` = exact simulation only."""
+        return self.sampling if self.sampling else (None,)
 
 
 # ---------------------------------------------------------------------------
@@ -545,6 +564,14 @@ def build_sweep_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
     return stack_device_traces(traces, pad_to_multiple=chunk), cell_rows
 
 
+def _narrow_idx(t_max: int, t_route: int) -> List[int]:
+    """Stat columns a `t_route`-target route occupies in a `t_max`-wide
+    layout (the complement is identically zero — see `_narrow_stats`)."""
+    return (list(range(4)) + list(range(4, 4 + t_route))
+            + list(range(4 + t_max, 4 + t_max + t_route))
+            + list(range(4 + 2 * t_max, 8 + 2 * t_max)))
+
+
 def _narrow_stats(stats: np.ndarray, t_max: int, t_route: int) -> np.ndarray:
     """Drop the (all-zero) per-target columns a narrower route never hit.
 
@@ -554,10 +581,7 @@ def _narrow_stats(stats: np.ndarray, t_max: int, t_route: int) -> np.ndarray:
     """
     if t_route == t_max:
         return stats
-    idx = (list(range(4)) + list(range(4, 4 + t_route))
-           + list(range(4 + t_max, 4 + t_max + t_route))
-           + list(range(4 + 2 * t_max, 8 + 2 * t_max)))
-    return stats[:, idx]
+    return stats[:, _narrow_idx(t_max, t_route)]
 
 
 class LocalExecutor:
@@ -586,7 +610,8 @@ class LocalExecutor:
             dyn_flag=tb.dyn_flag, page_map0=tb.page_map0,
             n_pages=tb.n_pages, budget=tb.budget, threshold=tb.threshold,
             period=tb.period, dram_cap=tb.dram_cap,
-            page_target_lines=tb.page_target_lines)
+            page_target_lines=tb.page_target_lines,
+            s_warm=tb.s_warm, s_meas=tb.s_meas, s_per=tb.s_per)
 
 
 _LOCAL_EXECUTOR = LocalExecutor()
@@ -666,22 +691,25 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
                             fault_plan=fault_plan, report=report)
     rows: List[Dict] = []
     i = 0
-    for tr in spec.tiering_axis:
-        for topo in spec.topology_axis:
-            for wl, k, pol in spec.sim_cells:
-                for _cpu in spec.cpus:
-                    r = results[i]
-                    row = {"workload": wl.name, "footprint_x_l2": k,
-                           "policy": numa_mod.describe(pol), "cpu": r.cpu,
-                           **r.row(), "stats": r.stats}
-                    if isinstance(wl, Stream):  # no STREAM kernel otherwise
-                        row["kernel"] = wl.kernel
-                    if topo is not None:
-                        row["topology"] = topo.name
-                    if spec.tiering:
-                        row["tiering"] = tiering_dyn.describe(tr)
-                    rows.append(row)
-                    i += 1
+    for sp in spec.sampling_axis:
+        for tr in spec.tiering_axis:
+            for topo in spec.topology_axis:
+                for wl, k, pol in spec.sim_cells:
+                    for _cpu in spec.cpus:
+                        r = results[i]
+                        row = {"workload": wl.name, "footprint_x_l2": k,
+                               "policy": numa_mod.describe(pol),
+                               "cpu": r.cpu, **r.row(), "stats": r.stats}
+                        if isinstance(wl, Stream):  # STREAM only
+                            row["kernel"] = wl.kernel
+                        if topo is not None:
+                            row["topology"] = topo.name
+                        if spec.tiering:
+                            row["tiering"] = tiering_dyn.describe(tr)
+                        if spec.sampling:
+                            row["sampling"] = sampling_mod.describe(sp)
+                        rows.append(row)
+                        i += 1
     return rows
 
 
@@ -720,7 +748,8 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
     executor = executor if executor is not None else _LOCAL_EXECUTOR
     routes = [None if tp is None else route_mod.build_route(tp, timing)
               for tp in spec.topology_axis]
-    if any(tr is not None for tr in spec.tiering_axis):
+    if (any(tr is not None for tr in spec.tiering_axis)
+            or any(sp is not None for sp in spec.sampling_axis)):
         return _sweep_results_dynamic(spec, cache, timing, routes,
                                       executor=executor)
     t_max = max(2 if r is None else r.n_targets for r in routes)
@@ -741,10 +770,11 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
         rows_stats = np.repeat(block, len(spec.cpus), axis=0)
         results.extend(time_batch(timing, rows_cpus, rows_stats,
                                   route=route))
-    # an explicit all-None tiering axis repeats the static block per
-    # entry — as independent copies, so no two rows share mutable state
+    # explicit all-None tiering/sampling axes repeat the static block
+    # per entry — independent copies, so no rows share mutable state
     out = list(results)
-    for _ in range(len(spec.tiering_axis) - 1):
+    n_copies = len(spec.sampling_axis) * len(spec.tiering_axis)
+    for _ in range(n_copies - 1):
         out.extend(dataclasses.replace(
             r, stats=dict(r.stats), miss_rates=dict(r.miss_rates),
             achieved_gbps=dict(r.achieved_gbps),
@@ -773,6 +803,9 @@ class TieringBatch:
     period: np.ndarray              # (B,) slots per epoch
     dram_cap: np.ndarray            # (B,)
     page_target_lines: Array        # (B, P, T)
+    s_warm: np.ndarray              # (B,) sampling warm slots (scan units)
+    s_meas: np.ndarray              # (B,) sampling measure slots
+    s_per: np.ndarray               # (B,) sampling period; 0 = exact
     cell_rows: List[int]            # logical cell -> batch row
 
 
@@ -782,14 +815,17 @@ _UNBOUNDED_PAGES = 1 << 30          # "no DRAM capacity pressure" sentinel
 def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
                         routes: Sequence[Optional[route_mod.RouteMap]],
                         slot: int, t_max: int) -> TieringBatch:
-    """Materialize the (tiering x topology x workload x footprint x
-    policy) batch for the epoch program.
+    """Materialize the (sampling x tiering x topology x workload x
+    footprint x policy) batch for the epoch program.
 
     Row dedup mirrors :func:`build_sweep_batch`: cells whose workload
     owns its residency map are policy-independent (dynamic rows seed the
     tierer with the first-touch page map of the workload's own tier
     stream — :func:`repro.core.numa.first_touch_page_map`); every
-    ``tiering=None`` cell shares one row across all ``None`` entries.
+    ``tiering=None`` cell shares one row across all ``None`` entries,
+    and likewise every ``sampling=None`` cell across ``None`` sampling
+    entries (sampled cells never share rows with exact ones — their
+    device stats are masked differently).
 
     Parameters
     ----------
@@ -824,64 +860,72 @@ def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
 
     traces: List[Tuple] = []
     pmap0s: List[Array] = []
-    scalars: List[Tuple[int, int, int, int, int, int, int]] = []
+    scalars: List[Tuple[int, ...]] = []
     row_of: Dict = {}
     cell_rows: List[int] = []
-    for tri, tr in enumerate(spec.tiering_axis):
-        dynamic = tr is not None
-        tkey = tri if dynamic else -1   # all static entries share rows
-        for ti, route in enumerate(routes):
-            for wl, k, pol in cells:
-                wt = cell_traces[(wl, k)]
-                key = ((tkey, ti, wl, k) if wt.tier is not None
-                       else (tkey, ti, wl, k, pol))
-                if key not in row_of:
-                    if dynamic:
-                        tier = (jnp.ones_like(wt.addr) if route is None
-                                else route.cxl_targets_of_lines(wt.addr))
-                        if wt.tier is not None:
-                            pmap0 = numa_mod.first_touch_page_map(
-                                wt.tier, wt.addr, wt.n_pages)
+    for si, sp in enumerate(spec.sampling_axis):
+        skey = si if sp is not None else -1  # exact entries share rows
+        sw, sm, spr = sampling_mod.scan_scalars(sp, slot)
+        for tri, tr in enumerate(spec.tiering_axis):
+            dynamic = tr is not None
+            tkey = tri if dynamic else -1  # all static entries share rows
+            for ti, route in enumerate(routes):
+                for wl, k, pol in cells:
+                    wt = cell_traces[(wl, k)]
+                    key = ((skey, tkey, ti, wl, k)
+                           if wt.tier is not None
+                           else (skey, tkey, ti, wl, k, pol))
+                    if key not in row_of:
+                        if dynamic:
+                            tier = (jnp.ones_like(wt.addr)
+                                    if route is None
+                                    else route.cxl_targets_of_lines(
+                                        wt.addr))
+                            if wt.tier is not None:
+                                pmap0 = numa_mod.first_touch_page_map(
+                                    wt.tier, wt.addr, wt.n_pages)
+                            else:
+                                pmap0 = (pol.tiers(wt.n_pages) != 0) \
+                                    .astype(jnp.int32)
+                            cap = (tr.dram_capacity_pages
+                                   if tr.dram_capacity_pages is not None
+                                   else _UNBOUNDED_PAGES)
+                            sc = (1, wt.n_pages, tr.budget, tr.threshold,
+                                  tr.epoch_len // slot, cap, 0)
                         else:
-                            pmap0 = (pol.tiers(wt.n_pages) != 0) \
-                                .astype(jnp.int32)
-                        cap = (tr.dram_capacity_pages
-                               if tr.dram_capacity_pages is not None
-                               else _UNBOUNDED_PAGES)
-                        sc = (1, wt.n_pages, tr.budget, tr.threshold,
-                              tr.epoch_len // slot, cap, 0)
-                    else:
-                        # static rows: precomputed final targets, exactly
-                        # the legacy build_sweep_batch arithmetic
-                        if wt.tier is not None:
-                            tier = (wt.tier if route is None
-                                    else route.targets_of_tiered_lines(
-                                        wt.tier, wt.addr))
-                        elif route is None:
-                            tier = numa_mod.tier_of_lines(pol, wt.addr,
-                                                          wt.n_pages)
-                        else:
-                            tier = route.target_of_lines(pol, wt.addr,
-                                                         wt.n_pages)
-                        pmap0 = jnp.ones((wt.n_pages,), jnp.int32)
-                        sc = (0, wt.n_pages, 0, 1, 1,
-                              _UNBOUNDED_PAGES, 0)
-                    if wt.n_pages < p_max:   # pad: CXL, never eligible
-                        pmap0 = jnp.concatenate([
-                            jnp.asarray(pmap0, jnp.int32),
-                            jnp.ones((p_max - wt.n_pages,), jnp.int32)])
-                    traces.append((wt.addr, wt.is_write, None, tier))
-                    pmap0s.append(jnp.asarray(pmap0, jnp.int32))
-                    scalars.append(sc + (ti,))
-                    row_of[key] = len(traces) - 1
-                cell_rows.append(row_of[key])
+                            # static rows: precomputed final targets,
+                            # exactly the legacy build_sweep_batch math
+                            if wt.tier is not None:
+                                tier = (wt.tier if route is None
+                                        else route.targets_of_tiered_lines(
+                                            wt.tier, wt.addr))
+                            elif route is None:
+                                tier = numa_mod.tier_of_lines(
+                                    pol, wt.addr, wt.n_pages)
+                            else:
+                                tier = route.target_of_lines(
+                                    pol, wt.addr, wt.n_pages)
+                            pmap0 = jnp.ones((wt.n_pages,), jnp.int32)
+                            sc = (0, wt.n_pages, 0, 1, 1,
+                                  _UNBOUNDED_PAGES, 0)
+                        if wt.n_pages < p_max:  # pad: CXL, never eligible
+                            pmap0 = jnp.concatenate([
+                                jnp.asarray(pmap0, jnp.int32),
+                                jnp.ones((p_max - wt.n_pages,),
+                                         jnp.int32)])
+                        traces.append((wt.addr, wt.is_write, None, tier))
+                        pmap0s.append(jnp.asarray(pmap0, jnp.int32))
+                        scalars.append(sc + (sw, sm, spr, ti))
+                        row_of[key] = len(traces) - 1
+                    cell_rows.append(row_of[key])
     batch = stack_device_traces(traces, pad_to_multiple=slot)
     sc = np.asarray(scalars, np.int64)
     return TieringBatch(
         batch=batch, dyn_flag=sc[:, 0], page_map0=jnp.stack(pmap0s),
         n_pages=sc[:, 1], budget=sc[:, 2], threshold=sc[:, 3],
         period=sc[:, 4], dram_cap=sc[:, 5],
-        page_target_lines=jnp.stack([ptl_of[ti] for ti in sc[:, 7]]),
+        page_target_lines=jnp.stack([ptl_of[ti] for ti in sc[:, 10]]),
+        s_warm=sc[:, 7], s_meas=sc[:, 8], s_per=sc[:, 9],
         cell_rows=cell_rows)
 
 
@@ -892,12 +936,17 @@ def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
     """The epoch-structured twin of the static `sweep_results` body.
 
     One `tiering_dyn.run_dynamic` device call simulates every
-    (tiering, topology, workload, footprint, policy) cell — static
-    (``tiering=None``) rows ride the same vmapped program with a zero
-    migration budget and their precomputed targets, so their stats stay
-    bitwise-equal to the legacy path (test-enforced).  Migration line
-    counts feed `time_batch(mig_lines=...)`; dynamic rows additionally
-    get `migrated_pages` and per-epoch DRAM hit-tier fractions.
+    (sampling, tiering, topology, workload, footprint, policy) cell —
+    static (``tiering=None``) rows ride the same vmapped program with a
+    zero migration budget and their precomputed targets, so their stats
+    stay bitwise-equal to the legacy path (test-enforced).  Migration
+    line counts feed `time_batch(mig_lines=...)`; dynamic rows
+    additionally get `migrated_pages` and per-epoch DRAM hit-tier
+    fractions.  Sampled rows (``sampling != None``) replace the masked
+    device counters with whole-trace estimates
+    (:func:`repro.core.sampling.estimate` over the per-slot snapshot
+    deltas) before the timing fixed point and carry per-counter 95%
+    confidence intervals.
     """
     if spec.backend != "reference":
         raise NotImplementedError(
@@ -906,43 +955,85 @@ def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
     t_max = max(2 if r is None else r.n_targets for r in routes)
     p = dataclasses.replace(cache, n_targets=t_max)
     dyn = [tr for tr in spec.tiering_axis if tr is not None]
-    slot = tiering_dyn.slot_length(dyn)
+    sampled = [sp for sp in spec.sampling_axis if sp is not None]
+    if dyn:
+        # sampling slots must nest inside epoch slots: scan at the gcd
+        # (a pure-dynamic sweep keeps its legacy granularity untouched)
+        slot = tiering_dyn.slot_length(dyn)
+        if sampled:
+            slot = math.gcd(slot, sampling_mod.SLOT_LEN)
+        k_max = max(1, max(tr.budget for tr in dyn))
+    else:
+        slot = sampling_mod.SLOT_LEN
+        k_max = 1
     for tr in dyn:
         if tr.epoch_len % slot:
             raise ValueError(
                 f"epoch_len {tr.epoch_len} is not a multiple of the "
                 f"sweep's epoch gcd {slot}")
-    k_max = max(1, max(tr.budget for tr in dyn))
     tb = build_tiering_batch(spec, cache, routes, slot, t_max)
     out = executor.run_dynamic(p, tb, slot_len=slot, k_max=k_max)
     stats = np.asarray(jax.block_until_ready(out.stats), np.int64)
     mig = np.stack([np.asarray(out.mig_read, np.int64),
                     np.asarray(out.mig_write, np.int64)], axis=1)
     slots = np.asarray(out.slots, np.int64)          # (B, E, 4)
+    snaps = np.asarray(out.snapshots)                # (B, E, nstats)
+    meas = np.asarray(out.meas)                      # (B, E)
     cells = spec.sim_cells
     n_cells = len(cells)
     n_cpus = len(spec.cpus)
+    n_tier = len(spec.tiering_axis)
     rows_cpus = [wl.cpu_for(cpu) for wl, _k, _pol in cells
                  for cpu in spec.cpus]
+
+    # whole-trace estimates per sampled batch row (dedup-shared cells
+    # compute once; a batch row belongs to exactly one sampling entry)
+    est_of: Dict[int, sampling_mod.Estimate] = {}
+
+    def _est(br: int, sp: sampling_mod.SamplingSpec):
+        if br not in est_of:
+            est_of[br] = sampling_mod.estimate(
+                cache_mod.snapshot_deltas(snaps[br]), slots[br, :, 0],
+                meas[br], confidence=sp.confidence)
+        return est_of[br]
+
     results: List[RunResult] = []
-    for tri, tr in enumerate(spec.tiering_axis):
-        for ti, route in enumerate(routes):
-            base = (tri * len(routes) + ti) * n_cells
-            block_rows = tb.cell_rows[base:base + n_cells]
-            t_route = 2 if route is None else route.n_targets
-            block = _narrow_stats(stats[block_rows], t_max, t_route)
-            mig_block = mig[block_rows][:, :, :t_route]
-            rows_stats = np.repeat(block, n_cpus, axis=0)
-            rows_mig = np.repeat(mig_block, n_cpus, axis=0)
-            res = time_batch(timing, rows_cpus, rows_stats, route=route,
-                             mig_lines=rows_mig)
-            if tr is not None:
-                period = tr.epoch_len // slot
-                for j, r in enumerate(res):
-                    br = block_rows[j // n_cpus]
-                    r.migrated_pages = int(slots[br, :, 2].sum()
-                                           + slots[br, :, 3].sum())
-                    r.epoch_dram_frac = tiering_dyn.epoch_fractions(
-                        slots[br], period)
-            results.extend(res)
+    for si, sp in enumerate(spec.sampling_axis):
+        for tri, tr in enumerate(spec.tiering_axis):
+            for ti, route in enumerate(routes):
+                base = ((si * n_tier + tri) * len(routes) + ti) * n_cells
+                block_rows = tb.cell_rows[base:base + n_cells]
+                t_route = 2 if route is None else route.n_targets
+                if sp is None:
+                    block = stats[block_rows]
+                    ests = None
+                else:
+                    ests = [_est(br, sp) for br in block_rows]
+                    block = np.stack([e.stats for e in ests])
+                block = _narrow_stats(block, t_max, t_route)
+                mig_block = mig[block_rows][:, :, :t_route]
+                rows_stats = np.repeat(block, n_cpus, axis=0)
+                rows_mig = np.repeat(mig_block, n_cpus, axis=0)
+                res = time_batch(timing, rows_cpus, rows_stats,
+                                 route=route, mig_lines=rows_mig)
+                if tr is not None:
+                    period = tr.epoch_len // slot
+                    for j, r in enumerate(res):
+                        br = block_rows[j // n_cpus]
+                        r.migrated_pages = int(slots[br, :, 2].sum()
+                                               + slots[br, :, 3].sum())
+                        r.epoch_dram_frac = tiering_dyn.epoch_fractions(
+                            slots[br], period)
+                if ests is not None:
+                    nidx = _narrow_idx(t_max, t_route)
+                    names = cache_mod.stat_names(t_route)
+                    for j, r in enumerate(res):
+                        e = ests[j // n_cpus]
+                        r.sampled_frac = e.sampled_frac
+                        r.sample_windows = e.n_windows
+                        r.stats_ci95 = {
+                            nm: float(e.ci[ci]) for nm, ci
+                            in zip(names, nidx)}
+                        r.l2_miss_rate_ci95 = e.l2_miss_rate_ci()[1]
+                results.extend(res)
     return results

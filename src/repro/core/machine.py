@@ -97,6 +97,18 @@ class RunResult:
         accesses whose backing tier was local DRAM).  ``None`` on rows
         not timed under dynamic tiering — `row()` then omits the
         migration columns entirely, keeping legacy rows bit-identical.
+    stats_ci95 : dict, optional
+        Per-counter confidence-interval half-widths of a SMARTS-sampled
+        row (:mod:`repro.core.sampling`), keyed like ``stats``.  ``None``
+        on exact rows — `row()` then omits every sampling column,
+        keeping the legacy schema bit-identical.
+    sampled_frac : float, optional
+        Fraction of the trace's accesses that fell in detailed
+        measurement windows (sampled rows only).
+    sample_windows : int, optional
+        Number of (non-empty) measurement windows the estimate used.
+    l2_miss_rate_ci95 : float, optional
+        CI half-width of the L2 miss rate (sampled rows only).
     """
     stats: Dict[str, int]
     miss_rates: Dict[str, float]
@@ -107,6 +119,10 @@ class RunResult:
     migrated_pages: int = 0
     migration_gbps: float = 0.0
     epoch_dram_frac: Optional[List[float]] = None
+    stats_ci95: Optional[Dict[str, float]] = None
+    sampled_frac: Optional[float] = None
+    sample_windows: Optional[int] = None
+    l2_miss_rate_ci95: Optional[float] = None
 
     def per_target_keys(self) -> List[str]:
         """Ordered per-target CXL labels ('cxl0', 'cxl1', ...) if routed."""
@@ -135,6 +151,14 @@ class RunResult:
             out["migrated_pages"] = self.migrated_pages
             out["migration_gbps"] = self.migration_gbps
             out["epoch_dram_frac"] = list(self.epoch_dram_frac)
+        # sampling columns (only on SMARTS-sampled rows; legacy rows
+        # keep the exact schema of today — test-enforced)
+        if self.stats_ci95 is not None:
+            for k, v in self.stats_ci95.items():
+                out[f"{k}_ci95"] = v
+            out["sampled_frac"] = self.sampled_frac
+            out["sample_windows"] = self.sample_windows
+            out["l2_miss_rate_ci95"] = self.l2_miss_rate_ci95
         return out
 
 

@@ -500,3 +500,18 @@ def host_tree(tree: Any) -> Any:
     """Copy a carry pytree to host numpy (device→host once, explicit)."""
     import jax
     return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def dyn_accumulators(b: int, e: int, nstats: int) -> dict:
+    """Host-side per-slot output accumulators for a dynamic shard.
+
+    The resilient executor's checkpoint tree must stay shape-stable
+    across segments, so the per-slot outputs (counters, cumulative stat
+    snapshots, and the sampling measurement flags) are accumulated into
+    fixed-shape host arrays: completed segments fill their slice, the
+    rest stays zero.  Keys mirror the :class:`~repro.core.tiering_dyn.
+    DynOutputs` per-slot fields (``slots``, ``snaps``, ``meas``).
+    """
+    return {"slots": np.zeros((b, e, 4), np.int32),
+            "snaps": np.zeros((b, e, nstats), np.int32),
+            "meas": np.zeros((b, e), np.int32)}

@@ -116,6 +116,7 @@ class CXLRAMSim:
               topologies: Optional[Sequence[route_mod.TopologySpec]] = None,
               workloads: Optional[Sequence] = None,
               tiering: Optional[Sequence] = None,
+              sampling: Optional[Sequence] = None,
               mesh=None,
               stream_chunk: Optional[int] = None,
               resume=None,
@@ -134,7 +135,12 @@ class CXLRAMSim:
         open the scenario axis — see ``docs/workloads.md`` — and
         :class:`repro.core.tiering_dyn.DynamicTiering` entries (``None``
         = static, bitwise-equal to today's rows) to sweep epoch-based
-        hot-page promotion/demotion — see ``docs/tiering.md``.
+        hot-page promotion/demotion — see ``docs/tiering.md``.  Pass
+        :class:`repro.core.sampling.SamplingSpec` entries (``None`` =
+        exact, bitwise-equal to today's rows) to run SMARTS-style
+        sampled simulation — detailed measurement windows scaled to
+        whole-trace estimates with ``*_ci95`` confidence columns — see
+        ``docs/sampling.md``.
 
         `mesh` shards the grid's batch rows across devices (a
         :class:`repro.core.distribute.Mesh` or an int shard count) and
@@ -165,7 +171,8 @@ class CXLRAMSim:
             cpus=cpus, kernel=kernel, backend=backend,
             topologies=tuple(topologies) if topologies else (),
             workloads=tuple(workloads) if workloads else (),
-            tiering=tuple(tiering) if tiering else ())
+            tiering=tuple(tiering) if tiering else (),
+            sampling=tuple(sampling) if sampling else ())
         if (mesh is None and stream_chunk is None and resume is None
                 and fault_plan is None and report is None):
             return engine_mod.run_sweep(spec, self.config.cache,

@@ -179,6 +179,7 @@ class DynOutputs(NamedTuple):
     mig_write: Array  # (B, T) migration lines written per target
     slots: Array      # (B, E, 4) per-slot counters, see SLOT_FIELDS
     snapshots: Array  # (B, E, nstats(T)) cumulative stats after each slot
+    meas: Array       # (B, E) 0/1 per-slot measurement flag (sampling)
 
 
 def _migration_step(pmap, counts, ptl, page_ids, pvalid, rank,
@@ -229,7 +230,8 @@ def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
     arithmetic through the carry — segmented and resident epoch programs
     are bitwise-equal (test-enforced).
     """
-    flag, npg, bud, thr, per, cap, ptl, page_ids, pvalid, rank = consts
+    (flag, npg, bud, thr, per, cap, s_w, s_m, s_p,
+     ptl, page_ids, pvalid, rank) = consts
     lpp = jnp.int32(LINES_PER_PAGE)
     l1p, l2p, stats, t, pmap, counts, mig_rd, mig_wr, eidx = carry
     a_s, w_s, c_s, tr_s, v_s = xs
@@ -242,11 +244,19 @@ def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
     acc_t = v_s.sum().astype(jnp.int32)
     acc_d = (v_s & (jnp.where(flag != 0, intent, tgt) == 0)) \
         .sum().astype(jnp.int32)
+    # sampled rows (s_p > 0): slots outside [s_w, s_w + s_m) of each
+    # period functionally warm — the state machine below still runs
+    # full fidelity, only the stat deltas are masked off afterwards
+    pos = eidx % jnp.maximum(s_p, jnp.int32(1))
+    meas = jnp.where(s_p > 0, (pos >= s_w) & (pos < s_w + s_m), True) \
+        .astype(jnp.int32)
+    stats0 = stats
     (l1p, l2p, stats, t), _ = jax.lax.scan(
         functools.partial(cache_mod._packed_step, p),
         (l1p, l2p, stats, t),
         (a_s, w_s.astype(bool), c_s, tgt.astype(jnp.int32), v_s),
         unroll=2)
+    stats = stats0 + (stats - stats0) * meas
     counts = counts.at[page].add(v_s.astype(jnp.int32))
     eidx = eidx + 1
     boundary = (eidx % per) == 0
@@ -262,7 +272,7 @@ def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
     ys = jnp.stack([acc_t, acc_d, n_pro, n_dem])
     carry = (l1p, l2p, stats, t, new_pmap, counts,
              mig_rd, mig_wr, eidx)
-    return carry, (ys, stats)
+    return carry, (ys, stats, meas)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
@@ -297,29 +307,34 @@ def _run_dynamic_segment_impl(p: cache_mod.CacheParams, k_max: int,
                               dyn_flag: Array, n_pages: Array,
                               budget: Array, threshold: Array,
                               period: Array, dram_cap: Array,
-                              page_target_lines: Array):
+                              page_target_lines: Array,
+                              s_warm: Array, s_meas: Array,
+                              s_per: Array):
     """Advance the batched epoch carry over a (B, E_seg, slot_len) slice.
 
-    Returns ``(carry, slots, snaps)`` with the per-slot counters and
-    cumulative stat snapshots of just this segment.
+    Returns ``(carry, slots, snaps, meas)`` with the per-slot counters,
+    cumulative stat snapshots and measurement flags of just this
+    segment.
     """
     n_p = page_target_lines.shape[1]
     cmax = jnp.int32(count_bound)
     valid = addr != SENTINEL
 
-    def one(c, a, w, cr, tr, v, flag, npg, bud, thr, per, cap, ptl):
+    def one(c, a, w, cr, tr, v, flag, npg, bud, thr, per, cap, ptl,
+            sw, sm, sp):
         page_ids = jnp.arange(n_p, dtype=jnp.int32)
         pvalid = page_ids < npg
         rank = jnp.arange(k_max, dtype=jnp.int32)
-        consts = (flag, npg, bud, thr, per, cap, ptl,
+        consts = (flag, npg, bud, thr, per, cap, sw, sm, sp, ptl,
                   page_ids, pvalid, rank)
         body = functools.partial(_slot_step, p, k_max, cmax, n_p, consts)
-        c, (slots, snaps) = jax.lax.scan(body, c, (a, w, cr, tr, v))
-        return c, slots, snaps
+        c, (slots, snaps, meas) = jax.lax.scan(body, c, (a, w, cr, tr, v))
+        return c, slots, snaps, meas
 
     return jax.vmap(one)(carry, addr, is_write, core, tier, valid,
                          dyn_flag, n_pages, budget, threshold, period,
-                         dram_cap, page_target_lines)
+                         dram_cap, page_target_lines, s_warm, s_meas,
+                         s_per)
 
 
 @functools.lru_cache(maxsize=None)
@@ -333,16 +348,22 @@ def run_dynamic_segment(p: cache_mod.CacheParams, k_max: int,
                         count_bound: int, carry, addr, is_write, core,
                         tier, dyn_flag, n_pages, budget, threshold,
                         period, dram_cap, page_target_lines,
+                        s_warm=None, s_meas=None, s_per=None,
                         *, donate: bool = False):
     """One streamed epoch segment (public wrapper; see
     :func:`_run_dynamic_segment_impl`).  ``donate=True`` lets XLA reuse
     the previous carry's buffers on non-CPU backends.
     """
     donate = donate and jax.default_backend() != "cpu"
+    b = jnp.asarray(dyn_flag, jnp.int32).shape[0]
+    z = jnp.zeros((b,), jnp.int32)
+    s_warm = z if s_warm is None else jnp.asarray(s_warm, jnp.int32)
+    s_meas = z if s_meas is None else jnp.asarray(s_meas, jnp.int32)
+    s_per = z if s_per is None else jnp.asarray(s_per, jnp.int32)
     return _dyn_segment_stepper(donate)(
         p, k_max, count_bound, carry, addr, is_write, core, tier,
         dyn_flag, n_pages, budget, threshold, period, dram_cap,
-        page_target_lines)
+        page_target_lines, s_warm, s_meas, s_per)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
@@ -350,24 +371,27 @@ def _run_dynamic(p: cache_mod.CacheParams, k_max: int, count_bound: int,
                  addr: Array, is_write: Array, core: Array, tier: Array,
                  dyn_flag: Array, page_map0: Array, n_pages: Array,
                  budget: Array, threshold: Array, period: Array,
-                 dram_cap: Array, page_target_lines: Array) -> DynOutputs:
+                 dram_cap: Array, page_target_lines: Array,
+                 s_warm: Array, s_meas: Array, s_per: Array
+                 ) -> DynOutputs:
     """The epoch-structured batch program (see :func:`run_dynamic`).
 
     One segment spanning every epoch slot, threaded through the same
     carry the streaming path uses.
     """
     carry = init_dyn_carry(p, page_map0)
-    carry, slots, snaps = _run_dynamic_segment_impl(
+    carry, slots, snaps, meas = _run_dynamic_segment_impl(
         p, k_max, count_bound, carry, addr, is_write, core, tier,
         dyn_flag, n_pages, budget, threshold, period, dram_cap,
-        page_target_lines)
+        page_target_lines, s_warm, s_meas, s_per)
     _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
-    return DynOutputs(stats, pmap_f, mig_rd, mig_wr, slots, snaps)
+    return DynOutputs(stats, pmap_f, mig_rd, mig_wr, slots, snaps, meas)
 
 
 def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
                         k_max: int, dyn_flag, page_map0, n_pages, budget,
-                        threshold, period, dram_cap, page_target_lines):
+                        threshold, period, dram_cap, page_target_lines,
+                        s_warm=None, s_meas=None, s_per=None):
     """Validate + reshape :func:`run_dynamic` inputs to slot-major form.
 
     The shared front half of every dynamic-tiering execution path
@@ -378,9 +402,15 @@ def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
     assembles the per-row scalar tuple in
     :func:`run_dynamic_segment`'s argument order.
 
+    ``s_warm`` / ``s_meas`` / ``s_per`` are the per-row sampled-window
+    scalars in scan-slot units (:func:`repro.core.sampling.
+    scan_scalars`); ``None`` (or all-zero) rows measure every slot —
+    the exact path.
+
     Returns ``(a3, w3, c3, t3, page_map0, scalars, k_max,
     count_bound)`` where ``scalars = (dyn_flag, n_pages, budget,
-    threshold, period, dram_cap, page_target_lines)``.
+    threshold, period, dram_cap, page_target_lines, s_warm, s_meas,
+    s_per)``.
     """
     addr = jnp.asarray(addr, jnp.int32)
     if addr.ndim != 2:
@@ -411,13 +441,17 @@ def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
     w3 = r3(z if is_write is None else is_write)
     c3 = r3(z if core is None else core)
     t3 = r3(z if tier is None else tier)
+    zb = jnp.zeros((b,), jnp.int32)
     scalars = (jnp.asarray(dyn_flag, jnp.int32),
                jnp.asarray(n_pages, jnp.int32),
                jnp.asarray(budget, jnp.int32),
                jnp.asarray(threshold, jnp.int32),
                jnp.asarray(period, jnp.int32),
                jnp.asarray(dram_cap, jnp.int32),
-               jnp.asarray(page_target_lines, jnp.int32))
+               jnp.asarray(page_target_lines, jnp.int32),
+               zb if s_warm is None else jnp.asarray(s_warm, jnp.int32),
+               zb if s_meas is None else jnp.asarray(s_meas, jnp.int32),
+               zb if s_per is None else jnp.asarray(s_per, jnp.int32))
     return (a3, w3, c3, t3, jnp.asarray(page_map0, jnp.int32), scalars,
             k_max, count_bound)
 
@@ -425,7 +459,7 @@ def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
 def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
                 *, slot_len: int, k_max: int, dyn_flag, page_map0,
                 n_pages, budget, threshold, period, dram_cap,
-                page_target_lines,
+                page_target_lines, s_warm=None, s_meas=None, s_per=None,
                 segment_slots: Optional[int] = None) -> DynOutputs:
     """Run a `(B, N)` batch under epoch-based dynamic tiering.
 
@@ -481,7 +515,8 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
             addr, is_write, core, tier, slot_len=slot_len, k_max=k_max,
             dyn_flag=dyn_flag, page_map0=page_map0, n_pages=n_pages,
             budget=budget, threshold=threshold, period=period,
-            dram_cap=dram_cap, page_target_lines=page_target_lines)
+            dram_cap=dram_cap, page_target_lines=page_target_lines,
+            s_warm=s_warm, s_meas=s_meas, s_per=s_per)
     e = a3.shape[1]
     if segment_slots is None:
         return _run_dynamic(p, int(k_max), count_bound, a3, w3, c3, t3,
@@ -489,18 +524,20 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
     if segment_slots < 1:
         raise ValueError(f"segment_slots must be >= 1, got {segment_slots}")
     carry = init_dyn_carry(p, page_map0)
-    slots_parts, snaps_parts = [], []
+    slots_parts, snaps_parts, meas_parts = [], [], []
     for s in range(0, e, segment_slots):
         sl = slice(s, min(s + segment_slots, e))
-        carry, slots, snaps = run_dynamic_segment(
+        carry, slots, snaps, meas = run_dynamic_segment(
             p, int(k_max), count_bound, carry, a3[:, sl], w3[:, sl],
             c3[:, sl], t3[:, sl], *scalars, donate=True)
         slots_parts.append(slots)
         snaps_parts.append(snaps)
+        meas_parts.append(meas)
     _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
     return DynOutputs(stats, pmap_f, mig_rd, mig_wr,
                       jnp.concatenate(slots_parts, axis=1),
-                      jnp.concatenate(snaps_parts, axis=1))
+                      jnp.concatenate(snaps_parts, axis=1),
+                      jnp.concatenate(meas_parts, axis=1))
 
 
 # ---------------------------------------------------------------------------

@@ -93,12 +93,30 @@ def _resilience_rows() -> list:
                                     stream_chunk=512, resume=pol)
 
 
+def _sampling_rows() -> list:
+    """The sampling family: GUPS exact next to SMARTS-sampled (w=1, m=1,
+    p=4) in ONE vmapped program — pinning the point estimates AND the
+    ``*_ci95`` interval columns bitwise (the exact row doubles as a
+    mixed-program legacy-equality fixture)."""
+    from repro.core.sampling import SamplingSpec
+    from repro.workloads import Gups
+    spec = engine.SweepSpec(
+        footprint_factors=(8,), policies=(numa.ZNuma(1.0),), cpus=_CPU,
+        workloads=(Gups(),),
+        sampling=(None, SamplingSpec(warm_slots=1, measure_slots=1,
+                                     period_slots=4)))
+    rows = engine.run_sweep(spec, _CACHE, _TIMING)
+    assert len(rows) == 2
+    return rows
+
+
 GOLDEN_CASES = {
     "engine": _engine_row,
     "topology": _topology_row,
     "workloads": _workloads_row,
     "distribute": _distribute_rows,
     "resilience": _resilience_rows,
+    "sampling": _sampling_rows,
 }
 
 

@@ -49,6 +49,14 @@ def summarize(name: str, d: dict) -> str:
         return (f"{len(d.get('suite', {}).get('workloads', []))} generators "
                 f"one-program, warm {d.get('warm_s')}s; kv parity="
                 f"{d.get('kv_decode_device_bitwise_equals_host_reference')}")
+    if name == "sampling":
+        w = d.get("worst_rel_error", {})
+        return (f"{d.get('suite', {}).get('accesses', 0) / 1e6:.1f}M "
+                f"accesses, {d.get('sampled_frac', 0):.1%} measured in "
+                f"detail ({d.get('sample_windows')} windows); all "
+                f"counters within ci95="
+                f"{d.get('all_counters_within_ci95')}; worst rel error "
+                f"{w.get('counter')}={w.get('rel_error')}")
     if name == "tiering":
         return (f"hot_cold dynamic-vs-static effective-bw win "
                 f"{d.get('hot_cold_effective_bw_win')}x at "
