@@ -38,6 +38,7 @@ documented in docs/engine.md.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import pathlib
 import time
@@ -297,13 +298,30 @@ def engine() -> None:
     bat_rows = run()
     t_warm = time.time() - t0
 
+    # --- pallas backend: same sweep through the MESI kernel (compiled
+    # on TPU hosts; interpret mode on CPU is the parity oracle, so its
+    # throughput is reported but not a speed claim) ---
+    pal_spec = dataclasses.replace(spec, backend="pallas")
+    run_pal = lambda: engine_mod.run_sweep(pal_spec, sim.config.cache,
+                                           sim.config.timing)
+    t0 = time.time()
+    pal_rows = run_pal()
+    t_pal_cold = time.time() - t0
+    t0 = time.time()
+    pal_rows = run_pal()
+    t_pal_warm = time.time() - t0
+    pallas_mode = ("compiled" if jax.default_backend() == "tpu"
+                   else "interpret")
+
     # --- bitwise stats check (sequential vs batched row-by-row) ---
     key = lambda r: (r["footprint_x_l2"], r["policy"], r["cpu"])
-    seq_by, bat_by = ({key(r): r["stats"] for r in rows}
-                      for rows in (seq_rows, bat_rows))
+    seq_by, bat_by, pal_by = ({key(r): r["stats"] for r in rows}
+                              for rows in (seq_rows, bat_rows, pal_rows))
     assert seq_by.keys() == bat_by.keys()
     stats_equal = all(seq_by[k] == bat_by[k] for k in seq_by)
     assert stats_equal, "batched stats diverged from the sequential path"
+    pallas_equal = bat_by == pal_by
+    assert pallas_equal, "pallas stats diverged from the reference path"
 
     # accesses actually simulated: one per (footprint, policy) cell — CPU
     # models share the cell's stats (sequential re-simulates per CPU)
@@ -315,6 +333,7 @@ def engine() -> None:
     seq_rate = n_acc_seq / t_seq / 1e6
     cold_rate = n_acc / t_cold / 1e6
     warm_rate = n_acc / t_warm / 1e6
+    pal_rate = n_acc / t_pal_warm / 1e6
     report = {
         "suite": {"footprint_factors": list(fps),
                   "policies": [numa.describe(p) for p in policies],
@@ -334,6 +353,12 @@ def engine() -> None:
         "batched_cold_maccess_per_s": round(cold_rate, 3),
         "batched_warm_maccess_per_s": round(warm_rate, 3),
         "stats_bitwise_equal": stats_equal,
+        "pallas_cold_s": round(t_pal_cold, 4),
+        "pallas_warm_s": round(t_pal_warm, 4),
+        "pallas_warm_maccess_per_s": round(pal_rate, 3),
+        "pallas_vs_reference_speedup": round(t_warm / t_pal_warm, 2),
+        "pallas_stats_bitwise_equal": pallas_equal,
+        "pallas_mode": pallas_mode,
     }
     out = pathlib.Path(__file__).resolve().parent.parent \
         / "BENCH_engine.json"
@@ -345,10 +370,18 @@ def engine() -> None:
     print(f"speedup: {report['speedup_cold']}x cold/cold / "
           f"{report['speedup_warm']}x warm/warm; bitwise stats equal: "
           f"{stats_equal}  -> {out.name}")
+    print(f"pallas ({pallas_mode}): warm {t_pal_warm:.2f}s "
+          f"({pal_rate:.2f} Macc/s), "
+          f"{report['pallas_vs_reference_speedup']}x vs reference; "
+          f"bitwise stats equal: {pallas_equal}")
     emit("engine_sequential", t_seq * 1e6 / len(seq_rows),
          f"Maccess/s={seq_rate:.2f}")
     emit("engine_batched", t_warm * 1e6 / len(bat_rows),
          f"Maccess/s={warm_rate:.2f};speedup={report['speedup_warm']:.2f}x")
+    emit("engine_pallas", t_pal_warm * 1e6 / len(pal_rows),
+         f"Maccess/s={pal_rate:.2f};"
+         f"vs_ref={report['pallas_vs_reference_speedup']:.2f}x;"
+         f"mode={pallas_mode}")
 
 
 def topology() -> None:
@@ -552,6 +585,22 @@ def tiering() -> None:
     rows = run()
     t_warm = time.time() - t0
 
+    # --- pallas backend: the same epoch-structured grid through the
+    # dynamic MESI kernel (compiled on TPU; interpret-mode parity
+    # oracle on CPU hosts) ---
+    pal_spec = dataclasses.replace(spec, backend="pallas")
+    run_pal = lambda: engine_mod.run_sweep(pal_spec, cache, timing)
+    t0 = time.time()
+    pal_rows = run_pal()
+    t_pal_cold = time.time() - t0
+    t0 = time.time()
+    pal_rows = run_pal()
+    t_pal_warm = time.time() - t0
+    pallas_equal = pal_rows == rows    # dict equality: floats to the bit
+    assert pallas_equal, "pallas tiering rows diverged from reference"
+    pallas_mode = ("compiled" if jax.default_backend() == "tpu"
+                   else "interpret")
+
     def eff_bw(r):
         """Demand bytes (migration excluded) over the converged runtime."""
         s = r["stats"]
@@ -587,6 +636,11 @@ def tiering() -> None:
                   "rows": len(rows), "one_device_program": True},
         "cold_s": round(t_cold, 4),
         "warm_s": round(t_warm, 4),
+        "pallas_cold_s": round(t_pal_cold, 4),
+        "pallas_warm_s": round(t_pal_warm, 4),
+        "pallas_vs_reference_speedup": round(t_warm / t_pal_warm, 3),
+        "pallas_rows_bitwise_equal": pallas_equal,
+        "pallas_mode": pallas_mode,
         "hot_cold_effective_bw_win": round(win, 3),
         "hot_cold_speedup": round(static["time_ns"] / dyn["time_ns"], 3),
         "hot_cold_migration_gbps": round(dyn["migration_gbps"], 3),
@@ -602,8 +656,14 @@ def tiering() -> None:
           f"bandwidth ({static['time_ns']/dyn['time_ns']:.2f}x faster) "
           f"while moving {dyn['migrated_pages']} pages at "
           f"{dyn['migration_gbps']:.2f} GB/s -> {out.name}")
+    print(f"pallas ({pallas_mode}): warm {t_pal_warm:.2f}s, "
+          f"{report['pallas_vs_reference_speedup']}x vs reference; "
+          f"rows bitwise equal: {pallas_equal}")
     emit("tiering_sweep", t_warm * 1e6 / len(rows),
          f"eff_bw_win={win:.2f}x;mig_gbps={dyn['migration_gbps']:.2f}")
+    emit("tiering_pallas", t_pal_warm * 1e6 / len(pal_rows),
+         f"vs_ref={report['pallas_vs_reference_speedup']:.2f}x;"
+         f"mode={pallas_mode}")
 
 
 def distribute() -> None:

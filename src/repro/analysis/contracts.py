@@ -16,7 +16,9 @@ contracts are checked directly:
   scan, the packed engine path, and the Pallas kernel must produce
   bitwise-identical stats of width ``nstats`` on one tiny trace
   (triangulation — a scratch-layout drift in any one backend breaks the
-  equality).
+  equality); the carry-exposing twins (``mesi_segment`` via
+  ``run_batch_segment[pallas]`` and the ``mesi_dyn_segment`` epoch
+  kernel via ``run_dynamic[pallas]``) are triangulated the same way.
 
 Entry points are registered in :data:`ENTRY_POINTS`; adding a new
 parity-critical device program to the engine means adding one line
@@ -136,6 +138,55 @@ def _trace_run_dynamic_sampling():
     return trace_entry(entry, addr[None], is_write[None], core[None], tier[None])
 
 
+def _trace_run_segment_pallas():
+    from repro.core import engine
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace()
+    carry = engine.init_batch_carry(p, 1)
+
+    def entry(c, a, w, co, t):
+        return engine.run_batch_segment(p, c, a, w, co, t,
+                                        backend="pallas", chunk=8)
+
+    return trace_entry(entry, carry, addr[None], is_write[None],
+                       core[None], tier[None])
+
+
+def _trace_run_dynamic_pallas():
+    from repro.core import tiering_dyn
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace(n=8)
+    scalars = _tiny_dyn_scalars()
+
+    def entry(a, w, c, t):
+        return tiering_dyn.run_dynamic(p, a, w, c, t, slot_len=4,
+                                       k_max=1, backend="pallas",
+                                       **scalars)
+
+    return trace_entry(entry, addr[None], is_write[None], core[None],
+                       tier[None])
+
+
+def _tiny_dyn_scalars():
+    """One dynamic-tiering row's host-side scalars (shared by the
+    reference and pallas dynamic entry points and the RA404 dyn
+    triangulation).  ``page_target_lines`` uses the documented
+    (B, P, T) shape — the dyn kernel's BlockSpec enforces it."""
+    n_t = _tiny_params().n_targets
+    return dict(
+        dyn_flag=np.asarray([1], np.int32),
+        page_map0=np.zeros((1, 2), np.int32),
+        n_pages=np.asarray([2], np.int32),
+        budget=np.asarray([1], np.int32),
+        threshold=np.asarray([1], np.int32),
+        period=np.asarray([1], np.int32),
+        dram_cap=np.asarray([2], np.int32),
+        page_target_lines=np.ones((1, 2, n_t), np.int32),
+    )
+
+
 def _workload_entries() -> List[Tuple[str, Callable, bool]]:
     from repro import workloads
 
@@ -164,6 +215,8 @@ def entry_points() -> List[Tuple[str, Callable, bool]]:
         ("run_traces[reference]", _trace_run_traces_reference, False),
         ("run_dynamic", _trace_run_dynamic, False),
         ("run_dynamic[sampling]", _trace_run_dynamic_sampling, False),
+        ("run_batch_segment[pallas]", _trace_run_segment_pallas, False),
+        ("run_dynamic[pallas]", _trace_run_dynamic_pallas, False),
     ]
     return static + _workload_entries()
 
@@ -334,6 +387,42 @@ def check_stat_layout() -> List[Finding]:
             "and Pallas kernel disagree on the tiny trace — the three "
             "backends no longer share one stats layout"
         )
+    # Triangulate the carry-exposing segment kernel too: the same tiny
+    # trace split into two pallas-stepped segments must land on the
+    # identical stats (the carry IS the contract checkpoint/resume and
+    # streaming replay).
+    n = int(addr.shape[0])
+    carry = engine.init_batch_carry(p, 1)
+    for lo, hi in ((0, n // 2), (n // 2, n)):
+        carry = engine.run_batch_segment(
+            p, carry, addr[None, lo:hi], is_write[None, lo:hi],
+            core[None, lo:hi], tier[None, lo:hi], backend="pallas",
+            chunk=8)
+    seg = np.asarray(carry[2], np.int64)[0]
+    if not np.array_equal(seg, a):
+        fail(
+            "segment-carry triangulation failed: two pallas "
+            "run_batch_segment steps disagree with the reference scan "
+            "on the tiny trace — the kernel's carry has drifted from "
+            "the engine's"
+        )
+    # And the dynamic (epoch-carry) kernel: one dynamic-tiering row,
+    # reference vs pallas, every DynOutputs field bitwise.
+    from repro.core import tiering_dyn
+    dyn_args = (addr[None], is_write[None], core[None], tier[None])
+    d_ref = tiering_dyn.run_dynamic(p, *dyn_args, slot_len=4, k_max=1,
+                                    **_tiny_dyn_scalars())
+    d_pal = tiering_dyn.run_dynamic(p, *dyn_args, slot_len=4, k_max=1,
+                                    backend="pallas",
+                                    **_tiny_dyn_scalars())
+    for f in d_ref._fields:
+        if not np.array_equal(np.asarray(getattr(d_ref, f)),
+                              np.asarray(getattr(d_pal, f))):
+            fail(
+                f"dynamic-kernel triangulation failed on `{f}`: the "
+                f"pallas epoch-carry kernel disagrees with the "
+                f"reference dynamic scan on the tiny trace"
+            )
     if not jnp.issubdtype(np.asarray(ref).dtype, np.integer):
         fail(f"simulate_trace stats dtype {np.asarray(ref).dtype} is not integer")
     return findings

@@ -236,6 +236,8 @@ def stream_traces(p: cache_mod.CacheParams,
                   source: Iterable[Tuple], *,
                   checkpoint=None,
                   report: Optional[RunReport] = None,
+                  backend: str = "reference",
+                  chunk: int = 512,
                   ) -> Tuple[Array, cache_mod.CacheState]:
     """Consume a trace as a stream of fixed-size segments, bounded memory.
 
@@ -261,6 +263,13 @@ def stream_traces(p: cache_mod.CacheParams,
         call and produces bitwise-identical results (test-enforced).
     report : RunReport, optional
         Event sink for ``resume`` / ``checkpoint`` records.
+    backend : {"reference", "pallas"}
+        Segment stepper: the vmapped reference scan or the Pallas
+        segment kernel — both thread the same ``(l1p, l2p, stats, t)``
+        carry and are bitwise-equal (test-enforced).
+    chunk : int
+        Pallas kernel inner chunk length (ignored by the reference
+        backend).
 
     Returns
     -------
@@ -294,7 +303,8 @@ def stream_traces(p: cache_mod.CacheParams,
         fields = [z if (len(seg) <= i or seg[i] is None)
                   else jnp.asarray(seg[i], jnp.int32) for i in (1, 2, 3)]
         carry = engine.run_batch_segment(p, carry, addr, *fields,
-                                         donate=True)
+                                         donate=True, backend=backend,
+                                         chunk=chunk)
         if ckpt is not None and idx % policy.every_segments == 0:
             ckpt.save(0, idx, {"carry": resilience.host_tree(carry)},
                       report=report)
@@ -391,11 +401,13 @@ class ShardedExecutor:
         return stats[:b].astype(np.int64)
 
     def _run_static_fallback(self, p, batch, *, backend, chunk):
-        """Non-reference backends: per-shard `run_traces` dispatches
-        (async; the Pallas kernel streams its own chunks internally)."""
-        if self.stream_chunk is not None:
-            raise NotImplementedError(
-                "stream_chunk requires the reference backend")
+        """Non-reference backends: per-shard `run_traces` dispatches.
+
+        ``stream_chunk`` routes each shard through the kernel's segment
+        path (``run_traces(segment=...)`` threads the packed carry
+        between fixed-size segments), so bounded-memory streaming works
+        identically on every backend — bitwise-equal to the resident
+        run (test-enforced)."""
         mesh = self.mesh or Mesh(n_shards=1)
         b = batch.batch
         n_shards = mesh.shard_count(b)
@@ -414,7 +426,8 @@ class ShardedExecutor:
             args = [jax.device_put(a[rows], dev)
                     for a in (addr, *others)]
             stats, _ = engine.run_traces(p, *args, backend=backend,
-                                         chunk=chunk)
+                                         chunk=chunk,
+                                         segment=self.stream_chunk)
             outs.append(stats)
         jax.block_until_ready(outs)
         stats = np.concatenate([np.asarray(o) for o in outs], axis=0)
@@ -422,7 +435,8 @@ class ShardedExecutor:
 
     # -- dynamic (epoch-structured) rows -----------------------------------
     def run_dynamic(self, p: cache_mod.CacheParams, tb,
-                    *, slot_len: int, k_max: int):
+                    *, slot_len: int, k_max: int,
+                    backend: str = "reference"):
         """Shard the epoch program row-wise; stream whole epoch slots.
 
         Padding rows are inert static rows (all-sentinel trace, zero
@@ -481,7 +495,7 @@ class ShardedExecutor:
                     for a in (addr, *others)]
             out = tiering_dyn.run_dynamic(
                 p, *args, slot_len=slot_len, k_max=k_max,
-                segment_slots=seg_slots,
+                segment_slots=seg_slots, backend=backend,
                 **{k: jax.device_put(v[rows], dev)
                    for k, v in scal.items()})
             outs.append(out)
@@ -524,8 +538,12 @@ class ResilientExecutor:
     Shards run sequentially per dispatch (recovery needs per-shard
     carries), which changes *strategy*, never *results* — rows are
     simulated independently and the per-access arithmetic is exactly
-    the engine's segment step.  Requires the reference backend (the
-    Pallas kernel exposes no resumable carry).
+    the engine's segment step.  Both backends work: the Pallas segment
+    kernel threads the same carry the reference scan does, so
+    checkpoint/resume replays it bitwise-identically (test-enforced).
+    With no checkpoint and no fault plan the static path falls through
+    to plain sharded dispatch — the recovery scaffolding costs nothing
+    when there is nothing to recover.
 
     Every recovery action lands in :attr:`report`
     (:class:`~repro.core.resilience.RunReport`); injected failures come
@@ -676,11 +694,14 @@ class ResilientExecutor:
     # -- static (flat-scan) rows -------------------------------------------
     def run_static(self, p: cache_mod.CacheParams, batch: TraceBatch,
                    *, backend: str, chunk: int) -> np.ndarray:
-        if backend != "reference":
-            raise NotImplementedError(
-                "ResilientExecutor requires the reference backend — "
-                "recovery replays the engine's segment carry, which the "
-                "Pallas kernel does not expose")
+        if (backend != "reference" and self.checkpoint is None
+                and self.fault_plan is None):
+            # nothing to checkpoint, nothing to inject: plain sharded
+            # dispatch (bitwise-equal — the carry loop below would only
+            # add per-segment host round-trips)
+            return ShardedExecutor(
+                mesh=self.mesh, stream_chunk=self.stream_chunk
+            ).run_static(p, batch, backend=backend, chunk=chunk)
         addr = jnp.asarray(batch.addr, jnp.int32)
         b, n = addr.shape
         z = jnp.zeros((b, n), jnp.int32)
@@ -721,7 +742,8 @@ class ResilientExecutor:
                 args = [jax.device_put(a[:, s0 + lo:s0 + hi], dev)
                         for a in sh]
                 return engine.run_batch_segment(
-                    p, jax.device_put(c, dev), *args, donate=False)
+                    p, jax.device_put(c, dev), *args, donate=False,
+                    backend=backend, chunk=chunk)
 
             for si in range(start, n_segments):
                 carry = self._run_segment_degraded(
@@ -742,7 +764,8 @@ class ResilientExecutor:
 
     # -- dynamic (epoch-structured) rows -----------------------------------
     def run_dynamic(self, p: cache_mod.CacheParams, tb,
-                    *, slot_len: int, k_max: int):
+                    *, slot_len: int, k_max: int,
+                    backend: str = "reference"):
         batch = tb.batch
         b = batch.batch
         mesh, devices, fleet = self._fleet_devices()
@@ -817,7 +840,7 @@ class ResilientExecutor:
                         for a in xs]
                 c, slots, snaps, meas = tiering_dyn.run_dynamic_segment(
                     p, k_max, count_bound, jax.device_put(c, dev),
-                    *args, *sc, donate=False)
+                    *args, *sc, donate=False, backend=backend)
                 sl = slice(s0 + lo, s0 + hi)
                 acc["slots"][:, sl] = np.asarray(slots)
                 acc["snaps"][:, sl] = np.asarray(snaps)

@@ -34,8 +34,14 @@ Backends
 ``pallas``
     :func:`repro.kernels.ops.mesi_cache_sim` — the full two-level MESI +
     tier state machine with VMEM-resident tags, a (batch, chunks) grid and
-    chunked HBM->VMEM trace streaming.  Compiled on TPU backends;
-    interpret mode elsewhere (validation only — keep geometries small).
+    chunked HBM->VMEM trace streaming.  First-class across the whole sweep
+    matrix: the carry-exposing segment kernels
+    (:func:`repro.kernels.ops.mesi_run_segment`,
+    :func:`repro.kernels.ops.mesi_dyn_segment`) drive dynamic tiering,
+    sampling, segmented streaming, sharding and checkpoint/resume with
+    bitwise parity to the reference (test-enforced by
+    tests/test_backend_parity.py).  Compiled on TPU backends; interpret
+    mode elsewhere (parity validation — keep geometries small).
 """
 from __future__ import annotations
 
@@ -350,7 +356,8 @@ def _segment_stepper(donate: bool):
 
 
 def run_batch_segment(p: cache_mod.CacheParams, carry, addr, is_write,
-                      core, tier, *, donate: bool = False):
+                      core, tier, *, donate: bool = False,
+                      backend: str = "reference", chunk: int = 512):
     """One streamed segment: `(carry, (B, n_seg) slice) -> carry`.
 
     Parameters
@@ -365,12 +372,25 @@ def run_batch_segment(p: cache_mod.CacheParams, carry, addr, is_write,
     donate : bool
         Donate the carry buffers to the call (streaming loops off-CPU);
         the caller must not reuse the donated carry afterwards.
+    backend : str
+        'reference' (vmapped scan segment) or 'pallas'
+        (:func:`repro.kernels.ops.mesi_run_segment`).  Both thread the
+        identical carry, so segments may alternate backends freely with
+        bitwise-equal results (test-enforced).
+    chunk : int
+        Trace elements per Pallas grid step (pallas backend only).
 
     Returns
     -------
     tuple
         The advanced carry; `carry[2]` is the running (B, nstats) stats.
     """
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.mesi_run_segment(carry, addr, is_write, core, tier,
+                                    params=p, chunk=chunk)
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
     donate = donate and jax.default_backend() != "cpu"
     return _segment_stepper(donate)(p, carry, addr, is_write, core, tier)
 
@@ -406,9 +426,10 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
       chunk: trace elements per Pallas grid step.
       segment: stream the trace through the scan carry in (B, segment)
         slices — one device call per slice instead of one program over
-        the whole length (reference backend only).  The trace is
-        sentinel-padded up to a multiple; stats and final state are
-        bitwise-equal to the resident path (test-enforced).
+        the whole length (either backend; the pallas kernel advances the
+        same carry via :func:`repro.kernels.ops.mesi_run_segment`).  The
+        trace is sentinel-padded up to a multiple; stats and final state
+        are bitwise-equal to the resident path (test-enforced).
 
     Returns: (stats (B, nstats(p.n_targets)) int32, batched CacheState).
     """
@@ -416,17 +437,16 @@ def run_traces(p: cache_mod.CacheParams, addr, is_write,
     if addr.ndim != 2:
         raise ValueError("run_traces expects a (B, N) batch; "
                          "use addr[None] for a single trace")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from {BACKENDS}")
     z = jnp.zeros(addr.shape, jnp.int32)
     is_write = z if is_write is None else jnp.asarray(is_write, jnp.int32)
     core = z if core is None else jnp.asarray(core, jnp.int32)
     tier = z if tier is None else jnp.asarray(tier, jnp.int32)
     if segment is not None:
-        if backend != "reference":
-            raise NotImplementedError(
-                "segmented streaming runs on the reference backend only "
-                "(the Pallas kernel already streams chunks internally)")
         return _run_traces_segmented(p, addr, is_write, core, tier,
-                                     segment=segment)
+                                     segment=segment, backend=backend,
+                                     chunk=chunk)
     if backend == "reference":
         return _run_batch_reference(p, addr, is_write, core, tier)
     if backend == "pallas":
@@ -447,7 +467,8 @@ def _pad_to_segment(x: Array, n_to: int, fill: int) -> Array:
 
 def _run_traces_segmented(p: cache_mod.CacheParams, addr: Array,
                           is_write: Array, core: Array, tier: Array,
-                          *, segment: int
+                          *, segment: int, backend: str = "reference",
+                          chunk: int = 512
                           ) -> Tuple[Array, cache_mod.CacheState]:
     """Host loop threading the scan carry through fixed-size segments.
 
@@ -455,7 +476,9 @@ def _run_traces_segmented(p: cache_mod.CacheParams, addr: Array,
     cache state + stats) persists between calls, so peak device memory is
     bounded by one segment regardless of N.  Sentinel padding rounds the
     length up to a segment multiple (padding is inert, so stats stay
-    bitwise-equal to the resident program).
+    bitwise-equal to the resident program).  Both backends advance the
+    identical carry (:func:`run_batch_segment`), so the streamed pallas
+    kernel is bitwise-equal to the streamed — and resident — reference.
     """
     if segment < 1:
         raise ValueError(f"segment must be >= 1, got {segment}")
@@ -470,7 +493,8 @@ def _run_traces_segmented(p: cache_mod.CacheParams, addr: Array,
     for s in range(0, n_pad, segment):
         carry = run_batch_segment(
             p, carry, addr[:, s:s + segment], is_write[:, s:s + segment],
-            core[:, s:s + segment], tier[:, s:s + segment], donate=True)
+            core[:, s:s + segment], tier[:, s:s + segment], donate=True,
+            backend=backend, chunk=chunk)
     l1p, l2p, stats, _ = carry
     return stats, cache_mod.unpack_state(l1p, l2p)
 
@@ -602,7 +626,8 @@ class LocalExecutor:
         return np.asarray(jax.block_until_ready(stats), np.int64)
 
     def run_dynamic(self, p: cache_mod.CacheParams, tb: "TieringBatch",
-                    *, slot_len: int, k_max: int):
+                    *, slot_len: int, k_max: int,
+                    backend: str = "reference"):
         """Run the epoch-structured batch; return `DynOutputs`."""
         return tiering_dyn.run_dynamic(
             p, tb.batch.addr, tb.batch.is_write, tb.batch.core,
@@ -611,7 +636,8 @@ class LocalExecutor:
             n_pages=tb.n_pages, budget=tb.budget, threshold=tb.threshold,
             period=tb.period, dram_cap=tb.dram_cap,
             page_target_lines=tb.page_target_lines,
-            s_warm=tb.s_warm, s_meas=tb.s_meas, s_per=tb.s_per)
+            s_warm=tb.s_warm, s_meas=tb.s_meas, s_per=tb.s_per,
+            backend=backend)
 
 
 _LOCAL_EXECUTOR = LocalExecutor()
@@ -948,10 +974,6 @@ def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
     deltas) before the timing fixed point and carry per-counter 95%
     confidence intervals.
     """
-    if spec.backend != "reference":
-        raise NotImplementedError(
-            "dynamic tiering runs on the reference backend only "
-            "(the Pallas kernel has no page-map scan state yet)")
     t_max = max(2 if r is None else r.n_targets for r in routes)
     p = dataclasses.replace(cache, n_targets=t_max)
     dyn = [tr for tr in spec.tiering_axis if tr is not None]
@@ -972,7 +994,8 @@ def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
                 f"epoch_len {tr.epoch_len} is not a multiple of the "
                 f"sweep's epoch gcd {slot}")
     tb = build_tiering_batch(spec, cache, routes, slot, t_max)
-    out = executor.run_dynamic(p, tb, slot_len=slot, k_max=k_max)
+    out = executor.run_dynamic(p, tb, slot_len=slot, k_max=k_max,
+                               backend=spec.backend)
     stats = np.asarray(jax.block_until_ready(out.stats), np.int64)
     mig = np.stack([np.asarray(out.mig_read, np.int64),
                     np.asarray(out.mig_write, np.int64)], axis=1)

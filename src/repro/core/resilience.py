@@ -12,7 +12,10 @@ because every recovery action is expressed in terms the engine already
 proved bitwise-neutral — segment boundaries move (OOM degradation
 sub-splits a segment), segments re-run from an exact carry (retry), or
 the carry is reloaded from disk (resume) — never in terms that touch
-the per-access arithmetic.
+the per-access arithmetic.  The carry is backend-agnostic: the Pallas
+segment kernels expose the same ``(l1p, l2p, stats, t)`` / epoch-carry
+tuples as the reference scan, so a checkpoint written under one backend
+resumes under the other (test-enforced).
 
 The pieces
 ----------

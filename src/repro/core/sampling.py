@@ -14,7 +14,9 @@ engine (:mod:`repro.core.engine`):
     accumulation outside measurement windows while the cache/tier state
     machine runs full fidelity on every access (functional warming), so
     a measured window's counters are **bitwise-equal** to the same
-    window of an exact run (test-enforced);
+    window of an exact run (test-enforced) — on either engine backend:
+    the Pallas epoch kernel applies the identical stat-masking multiply
+    per access (``tests/test_backend_parity.py``);
   * :func:`estimate` scales the measured windows to whole-trace
     estimates with CLT confidence intervals: per-window per-access
     rates are the i.i.d.-ish samples, the point estimate is ``total

@@ -349,17 +349,33 @@ def run_dynamic_segment(p: cache_mod.CacheParams, k_max: int,
                         tier, dyn_flag, n_pages, budget, threshold,
                         period, dram_cap, page_target_lines,
                         s_warm=None, s_meas=None, s_per=None,
-                        *, donate: bool = False):
+                        *, donate: bool = False,
+                        backend: str = "reference"):
     """One streamed epoch segment (public wrapper; see
     :func:`_run_dynamic_segment_impl`).  ``donate=True`` lets XLA reuse
     the previous carry's buffers on non-CPU backends.
+
+    ``backend='pallas'`` dispatches to the epoch-structured kernel
+    (:func:`repro.kernels.ops.mesi_dyn_segment`); both backends advance
+    the identical 9-tuple carry and return bitwise-equal per-slot
+    outputs, so segments may alternate backends freely (test-enforced).
     """
-    donate = donate and jax.default_backend() != "cpu"
     b = jnp.asarray(dyn_flag, jnp.int32).shape[0]
     z = jnp.zeros((b,), jnp.int32)
     s_warm = z if s_warm is None else jnp.asarray(s_warm, jnp.int32)
     s_meas = z if s_meas is None else jnp.asarray(s_meas, jnp.int32)
     s_per = z if s_per is None else jnp.asarray(s_per, jnp.int32)
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.mesi_dyn_segment(
+            carry, addr, is_write, core, tier, dyn_flag, n_pages, budget,
+            threshold, period, dram_cap, page_target_lines, s_warm,
+            s_meas, s_per, params=p, k_max=int(k_max),
+            count_bound=int(count_bound))
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "pick from ('reference', 'pallas')")
+    donate = donate and jax.default_backend() != "cpu"
     return _dyn_segment_stepper(donate)(
         p, k_max, count_bound, carry, addr, is_write, core, tier,
         dyn_flag, n_pages, budget, threshold, period, dram_cap,
@@ -460,7 +476,8 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
                 *, slot_len: int, k_max: int, dyn_flag, page_map0,
                 n_pages, budget, threshold, period, dram_cap,
                 page_target_lines, s_warm=None, s_meas=None, s_per=None,
-                segment_slots: Optional[int] = None) -> DynOutputs:
+                segment_slots: Optional[int] = None,
+                backend: str = "reference") -> DynOutputs:
     """Run a `(B, N)` batch under epoch-based dynamic tiering.
 
     One jitted device program: an outer ``lax.scan`` over ``N //
@@ -502,6 +519,10 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
         between calls, so only one segment's trace is scanned per
         program.  Outputs are bitwise-equal to the resident scan
         (test-enforced).
+    backend : str
+        'reference' (vmapped epoch scan) or 'pallas'
+        (:func:`repro.kernels.ops.mesi_dyn_segment`, the epoch-
+        structured kernel) — bitwise-equal outputs (test-enforced).
 
     Returns
     -------
@@ -518,9 +539,11 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
             dram_cap=dram_cap, page_target_lines=page_target_lines,
             s_warm=s_warm, s_meas=s_meas, s_per=s_per)
     e = a3.shape[1]
-    if segment_slots is None:
+    if segment_slots is None and backend == "reference":
         return _run_dynamic(p, int(k_max), count_bound, a3, w3, c3, t3,
                             scalars[0], page_map0, *scalars[1:])
+    if segment_slots is None:
+        segment_slots = e   # pallas: one kernel launch spans every slot
     if segment_slots < 1:
         raise ValueError(f"segment_slots must be >= 1, got {segment_slots}")
     carry = init_dyn_carry(p, page_map0)
@@ -529,7 +552,7 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
         sl = slice(s, min(s + segment_slots, e))
         carry, slots, snaps, meas = run_dynamic_segment(
             p, int(k_max), count_bound, carry, a3[:, sl], w3[:, sl],
-            c3[:, sl], t3[:, sl], *scalars, donate=True)
+            c3[:, sl], t3[:, sl], *scalars, donate=True, backend=backend)
         slots_parts.append(slots)
         snaps_parts.append(snaps)
         meas_parts.append(meas)

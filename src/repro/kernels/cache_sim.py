@@ -59,6 +59,8 @@ from repro.core.cache import (
     I, S, E, M, SENTINEL, CacheParams, CacheState,
     coherence_base, mem_write_base, nstats,
 )
+from repro.core.numa import LINES_PER_PAGE
+from repro.core.tiering_dyn import encode_hot_key
 
 Array = jax.Array
 
@@ -171,6 +173,146 @@ def cache_sim(addr: Array, *, n_sets: int, n_ways: int,
 # ---------------------------------------------------------------------------
 # Full two-level MESI + tier kernel (batched engine backend)
 # ---------------------------------------------------------------------------
+def _mesi_access(l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                 a_raw, w_i, c, tr, t, stat_gate, *, cores: int,
+                 l1_sets: int, l2_sets: int, n_targets: int):
+    """One MESI access against the VMEM-resident scratch state.
+
+    The shared per-access body of every MESI kernel in this module.  L1
+    state is flattened to (cores * l1_sets, l1_ways) so every row access
+    is a 2-D dynamic-slice; the per-core directory probes unroll over the
+    (static, small) `cores` dimension.  The update sequence mirrors
+    `repro.core.cache._step` operation-for-operation, so stats and final
+    state are bitwise-identical to the scan reference.
+
+    ``stat_gate`` multiplies every stat increment (1 = measure, 0 =
+    functional warming: the state machine still runs full fidelity, only
+    the counters freeze) — the sampled-slot masking contract of
+    :mod:`repro.core.sampling`; state writes are gated only on trace
+    validity, exactly like the reference.
+    """
+    w = w_i != 0
+    valid = a_raw >= 0                    # sentinel padding gate
+    vi = valid.astype(jnp.int32) * stat_gate
+    a = jnp.where(valid, a_raw, 0)
+    core_ids = jnp.arange(cores, dtype=jnp.int32)
+    mem_write = mem_write_base(n_targets)
+    upgrades, invalidations, back_invalidations, writebacks_l1 = (
+        coherence_base(n_targets) + k for k in range(4))
+
+    def bump(idx, amount):
+        stats[idx] = stats[idx] + amount.astype(jnp.int32) * vi
+
+    # ---------------- L1 lookup ----------------
+    set1 = a & (l1_sets - 1)
+    r1 = c * l1_sets + set1
+    row_t = l1t[r1, :]                    # (l1_ways,) lanes
+    row_s = l1s[r1, :]
+    row_u = l1u[r1, :]
+    hits = (row_t == a) & (row_s != I)
+    l1_hit = hits.any()
+    way1 = jnp.where(l1_hit, jnp.argmax(hits),
+                     jnp.argmin(row_u)).astype(jnp.int32)
+    cur_state = row_s[way1]
+    needs_upgrade = l1_hit & w & (cur_state == S)
+
+    # directory-equivalent probe: all cores' copies of this line
+    copies_s = jnp.stack([l1s[k * l1_sets + set1, :]
+                          for k in range(cores)])       # (cores, ways)
+    copies_t = jnp.stack([l1t[k * l1_sets + set1, :]
+                          for k in range(cores)])
+    copies = (copies_t == a) & (copies_s != I)
+    other = copies & (core_ids[:, None] != c)
+    n_other = other.sum()
+
+    bump(L1_HIT, l1_hit)
+    bump(L1_MISS, ~l1_hit)
+    bump(upgrades, needs_upgrade)
+    bump(invalidations, jnp.where(w, n_other, 0))
+
+    # invalidate other copies on any write (upgrade or RFO fill)
+    inval = other & w & valid
+    for k in range(cores):
+        l1s[k * l1_sets + set1, :] = jnp.where(inval[k], I, copies_s[k])
+
+    # ---------------- L1 victim writeback (on miss) ----------------
+    evict_valid = (~l1_hit) & (cur_state != I)
+    evict_tag = row_t[way1]
+    evict_dirty = evict_valid & (cur_state == M)
+    eset2 = evict_tag & (l2_sets - 1)
+    erow = l2t[eset2, :]
+    ehits = erow == evict_tag
+    ehit = ehits.any()
+    eway = jnp.where(ehit, jnp.argmax(ehits),
+                     jnp.argmin(l2u[eset2, :])).astype(jnp.int32)
+    # inclusive L2: mark dirty there on dirty eviction, drop the sharer
+    l2s[eset2, eway] = jnp.where(evict_dirty & ehit & valid,
+                                 M, l2s[eset2, eway])
+    l2sh[eset2, eway] = jnp.where(
+        evict_valid & ehit & valid,
+        l2sh[eset2, eway] & ~(jnp.int32(1) << c), l2sh[eset2, eway])
+    bump(writebacks_l1, evict_dirty)
+
+    # ---------------- L2 lookup (only meaningful on L1 miss) --------
+    set2 = a & (l2_sets - 1)
+    row2 = l2t[set2, :]
+    hits2 = row2 == a
+    l2_hit_raw = hits2.any()
+    way2 = jnp.where(l2_hit_raw, jnp.argmax(hits2),
+                     jnp.argmin(l2u[set2, :])).astype(jnp.int32)
+    l2_hit = l2_hit_raw & (~l1_hit)
+    l2_miss = (~l2_hit_raw) & (~l1_hit)
+    bump(L2_HIT, l2_hit)
+    bump(L2_MISS, l2_miss)
+
+    # ---- L2 victim handling on fill: back-invalidate + writeback ----
+    v_tag = l2t[set2, way2]
+    v_state = l2s[set2, way2]
+    v_tier = l2tier[set2, way2]
+    v_valid = l2_miss & (v_state != I) & (v_tag != a)
+    vset1 = v_tag & (l1_sets - 1)
+    vc_s = jnp.stack([l1s[k * l1_sets + vset1, :]
+                      for k in range(cores)])
+    vc_t = jnp.stack([l1t[k * l1_sets + vset1, :]
+                      for k in range(cores)])
+    v_copies = (vc_t == v_tag) & (vc_s != I)
+    v_l1_dirty = (v_copies & (vc_s == M)).any()
+    for k in range(cores):
+        l1s[k * l1_sets + vset1, :] = jnp.where(
+            v_copies[k] & v_valid & valid, I, vc_s[k])
+    bump(back_invalidations, jnp.where(v_valid, v_copies.sum(), 0))
+    v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
+    # per-target attribution unrolls over the (static) target count
+    for tgt in range(n_targets):
+        bump(mem_write + tgt, v_dirty & (v_tier == tgt))
+
+    # ---- memory read on L2 miss ----
+    for tgt in range(n_targets):
+        bump(MEM_READ + tgt, l2_miss & (tr == tgt))
+
+    # ---- install / update line in L2 ----
+    fill2 = l2_miss & valid
+    touch2 = (l2_hit | l2_miss) & valid
+    l2t[set2, way2] = jnp.where(fill2, a, l2t[set2, way2])
+    l2tier[set2, way2] = jnp.where(fill2, tr, l2tier[set2, way2])
+    l2s[set2, way2] = jnp.where(fill2, E, l2s[set2, way2])
+    l2u[set2, way2] = jnp.where(touch2, t, l2u[set2, way2])
+    me = jnp.int32(1) << c
+    l2sh[set2, way2] = jnp.where(
+        fill2, me,
+        jnp.where(l2_hit & valid, l2sh[set2, way2] | me,
+                  l2sh[set2, way2]))
+
+    # ---------------- install / update line in L1 ----------------
+    sole = n_other == 0
+    fill_state = jnp.where(w, M, jnp.where(sole, E, S)).astype(jnp.int32)
+    hit_state = jnp.where(w, M, cur_state).astype(jnp.int32)
+    new_state = jnp.where(l1_hit, hit_state, fill_state)
+    l1t[r1, way1] = jnp.where(valid, a, l1t[r1, way1])
+    l1s[r1, way1] = jnp.where(valid, new_state, l1s[r1, way1])
+    l1u[r1, way1] = jnp.where(valid, t, l1u[r1, way1])
+
+
 def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
                  stats_ref, l1t_ref, l1u_ref, l1s_ref,
                  l2t_ref, l2u_ref, l2s_ref, l2tier_ref, l2sh_ref,
@@ -180,11 +322,8 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
                  n_targets: int):
     """One (batch-row, chunk) grid step of the two-level MESI state machine.
 
-    L1 state is flattened to (cores * l1_sets, l1_ways) so every row access
-    is a 2-D dynamic-slice; the per-core directory probes unroll over the
-    (static, small) `cores` dimension.  The update sequence mirrors
-    `repro.core.cache._step` operation-for-operation, so stats and final
-    state are bitwise-identical to the scan reference.
+    The per-access body is the shared :func:`_mesi_access`; this kernel
+    owns the fresh-state initialization and the end-of-row publish.
     """
     j = pl.program_id(1)
 
@@ -202,132 +341,13 @@ def _mesi_kernel(addr_ref, w_ref, core_ref, tier_ref,
         stats[...] = jnp.zeros((nstats(n_targets),), jnp.int32)
 
     base_t = j * chunk + 1
-    core_ids = jnp.arange(cores, dtype=jnp.int32)
-    mem_write = mem_write_base(n_targets)
-    upgrades, invalidations, back_invalidations, writebacks_l1 = (
-        coherence_base(n_targets) + k for k in range(4))
 
     def body(i, carry):
-        a_raw = addr_ref[0, i]
-        w = w_ref[0, i] != 0
-        c = core_ref[0, i]
-        tr = tier_ref[0, i]
-        valid = a_raw >= 0                    # sentinel padding gate
-        vi = valid.astype(jnp.int32)
-        a = jnp.where(valid, a_raw, 0)
-        t = base_t + i
-
-        def bump(idx, amount):
-            stats[idx] = stats[idx] + amount.astype(jnp.int32) * vi
-
-        # ---------------- L1 lookup ----------------
-        set1 = a & (l1_sets - 1)
-        r1 = c * l1_sets + set1
-        row_t = l1t[r1, :]                    # (l1_ways,) lanes
-        row_s = l1s[r1, :]
-        row_u = l1u[r1, :]
-        hits = (row_t == a) & (row_s != I)
-        l1_hit = hits.any()
-        way1 = jnp.where(l1_hit, jnp.argmax(hits),
-                         jnp.argmin(row_u)).astype(jnp.int32)
-        cur_state = row_s[way1]
-        needs_upgrade = l1_hit & w & (cur_state == S)
-
-        # directory-equivalent probe: all cores' copies of this line
-        copies_s = jnp.stack([l1s[k * l1_sets + set1, :]
-                              for k in range(cores)])       # (cores, ways)
-        copies_t = jnp.stack([l1t[k * l1_sets + set1, :]
-                              for k in range(cores)])
-        copies = (copies_t == a) & (copies_s != I)
-        other = copies & (core_ids[:, None] != c)
-        n_other = other.sum()
-
-        bump(L1_HIT, l1_hit)
-        bump(L1_MISS, ~l1_hit)
-        bump(upgrades, needs_upgrade)
-        bump(invalidations, jnp.where(w, n_other, 0))
-
-        # invalidate other copies on any write (upgrade or RFO fill)
-        inval = other & w & valid
-        for k in range(cores):
-            l1s[k * l1_sets + set1, :] = jnp.where(inval[k], I, copies_s[k])
-
-        # ---------------- L1 victim writeback (on miss) ----------------
-        evict_valid = (~l1_hit) & (cur_state != I)
-        evict_tag = row_t[way1]
-        evict_dirty = evict_valid & (cur_state == M)
-        eset2 = evict_tag & (l2_sets - 1)
-        erow = l2t[eset2, :]
-        ehits = erow == evict_tag
-        ehit = ehits.any()
-        eway = jnp.where(ehit, jnp.argmax(ehits),
-                         jnp.argmin(l2u[eset2, :])).astype(jnp.int32)
-        # inclusive L2: mark dirty there on dirty eviction, drop the sharer
-        l2s[eset2, eway] = jnp.where(evict_dirty & ehit & valid,
-                                     M, l2s[eset2, eway])
-        l2sh[eset2, eway] = jnp.where(
-            evict_valid & ehit & valid,
-            l2sh[eset2, eway] & ~(jnp.int32(1) << c), l2sh[eset2, eway])
-        bump(writebacks_l1, evict_dirty)
-
-        # ---------------- L2 lookup (only meaningful on L1 miss) --------
-        set2 = a & (l2_sets - 1)
-        row2 = l2t[set2, :]
-        hits2 = row2 == a
-        l2_hit_raw = hits2.any()
-        way2 = jnp.where(l2_hit_raw, jnp.argmax(hits2),
-                         jnp.argmin(l2u[set2, :])).astype(jnp.int32)
-        l2_hit = l2_hit_raw & (~l1_hit)
-        l2_miss = (~l2_hit_raw) & (~l1_hit)
-        bump(L2_HIT, l2_hit)
-        bump(L2_MISS, l2_miss)
-
-        # ---- L2 victim handling on fill: back-invalidate + writeback ----
-        v_tag = l2t[set2, way2]
-        v_state = l2s[set2, way2]
-        v_tier = l2tier[set2, way2]
-        v_valid = l2_miss & (v_state != I) & (v_tag != a)
-        vset1 = v_tag & (l1_sets - 1)
-        vc_s = jnp.stack([l1s[k * l1_sets + vset1, :]
-                          for k in range(cores)])
-        vc_t = jnp.stack([l1t[k * l1_sets + vset1, :]
-                          for k in range(cores)])
-        v_copies = (vc_t == v_tag) & (vc_s != I)
-        v_l1_dirty = (v_copies & (vc_s == M)).any()
-        for k in range(cores):
-            l1s[k * l1_sets + vset1, :] = jnp.where(
-                v_copies[k] & v_valid & valid, I, vc_s[k])
-        bump(back_invalidations, jnp.where(v_valid, v_copies.sum(), 0))
-        v_dirty = v_valid & ((v_state == M) | v_l1_dirty)
-        # per-target attribution unrolls over the (static) target count
-        for tgt in range(n_targets):
-            bump(mem_write + tgt, v_dirty & (v_tier == tgt))
-
-        # ---- memory read on L2 miss ----
-        for tgt in range(n_targets):
-            bump(MEM_READ + tgt, l2_miss & (tr == tgt))
-
-        # ---- install / update line in L2 ----
-        fill2 = l2_miss & valid
-        touch2 = (l2_hit | l2_miss) & valid
-        l2t[set2, way2] = jnp.where(fill2, a, l2t[set2, way2])
-        l2tier[set2, way2] = jnp.where(fill2, tr, l2tier[set2, way2])
-        l2s[set2, way2] = jnp.where(fill2, E, l2s[set2, way2])
-        l2u[set2, way2] = jnp.where(touch2, t, l2u[set2, way2])
-        me = jnp.int32(1) << c
-        l2sh[set2, way2] = jnp.where(
-            fill2, me,
-            jnp.where(l2_hit & valid, l2sh[set2, way2] | me,
-                      l2sh[set2, way2]))
-
-        # ---------------- install / update line in L1 ----------------
-        sole = n_other == 0
-        fill_state = jnp.where(w, M, jnp.where(sole, E, S)).astype(jnp.int32)
-        hit_state = jnp.where(w, M, cur_state).astype(jnp.int32)
-        new_state = jnp.where(l1_hit, hit_state, fill_state)
-        l1t[r1, way1] = jnp.where(valid, a, l1t[r1, way1])
-        l1s[r1, way1] = jnp.where(valid, new_state, l1s[r1, way1])
-        l1u[r1, way1] = jnp.where(valid, t, l1u[r1, way1])
+        _mesi_access(l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                     addr_ref[0, i], w_ref[0, i], core_ref[0, i],
+                     tier_ref[0, i], base_t + i, jnp.int32(1),
+                     cores=cores, l1_sets=l1_sets, l2_sets=l2_sets,
+                     n_targets=n_targets)
         return carry
 
     jax.lax.fori_loop(0, chunk, body, 0)
@@ -423,3 +443,436 @@ def mesi_cache_sim(addr: Array, is_write: Array, core: Array, tier: Array,
         l1_state=l1s.reshape(shape1), l2_tag=l2t, l2_use=l2u,
         l2_state=l2s, l2_tier=l2tier, l2_sharers=l2sh)
     return stats, state
+
+
+# ---------------------------------------------------------------------------
+# Carry-in / carry-out segment kernel (streaming + checkpoint/resume)
+# ---------------------------------------------------------------------------
+def _carry_planes(l1p: Array, l2p: Array):
+    """Split the engine's packed carry into the kernel's 8 state planes.
+
+    ``l1p`` is (B, cores, s1, w1, 3) [tag, use, state] and ``l2p`` is
+    (B, s2, w2, 5) [tag, use, state, tier, sharers]; the kernel wants the
+    flattened (B, cores * s1, w1) / (B, s2, w2) per-plane layout of
+    :func:`mesi_cache_sim`.
+    """
+    b, cores, s1, w1 = l1p.shape[:4]
+    sh1 = (b, cores * s1, w1)
+    return ([l1p[..., k].reshape(sh1) for k in range(3)]
+            + [l2p[..., k] for k in range(5)])
+
+
+def _pack_planes(planes, b: int, cores: int, s1: int, w1: int):
+    """Inverse of :func:`_carry_planes`: 8 planes -> (l1p, l2p)."""
+    l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh = planes
+    sh4 = (b, cores, s1, w1)
+    l1p = jnp.stack([x.reshape(sh4) for x in (l1t, l1u, l1s)], axis=-1)
+    l2p = jnp.stack([l2t, l2u, l2s, l2tier, l2sh], axis=-1)
+    return l1p, l2p
+
+
+def _mesi_segment_kernel(addr_ref, w_ref, core_ref, tier_ref, t0_ref,
+                         l1t_in, l1u_in, l1s_in, l2t_in, l2u_in, l2s_in,
+                         l2tier_in, l2sh_in, stats_in,
+                         stats_ref, l1t_ref, l1u_ref, l1s_ref,
+                         l2t_ref, l2u_ref, l2s_ref, l2tier_ref, l2sh_ref,
+                         l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                         *, chunk: int, cores: int, l1_sets: int,
+                         l1_ways: int, l2_sets: int, l2_ways: int,
+                         n_chunks: int, n_targets: int):
+    """Segment variant of :func:`_mesi_kernel`: state flows carry->carry.
+
+    Instead of zero-initializing at each row's first chunk, the incoming
+    packed carry (state planes + stats + logical clock t0) seeds the VMEM
+    scratch, so a trace split into segments threads identical arithmetic
+    through the carry — the resumable-stream contract of
+    :func:`repro.core.engine.run_batch_segment`.
+    """
+    j = pl.program_id(1)
+
+    # seed persistent state from the incoming carry at each row's first chunk
+    @pl.when(j == 0)
+    def _init():
+        l1t[...] = l1t_in[0]
+        l1u[...] = l1u_in[0]
+        l1s[...] = l1s_in[0]
+        l2t[...] = l2t_in[0]
+        l2u[...] = l2u_in[0]
+        l2s[...] = l2s_in[0]
+        l2tier[...] = l2tier_in[0]
+        l2sh[...] = l2sh_in[0]
+        stats[...] = stats_in[0]
+
+    base_t = t0_ref[0, 0] + j * chunk
+
+    def body(i, carry):
+        _mesi_access(l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                     addr_ref[0, i], w_ref[0, i], core_ref[0, i],
+                     tier_ref[0, i], base_t + i, jnp.int32(1),
+                     cores=cores, l1_sets=l1_sets, l2_sets=l2_sets,
+                     n_targets=n_targets)
+        return carry
+
+    jax.lax.fori_loop(0, chunk, body, 0)
+
+    # publish this batch row's stats + final state after its last chunk
+    @pl.when(j == n_chunks - 1)
+    def _out():
+        stats_ref[0, :] = stats[...]
+        l1t_ref[0] = l1t[...]
+        l1u_ref[0] = l1u[...]
+        l1s_ref[0] = l1s[...]
+        l2t_ref[0] = l2t[...]
+        l2u_ref[0] = l2u[...]
+        l2s_ref[0] = l2s[...]
+        l2tier_ref[0] = l2tier[...]
+        l2sh_ref[0] = l2sh[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "chunk", "interpret"))
+def mesi_segment(carry, addr: Array, is_write: Array, core: Array,
+                 tier: Array, *, params: CacheParams, chunk: int = 512,
+                 interpret: bool = True):
+    """Advance the engine's packed batch carry over one trace segment.
+
+    The carry is exactly :func:`repro.core.engine.init_batch_carry`'s
+    ``(l1p, l2p, stats, t)`` tuple — what the reference
+    ``run_batch_segment`` threads between segments and what checkpoint/
+    resume snapshots — so segments may alternate freely between this
+    kernel and the reference scan with bitwise-identical results.
+
+    Args:
+      carry: ``(l1p, l2p, stats, t)`` packed batch carry (leading B).
+      addr: (B, N) int32 line addresses; any N — sentinel-padded to a
+        multiple of `chunk` internally.  Padded entries never touch
+        state, and the returned clock advances by the *unpadded* N, so
+        internal chunk padding is invisible in the carry.
+      is_write/core/tier: (B, N) int32.
+      params: cache geometry (static).
+      chunk: trace elements per grid step.
+      interpret: interpret mode (CPU validation; TPU target is False).
+
+    Returns: the advanced ``(l1p, l2p, stats, t)`` carry.
+    """
+    l1p, l2p, stats, t = carry
+    if addr.ndim != 2:
+        raise ValueError("mesi_segment expects a (B, N) batch")
+    b, n = addr.shape
+    addr, is_write, core, tier = pad_trace(chunk, addr, is_write, core, tier)
+    n_chunks = addr.shape[1] // chunk
+    cores, s1, w1 = params.cores, params.l1_sets, params.l1_ways
+    s2, w2 = params.l2_sets, params.l2_ways
+    ns = nstats(params.n_targets)
+
+    kernel = functools.partial(
+        _mesi_segment_kernel, chunk=chunk, cores=cores, l1_sets=s1,
+        l1_ways=w1, l2_sets=s2, l2_ways=w2, n_chunks=n_chunks,
+        n_targets=params.n_targets)
+    trace_spec = pl.BlockSpec((1, chunk), lambda b_, j: (b_, j))
+    t_spec = pl.BlockSpec((1, 1), lambda b_, j: (b_, 0))
+    st_spec = pl.BlockSpec((1, ns), lambda b_, j: (b_, 0))
+    l1_spec = pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0))
+    l2_spec = pl.BlockSpec((1, s2, w2), lambda b_, j: (b_, 0, 0))
+    state_shapes = [
+        jax.ShapeDtypeStruct((b, ns), jnp.int32),
+    ] + [jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32)] * 3 \
+        + [jax.ShapeDtypeStruct((b, s2, w2), jnp.int32)] * 5
+    scratch = [pltpu.VMEM((cores * s1, w1), jnp.int32)] * 3 \
+        + [pltpu.VMEM((s2, w2), jnp.int32)] * 5 \
+        + [pltpu.VMEM((ns,), jnp.int32)]
+
+    planes = _carry_planes(l1p, l2p)
+    t0 = t.astype(jnp.int32).reshape(b, 1)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),
+        in_specs=[trace_spec] * 4 + [t_spec]
+        + [l1_spec] * 3 + [l2_spec] * 5 + [st_spec],
+        out_specs=[st_spec] + [l1_spec] * 3 + [l2_spec] * 5,
+        out_shape=state_shapes,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(addr.astype(jnp.int32), is_write.astype(jnp.int32),
+      core.astype(jnp.int32), tier.astype(jnp.int32), t0,
+      *planes, jnp.asarray(stats, jnp.int32))
+
+    stats_o = outs[0]
+    l1p_o, l2p_o = _pack_planes(outs[1:], b, cores, s1, w1)
+    return (l1p_o, l2p_o, stats_o, t + jnp.int32(n))
+
+
+# ---------------------------------------------------------------------------
+# Epoch-structured dynamic-tiering kernel (tiering / sampling backend)
+# ---------------------------------------------------------------------------
+#: Column order of the packed per-row scalar input of
+#: :func:`mesi_dyn_segment`: the per-row scalars of
+#: :func:`repro.core.tiering_dyn.run_dynamic_segment` followed by the two
+#: scalar carry components (logical clock, epoch-slot index).
+DYN_SCALARS = ("dyn_flag", "n_pages", "budget", "threshold", "period",
+               "dram_cap", "s_warm", "s_meas", "s_per", "t0", "eidx0")
+
+
+def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
+                     l1t_in, l1u_in, l1s_in, l2t_in, l2u_in, l2s_in,
+                     l2tier_in, l2sh_in, stats_in, pmap_in, counts_in,
+                     migr_in, migw_in,
+                     stats_ref, l1t_ref, l1u_ref, l1s_ref,
+                     l2t_ref, l2u_ref, l2s_ref, l2tier_ref, l2sh_ref,
+                     pmap_ref, counts_ref, migr_ref, migw_ref,
+                     slots_ref, snaps_ref, meas_ref,
+                     l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                     pmap_s, counts_s, migr_s, migw_s,
+                     *, slot_len: int, cores: int, l1_sets: int,
+                     l1_ways: int, l2_sets: int, l2_ways: int,
+                     n_slots: int, n_targets: int, n_p: int, k_max: int,
+                     count_bound: int):
+    """One (batch-row, epoch-slot) grid step of the dynamic tierer.
+
+    Mirrors :func:`repro.core.tiering_dyn._slot_step` decision-for-
+    decision: the page map routes each access (DRAM vs the precomputed
+    CXL decode target), per-page counters accumulate in VMEM scratch,
+    and at each epoch boundary the promotion/demotion rule rewrites the
+    map via the same injective hotness keys — selected by an iterative
+    argmax (``k_max`` rounds) that picks exactly the pages
+    ``lax.top_k`` would, so migration totals and the map evolution are
+    bitwise-equal to the reference scan.  Sampled rows gate every stat
+    increment on the slot's measurement flag (the stat-masking
+    multiply), which equals the reference's per-slot delta masking
+    because stat updates are integer adds.
+    """
+    j = pl.program_id(1)
+
+    # seed the full tierer carry from the inputs at each row's first slot
+    @pl.when(j == 0)
+    def _init():
+        l1t[...] = l1t_in[0]
+        l1u[...] = l1u_in[0]
+        l1s[...] = l1s_in[0]
+        l2t[...] = l2t_in[0]
+        l2u[...] = l2u_in[0]
+        l2s[...] = l2s_in[0]
+        l2tier[...] = l2tier_in[0]
+        l2sh[...] = l2sh_in[0]
+        stats[...] = stats_in[0]
+        pmap_s[...] = pmap_in[0]
+        counts_s[...] = counts_in[0]
+        migr_s[...] = migr_in[0]
+        migw_s[...] = migw_in[0]
+
+    flag = sc_ref[0, 0]
+    npg = sc_ref[0, 1]
+    bud = sc_ref[0, 2]
+    thr = sc_ref[0, 3]
+    per = sc_ref[0, 4]
+    cap = sc_ref[0, 5]
+    s_w = sc_ref[0, 6]
+    s_m = sc_ref[0, 7]
+    s_p = sc_ref[0, 8]
+    t0 = sc_ref[0, 9]
+    eidx0 = sc_ref[0, 10]
+    lpp = jnp.int32(LINES_PER_PAGE)
+    base_t = t0 + j * slot_len
+    eidx = eidx0 + j                      # slot index entering this slot
+    # sampled rows (s_p > 0): slots outside [s_w, s_w + s_m) of each
+    # period functionally warm (state advances, counters freeze)
+    pos = eidx % jnp.maximum(s_p, jnp.int32(1))
+    meas = jnp.where(s_p > 0, (pos >= s_w) & (pos < s_w + s_m),
+                     True).astype(jnp.int32)
+
+    def body(i, acc):
+        acc_t, acc_d = acc
+        a_raw = addr_ref[0, 0, i]
+        v = (a_raw >= 0).astype(jnp.int32)
+        page = jnp.clip(a_raw // lpp, 0, n_p - 1)
+        intent = pmap_s[page]
+        tr_s = tier_ref[0, 0, i]
+        # dynamic rows: page map decides DRAM vs the precomputed CXL
+        # target; static rows use the precomputed target verbatim
+        tgt = jnp.where(flag != 0,
+                        jnp.where(intent == 0, 0, tr_s), tr_s)
+        _mesi_access(l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
+                     a_raw, w_ref[0, 0, i], core_ref[0, 0, i], tgt,
+                     base_t + i, meas, cores=cores, l1_sets=l1_sets,
+                     l2_sets=l2_sets, n_targets=n_targets)
+        counts_s[page] = counts_s[page] + v
+        sel = jnp.where(flag != 0, intent, tgt)
+        return acc_t + v, acc_d + v * (sel == 0).astype(jnp.int32)
+
+    acc_t, acc_d = jax.lax.fori_loop(
+        0, slot_len, body, (jnp.int32(0), jnp.int32(0)))
+
+    # ---- epoch-boundary promotion/demotion decision ----
+    boundary = ((eidx + 1) % per) == 0
+    do_mig = boundary & (bud > 0)
+    mig_i = do_mig.astype(jnp.int32)
+    km = jnp.int32(k_max)
+    page_ids = jax.lax.broadcasted_iota(jnp.int32, (n_p, 1), 0)[:, 0]
+    pvalid = page_ids < npg
+    pmap = pmap_s[...]
+    counts = counts_s[...]
+    is_cxl = (pmap != 0) & pvalid
+    is_dram = (pmap == 0) & pvalid
+    hot = is_cxl & (counts >= thr)
+    n_hot = hot.sum().astype(jnp.int32)
+    n_dram = is_dram.sum().astype(jnp.int32)
+    # closed-form counts of the reference's top-k mask sums (every min
+    # the rank/validity masks imply, including the top-k width itself)
+    n_want = jnp.minimum(jnp.minimum(n_hot, bud), km)
+    free = jnp.maximum(cap - n_dram, 0)
+    n_dem_needed = jnp.clip(n_want - free, 0, bud)
+    n_dem = jnp.minimum(jnp.minimum(n_dem_needed, n_dram), km) * mig_i
+    n_pro = jnp.minimum(jnp.minimum(n_want, free + n_dem), km) * mig_i
+    neg = jnp.int32(-1)
+    pkey = jnp.where(hot, encode_hot_key(counts, page_ids, n_p), neg)
+    dkey = jnp.where(is_dram,
+                     encode_hot_key(jnp.int32(count_bound) - counts,
+                                    page_ids, n_p), neg)
+
+    # iterative argmax over the injective keys selects exactly the pages
+    # lax.top_k would (keys are distinct wherever a take can happen)
+    def mig_body(r, sel):
+        pk, dk, pro_l, dem_l = sel
+        ri = jnp.int32(r)
+        pi = jnp.argmax(pk).astype(jnp.int32)
+        take_p = (ri < n_pro).astype(jnp.int32)
+        pmap_s[pi] = jnp.where(ri < n_pro, 0, pmap_s[pi])
+        pro_l = pro_l + ptl_ref[0, pi, :] * take_p
+        pk = pk.at[pi].set(neg)
+        di = jnp.argmax(dk).astype(jnp.int32)
+        take_d = (ri < n_dem).astype(jnp.int32)
+        pmap_s[di] = jnp.where(ri < n_dem, 1, pmap_s[di])
+        dem_l = dem_l + ptl_ref[0, di, :] * take_d
+        dk = dk.at[di].set(neg)
+        return pk, dk, pro_l, dem_l
+
+    zt = jnp.zeros((n_targets,), jnp.int32)
+    _, _, pro_l, dem_l = jax.lax.fori_loop(
+        0, k_max, mig_body, (pkey, dkey, zt, zt))
+
+    # promotions read the page from its CXL endpoints + write it to
+    # DRAM; demotions read DRAM + write the CXL endpoints
+    migr_s[...] = migr_s[...] + pro_l.at[0].add(n_dem * lpp)
+    migw_s[...] = migw_s[...] + dem_l.at[0].add(n_pro * lpp)
+    counts_s[...] = jnp.where(boundary, 0, counts_s[...])
+
+    # per-slot outputs (every slot publishes its own block)
+    slots_ref[0, 0, :] = jnp.stack([acc_t, acc_d, n_pro, n_dem])
+    snaps_ref[0, 0, :] = stats[...]
+    meas_ref[0, 0] = meas
+
+    # publish this batch row's final carry after its last slot
+    @pl.when(j == n_slots - 1)
+    def _out():
+        stats_ref[0, :] = stats[...]
+        l1t_ref[0] = l1t[...]
+        l1u_ref[0] = l1u[...]
+        l1s_ref[0] = l1s[...]
+        l2t_ref[0] = l2t[...]
+        l2u_ref[0] = l2u[...]
+        l2s_ref[0] = l2s[...]
+        l2tier_ref[0] = l2tier[...]
+        l2sh_ref[0] = l2sh[...]
+        pmap_ref[0, :] = pmap_s[...]
+        counts_ref[0, :] = counts_s[...]
+        migr_ref[0, :] = migr_s[...]
+        migw_ref[0, :] = migw_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("params", "k_max",
+                                             "count_bound", "interpret"))
+def mesi_dyn_segment(carry, addr: Array, is_write: Array, core: Array,
+                     tier: Array, dyn_flag, n_pages, budget, threshold,
+                     period, dram_cap, page_target_lines, s_warm, s_meas,
+                     s_per, *, params: CacheParams, k_max: int,
+                     count_bound: int, interpret: bool = True):
+    """Advance the batched epoch carry over a (B, E, slot_len) segment.
+
+    The carry is exactly :func:`repro.core.tiering_dyn.init_dyn_carry`'s
+    9-tuple and the scalar arguments follow
+    :func:`repro.core.tiering_dyn.run_dynamic_segment`'s order, so the
+    kernel drops into the dynamic-tiering segment loop (and the
+    resilient executor's checkpointed replay) as a backend swap:
+    segments may alternate freely between this kernel and the reference
+    scan with bitwise-identical carries and per-slot outputs.
+
+    Returns ``(carry, slots, snaps, meas)``: the advanced carry, the
+    (B, E, 4) per-slot counters (:data:`repro.core.tiering_dyn.
+    SLOT_FIELDS`), the (B, E, nstats) cumulative stat snapshots and the
+    (B, E) measurement flags.
+    """
+    l1p, l2p, stats, t, pmap, counts, mig_rd, mig_wr, eidx = carry
+    if addr.ndim != 3:
+        raise ValueError("mesi_dyn_segment expects a (B, E, slot_len) batch")
+    b, e, slot_len = addr.shape
+    n_p = int(page_target_lines.shape[1])
+    n_t = params.n_targets
+    ns = nstats(n_t)
+    cores, s1, w1 = params.cores, params.l1_sets, params.l1_ways
+    s2, w2 = params.l2_sets, params.l2_ways
+    # k_max is a static argname — int() runs at trace time, not on a
+    # traced value  # repro-lint: disable=RL201
+    k_max = min(int(k_max), n_p)
+
+    def i32(x):
+        return jnp.asarray(x, jnp.int32)
+
+    sc = jnp.stack([i32(dyn_flag), i32(n_pages), i32(budget),
+                    i32(threshold), i32(period), i32(dram_cap),
+                    i32(s_warm), i32(s_meas), i32(s_per),
+                    i32(t), i32(eidx)], axis=1)
+
+    kernel = functools.partial(
+        _mesi_dyn_kernel, slot_len=slot_len, cores=cores, l1_sets=s1,
+        l1_ways=w1, l2_sets=s2, l2_ways=w2, n_slots=e, n_targets=n_t,
+        n_p=n_p, k_max=k_max, count_bound=count_bound)
+    trace_spec = pl.BlockSpec((1, 1, slot_len), lambda b_, j: (b_, j, 0))
+    sc_spec = pl.BlockSpec((1, len(DYN_SCALARS)), lambda b_, j: (b_, 0))
+    ptl_spec = pl.BlockSpec((1, n_p, n_t), lambda b_, j: (b_, 0, 0))
+    st_spec = pl.BlockSpec((1, ns), lambda b_, j: (b_, 0))
+    l1_spec = pl.BlockSpec((1, cores * s1, w1), lambda b_, j: (b_, 0, 0))
+    l2_spec = pl.BlockSpec((1, s2, w2), lambda b_, j: (b_, 0, 0))
+    pg_spec = pl.BlockSpec((1, n_p), lambda b_, j: (b_, 0))
+    tg_spec = pl.BlockSpec((1, n_t), lambda b_, j: (b_, 0))
+    slots_spec = pl.BlockSpec((1, 1, 4), lambda b_, j: (b_, j, 0))
+    snaps_spec = pl.BlockSpec((1, 1, ns), lambda b_, j: (b_, j, 0))
+    meas_spec = pl.BlockSpec((1, 1), lambda b_, j: (b_, j))
+    carry_specs = [st_spec] + [l1_spec] * 3 + [l2_spec] * 5 \
+        + [pg_spec] * 2 + [tg_spec] * 2
+    out_shape = [
+        jax.ShapeDtypeStruct((b, ns), jnp.int32),
+    ] + [jax.ShapeDtypeStruct((b, cores * s1, w1), jnp.int32)] * 3 \
+        + [jax.ShapeDtypeStruct((b, s2, w2), jnp.int32)] * 5 \
+        + [jax.ShapeDtypeStruct((b, n_p), jnp.int32)] * 2 \
+        + [jax.ShapeDtypeStruct((b, n_t), jnp.int32)] * 2 \
+        + [jax.ShapeDtypeStruct((b, e, 4), jnp.int32),
+           jax.ShapeDtypeStruct((b, e, ns), jnp.int32),
+           jax.ShapeDtypeStruct((b, e), jnp.int32)]
+    scratch = [pltpu.VMEM((cores * s1, w1), jnp.int32)] * 3 \
+        + [pltpu.VMEM((s2, w2), jnp.int32)] * 5 \
+        + [pltpu.VMEM((ns,), jnp.int32)] \
+        + [pltpu.VMEM((n_p,), jnp.int32)] * 2 \
+        + [pltpu.VMEM((n_t,), jnp.int32)] * 2
+
+    planes = _carry_planes(l1p, l2p)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(b, e),
+        in_specs=[trace_spec] * 4 + [sc_spec, ptl_spec]
+        + [l1_spec] * 3 + [l2_spec] * 5
+        + [st_spec] + [pg_spec] * 2 + [tg_spec] * 2,
+        out_specs=carry_specs + [slots_spec, snaps_spec, meas_spec],
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(i32(addr), i32(is_write), i32(core), i32(tier), sc,
+      i32(page_target_lines), *planes, i32(stats), i32(pmap),
+      i32(counts), i32(mig_rd), i32(mig_wr))
+
+    stats_o = outs[0]
+    l1p_o, l2p_o = _pack_planes(outs[1:9], b, cores, s1, w1)
+    pmap_o, counts_o, migr_o, migw_o, slots, snaps, meas = outs[9:]
+    new_carry = (l1p_o, l2p_o, stats_o, t + jnp.int32(e * slot_len),
+                 pmap_o, counts_o, migr_o, migw_o,
+                 eidx + jnp.int32(e))
+    return new_carry, slots, snaps, meas

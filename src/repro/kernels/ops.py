@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.cache_sim import cache_sim as _cache_sim_kernel
 from repro.kernels.cache_sim import mesi_cache_sim as _mesi_kernel
+from repro.kernels.cache_sim import mesi_dyn_segment as _mesi_dyn_segment
+from repro.kernels.cache_sim import mesi_segment as _mesi_segment
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.paged_attention import paged_attention as _paged_kernel
 from repro.kernels.stream_triad import stream_triad as _triad_kernel
@@ -39,6 +41,37 @@ def mesi_cache_sim(addr: Array, is_write: Array, core: Array, tier: Array,
     """Batched two-level MESI + tier simulation (engine `pallas` backend)."""
     return _mesi_kernel(addr, is_write, core, tier, params=params,
                         chunk=chunk, interpret=_interpret())
+
+
+def mesi_run_segment(carry, addr: Array, is_write: Array, core: Array,
+                     tier: Array, *, params, chunk: int = 512):
+    """Advance the engine's packed batch carry over one trace segment.
+
+    The kernel-side twin of :func:`repro.core.engine.run_batch_segment`:
+    same ``(l1p, l2p, stats, t)`` carry in and out (checkpoint/resume
+    replays it), bitwise-equal stats and state.
+    """
+    return _mesi_segment(carry, addr, is_write, core, tier, params=params,
+                         chunk=chunk, interpret=_interpret())
+
+
+def mesi_dyn_segment(carry, addr: Array, is_write: Array, core: Array,
+                     tier: Array, dyn_flag, n_pages, budget, threshold,
+                     period, dram_cap, page_target_lines, s_warm, s_meas,
+                     s_per, *, params, k_max: int, count_bound: int):
+    """Advance the batched epoch carry over a (B, E, slot_len) segment.
+
+    The kernel-side twin of :func:`repro.core.tiering_dyn.
+    run_dynamic_segment`: same 9-tuple carry and per-slot outputs
+    (slots/snapshots/meas), bitwise-equal across dynamic tiering,
+    sampling and static ride-along rows.
+    """
+    return _mesi_dyn_segment(carry, addr, is_write, core, tier, dyn_flag,
+                             n_pages, budget, threshold, period, dram_cap,
+                             page_target_lines, s_warm, s_meas, s_per,
+                             params=params, k_max=k_max,
+                             count_bound=count_bound,
+                             interpret=_interpret())
 
 
 def stream_triad(b: Array, c: Array, s) -> Array:

@@ -1,0 +1,199 @@
+"""Reference-vs-Pallas bitwise parity across the whole sweep matrix.
+
+The contract under test (ISSUE 9 acceptance): ``backend="pallas"`` is a
+first-class engine backend — every sweep axis {static, dynamic tiering,
+sampled, streamed, sharded, kill-and-resume} produces **bitwise-equal**
+counters to the reference vmapped-scan path, on small traces in
+interpret mode (the CPU parity oracle for the TPU kernels).  The two
+backends expose the *same* carry, so segments may alternate backends
+freely and a checkpoint written by one resumes on the other.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cache as C
+from repro.core import distribute, engine, numa
+from repro.core import route as route_mod
+from repro.core import tiering_dyn
+from repro.core.machine import CPUModel
+from repro.core.resilience import (Fault, FaultPlan, RunKilled, RunReport)
+from repro.core.sampling import SamplingSpec
+from repro.core.tiering_dyn import DynamicTiering
+from repro.core.timing import TimingConfig
+
+RNG = np.random.default_rng(9)
+
+# tiny geometry: interpret-mode pallas unrolls the grid at trace time,
+# so parity runs must keep sets x ways small
+CACHE = C.CacheParams(l1_bytes=2048, l1_ways=2,
+                      l2_bytes=8192, l2_ways=4, cores=2)
+TIMING = TimingConfig()
+CPUS = (CPUModel(kind="o3", mlp=8),)
+
+
+def rand_trace(b, n, addr_hi=4096, sentinel_tail=0):
+    addr = RNG.integers(0, addr_hi, (b, n)).astype(np.int32)
+    if sentinel_tail:
+        addr[-1, n - sentinel_tail:] = engine.SENTINEL
+    wr = RNG.integers(0, 2, (b, n)).astype(np.int32)
+    core = RNG.integers(0, CACHE.cores, (b, n)).astype(np.int32)
+    tier = RNG.integers(0, CACHE.n_targets, (b, n)).astype(np.int32)
+    return addr, wr, core, tier
+
+
+def assert_run_equal(got, want):
+    s0, st0 = want
+    s1, st1 = got
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+    for f in st0._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(st1, f)),
+                                      np.asarray(getattr(st0, f)),
+                                      err_msg=f)
+
+
+def spec(backend="reference", **kw):
+    base = dict(footprint_factors=(2,), policies=(numa.ZNuma(1.0),),
+                cpus=CPUS, topologies=(route_mod.direct(2),),
+                backend=backend)
+    base.update(kw)
+    return engine.SweepSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# static flat scan
+# ---------------------------------------------------------------------------
+def test_static_parity():
+    args = rand_trace(3, 300, sentinel_tail=40)
+    ref = engine.run_traces(CACHE, *args)
+    pal = engine.run_traces(CACHE, *args, backend="pallas", chunk=64)
+    assert_run_equal(pal, ref)
+
+
+# ---------------------------------------------------------------------------
+# streamed (segment carry) — incl. the satellite-2 regression: segment
+# and chunk lengths that do NOT divide the trace, sentinel padding inert
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,segment,chunk", [
+    (250, 77, 64),       # nothing divides anything
+    (256, 256, 512),     # one segment, chunk > trace
+    (300, 100, 32),      # segment multiple, chunk not
+])
+def test_streamed_parity_padding_invariance(n, segment, chunk):
+    args = rand_trace(2, n, sentinel_tail=n // 5)
+    ref = engine.run_traces(CACHE, *args)
+    pal = engine.run_traces(CACHE, *args, backend="pallas", chunk=chunk,
+                            segment=segment)
+    assert_run_equal(pal, ref)
+
+
+def test_stream_traces_pallas_backend():
+    args = rand_trace(2, 333)
+    ref = engine.run_traces(CACHE, *args)
+    src = distribute.segment_batch(args, 128)
+    got = distribute.stream_traces(CACHE, src, backend="pallas", chunk=64)
+    assert_run_equal(got, ref)
+
+
+def test_segment_carry_interchangeable_between_backends():
+    # the SAME carry threads through either backend's segment step:
+    # alternate per segment, end state must equal the pure reference run
+    addr, wr, core, tier = rand_trace(2, 240, sentinel_tail=30)
+    ref = engine.run_traces(CACHE, addr, wr, core, tier)
+    carry = engine.init_batch_carry(CACHE, 2)
+    for i, s in enumerate(range(0, 240, 80)):
+        sl = slice(s, s + 80)
+        carry = engine.run_batch_segment(
+            CACHE, carry, addr[:, sl], wr[:, sl], core[:, sl],
+            tier[:, sl], backend=("pallas" if i % 2 else "reference"),
+            chunk=32)
+    np.testing.assert_array_equal(np.asarray(carry[2]),
+                                  np.asarray(ref[0]))
+
+
+# ---------------------------------------------------------------------------
+# dynamic tiering + sampled rows (sweep-level: full row dict equality)
+# ---------------------------------------------------------------------------
+DYN_AXIS = (None, DynamicTiering(epoch_len=512, budget=4, threshold=2))
+
+
+def test_dynamic_tiering_sweep_parity():
+    legacy = engine.run_sweep(spec(tiering=DYN_AXIS), CACHE, TIMING)
+    rows = engine.run_sweep(spec("pallas", tiering=DYN_AXIS), CACHE,
+                            TIMING)
+    assert rows == legacy            # dict equality: floats to the bit
+
+
+def test_sampled_sweep_parity():
+    sampling = (None, SamplingSpec(warm_slots=1, measure_slots=2,
+                                   period_slots=4))
+    legacy = engine.run_sweep(
+        spec(tiering=DYN_AXIS, sampling=sampling), CACHE, TIMING)
+    rows = engine.run_sweep(
+        spec("pallas", tiering=DYN_AXIS, sampling=sampling), CACHE,
+        TIMING)
+    assert rows == legacy
+
+
+# ---------------------------------------------------------------------------
+# sharded + streamed execution strategies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mesh,stream_chunk", [
+    (2, None), (None, 512), (2, 1024), (3, 768),
+])
+def test_sharded_sweep_parity(mesh, stream_chunk):
+    legacy = engine.run_sweep(spec(tiering=DYN_AXIS), CACHE, TIMING)
+    rows = distribute.run_sweep(spec("pallas", tiering=DYN_AXIS), CACHE,
+                                TIMING, mesh=mesh,
+                                stream_chunk=stream_chunk)
+    assert rows == legacy
+
+
+# ---------------------------------------------------------------------------
+# resilience: the satellite-1 regression and kill-and-resume on pallas
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_nofault_resilient_equals_sharded(backend):
+    # ResilientExecutor with no checkpoint and no fault plan must fall
+    # through to plain sharded dispatch (no NotImplementedError, no
+    # result change) on EVERY backend
+    s = spec(backend)
+    sharded = distribute.run_sweep(s, CACHE, TIMING, mesh=2,
+                                   stream_chunk=1024)
+    resilient = distribute.run_sweep(s, CACHE, TIMING, mesh=2,
+                                     stream_chunk=1024,
+                                     report=RunReport())
+    assert resilient == sharded
+
+
+def test_kill_and_resume_parity_pallas(tmp_path):
+    legacy = engine.run_sweep(spec(tiering=DYN_AXIS), CACHE, TIMING)
+    s = spec("pallas", tiering=DYN_AXIS)
+    pol = distribute.resilience.CheckpointPolicy(tmp_path / "ckpt",
+                                                 every_segments=1,
+                                                 blocking=True)
+    plan = FaultPlan((Fault("crash", shard=0, segment=1),))
+    with pytest.raises(RunKilled):
+        distribute.run_sweep(s, CACHE, TIMING, stream_chunk=1024,
+                             resume=pol, fault_plan=plan)
+    report = RunReport()
+    rows = distribute.run_sweep(s, CACHE, TIMING, stream_chunk=1024,
+                                resume=pol, report=report)
+    assert rows == legacy
+    assert report.summary()["fast_forwarded_segments"] >= 1
+
+
+def test_checkpoint_written_by_reference_resumes_on_pallas(tmp_path):
+    # same carry => a reference-run checkpoint restores under pallas
+    legacy = engine.run_sweep(spec(tiering=DYN_AXIS), CACHE, TIMING)
+    pol = distribute.resilience.CheckpointPolicy(tmp_path / "ckpt",
+                                                 every_segments=1,
+                                                 blocking=True)
+    plan = FaultPlan((Fault("crash", shard=0, segment=1),))
+    with pytest.raises(RunKilled):
+        distribute.run_sweep(spec(tiering=DYN_AXIS), CACHE, TIMING,
+                             stream_chunk=1024, resume=pol,
+                             fault_plan=plan)
+    rows = distribute.run_sweep(spec("pallas", tiering=DYN_AXIS), CACHE,
+                                TIMING, stream_chunk=1024, resume=pol,
+                                report=RunReport())
+    assert rows == legacy

@@ -40,7 +40,11 @@ def summarize(name: str, d: dict) -> str:
     if name == "engine":
         return (f"batched vs sequential speedup {d.get('speedup_warm')}x "
                 f"warm ({d.get('batched_warm_maccess_per_s')} Maccess/s); "
-                f"bitwise={d.get('stats_bitwise_equal')}")
+                f"bitwise={d.get('stats_bitwise_equal')}; "
+                f"pallas-vs-reference "
+                f"{d.get('pallas_vs_reference_speedup', '?')}x "
+                f"({d.get('pallas_mode', '?')}, "
+                f"parity={d.get('pallas_stats_bitwise_equal', '?')})")
     if name == "topology":
         return (f"{len(d.get('suite', {}).get('topologies', []))} topologies "
                 f"one-program, warm {d.get('warm_s')}s; direct1 parity="
@@ -60,7 +64,11 @@ def summarize(name: str, d: dict) -> str:
     if name == "tiering":
         return (f"hot_cold dynamic-vs-static effective-bw win "
                 f"{d.get('hot_cold_effective_bw_win')}x at "
-                f"{d.get('hot_cold_migration_gbps')} GB/s migration")
+                f"{d.get('hot_cold_migration_gbps')} GB/s migration; "
+                f"pallas-vs-reference "
+                f"{d.get('pallas_vs_reference_speedup', '?')}x "
+                f"({d.get('pallas_mode', '?')}, "
+                f"parity={d.get('pallas_rows_bitwise_equal', '?')})")
     return f"{len(d)} top-level keys"
 
 
