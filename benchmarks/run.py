@@ -30,6 +30,11 @@ human-readable block per benchmark.
                         overhead %, crash->resume fast-forward time,
                         transient retry counts — every recovered run
                         bitwise-equal to the uninterrupted one
+  fidelity            — load-dependent latency distributions + MSHR
+                        backpressure + the CXL-SSD third tier: banana
+                        curve per expander type, a distribution-enabled
+                        sweep with p50<=p95<=p99 asserted per row, and
+                        the zero-load == deterministic-legacy collapse
   roofline_summary    — reads experiments/roofline JSON (dry-run derived)
 
 ``--only`` takes a comma-separated list of suites (e.g. ``--only
@@ -1013,6 +1018,163 @@ def resilience() -> None:
          f"ff_segments={ff};retries={retries}")
 
 
+def fidelity() -> None:
+    """Latency distributions, MSHR backpressure and the CXL-SSD tier.
+
+    Part 1 sweeps the loaded-latency ("banana") curve per expander type
+    — dram / cxl / ssd via `TimingConfig.loaded_latency_ns` — asserting
+    each curve is monotone in offered load, collapses to its idle floor
+    at zero load, and that the SSD's write path is slower than its read
+    path (flash asymmetry through the internal DRAM cache).  It also
+    shows MSHR backpressure: a small outstanding-request cap lengthens
+    the converged runtime of the identical sweep.
+
+    Part 2 runs one distribution-enabled grid — topologies (direct1,
+    direct2+ssd) x tiering (static, three-tier dynamic) x distributions
+    (off, dist(n=512)) — through the batched engine on both backends,
+    asserting p50 <= p95 <= p99 on every distribution row, that the
+    "off" rows are bitwise-equal to a sweep with no distributions axis
+    (the legacy schema), that a zero queueing excess collapses every
+    percentile to the deterministic fixed point, and that the pallas
+    rows equal the reference rows.  Writes `BENCH_fidelity.json`.
+    """
+    from repro.core import tiering_dyn as td
+    from repro.core.timing import LatencyDistribution
+    from repro.workloads import HotCold
+
+    print("\n== fidelity (latency distributions + MSHR + CXL-SSD) ==")
+    timing = TimingConfig()
+
+    # --- part 1: banana curve per expander type -------------------------
+    curves = {}
+    idle_floor = {"dram": timing.dram.idle_ns, "cxl": timing.cxl.idle_ns,
+                  "ssd": timing.ssd.idle_read_ns}
+    for kind in ("dram", "cxl", "ssd"):
+        c = latency_bandwidth_curve(timing, kind, n=16)
+        lat = c[:, 2]
+        assert np.all(np.diff(lat) >= 0.0), \
+            f"{kind} loaded latency must be monotone in offered load"
+        zero = float(np.asarray(timing.loaded_latency_ns(kind, 0.0)))
+        assert zero == idle_floor[kind], \
+            f"{kind} zero-load latency {zero} != idle floor"
+        curves[kind] = [[round(float(v), 3) for v in row] for row in c]
+        print(f"  {kind:>4}: idle {idle_floor[kind]:7.1f} ns -> "
+              f"{float(lat[-1]):8.1f} ns at {float(c[-1, 0]):.0f} GB/s "
+              f"offered")
+    ssd_rd = float(np.asarray(timing.ssd.loaded_latency_ns(0.0, 1.0)))
+    ssd_wr = float(np.asarray(timing.ssd.loaded_latency_ns(0.0, 0.0)))
+    assert ssd_wr > ssd_rd, "SSD write path must be slower than read"
+
+    # zero queueing excess collapses every percentile to the fixed point
+    dist = LatencyDistribution()
+    for tid in range(4):
+        flat = dist.latency_percentiles(idle_floor["cxl"],
+                                        idle_floor["cxl"], tid)
+        assert np.all(np.asarray(flat) == idle_floor["cxl"]), \
+            "zero excess must collapse the distribution to the legacy point"
+
+    # --- part 2: distribution-enabled sweep, both backends --------------
+    cache = cache_mod.CacheParams(l1_bytes=16 * 1024, l1_ways=4,
+                                  l2_bytes=32 * 1024, l2_ways=8)
+    topos = (route_mod.direct(1, 16),
+             route_mod.direct(2, 16, ssd_gib=16))
+    tiers = (None,
+             td.DynamicTiering(epoch_len=2048, budget=16, threshold=8,
+                               cxl_capacity_pages=8))
+    spec = engine_mod.SweepSpec(
+        footprint_factors=(8,), policies=(numa.ZNuma(1.0),),
+        cpus=(CPUModel(kind="o3", mlp=8),),
+        workloads=(HotCold(hot_page_frac=0.25),),
+        topologies=topos, tiering=tiers,
+        distributions=(None, dist))
+    run = lambda: engine_mod.run_sweep(spec, cache, timing)
+    t0 = time.time()
+    rows = run()
+    t_cold = time.time() - t0
+    t0 = time.time()
+    rows = run()
+    t_warm = time.time() - t0
+
+    # "off" rows == the legacy schema, bitwise (same device program)
+    base = engine_mod.run_sweep(
+        dataclasses.replace(spec, distributions=()), cache, timing)
+    off = [{k: v for k, v in r.items() if k != "distribution"}
+           for r in rows if r["distribution"] == "off"]
+    legacy_equal = off == base
+    assert legacy_equal, \
+        "distribution-off rows diverged from the no-distributions sweep"
+
+    # every distribution row: p50 <= p95 <= p99 per target
+    tail = {}
+    n_pct = 0
+    for r in rows:
+        if r["distribution"] == "off":
+            continue
+        targets = sorted(k[len("lat_"):-len("_p50_ns")]
+                         for k in r if k.endswith("_p50_ns"))
+        assert targets, "distribution row carries no percentile columns"
+        for t in targets:
+            p50, p95, p99 = (r[f"lat_{t}_p{p}_ns"] for p in (50, 95, 99))
+            assert p50 <= p95 <= p99, \
+                f"percentiles not monotone for {t}: {p50}, {p95}, {p99}"
+            n_pct += 1
+            if r["topology"] == "direct2+ssd" and r["tiering"] != "static":
+                tail[t] = round(p99 / p50, 3) if p50 > 0 else None
+
+    # pallas backend: identical rows through the dynamic MESI kernel
+    t0 = time.time()
+    pal_rows = engine_mod.run_sweep(
+        dataclasses.replace(spec, backend="pallas"), cache, timing)
+    t_pal = time.time() - t0
+    pallas_equal = pal_rows == rows
+    assert pallas_equal, "pallas fidelity rows diverged from reference"
+
+    # MSHR backpressure: a small cap can only lengthen the runtime
+    capped = dataclasses.replace(
+        timing, cxl=dataclasses.replace(timing.cxl, mshr=4))
+    slow = engine_mod.run_sweep(
+        dataclasses.replace(spec, distributions=()), cache, capped)
+    mshr_slowdowns = [s["time_ns"] / r["time_ns"]
+                      for s, r in zip(slow, base) if r["time_ns"] > 0]
+    assert all(x >= 1.0 for x in mshr_slowdowns), \
+        "an MSHR cap must never speed a row up"
+    assert max(mshr_slowdowns) > 1.0, \
+        "a 4-entry CXL MSHR cap should throttle at least one row"
+
+    ssd_tail = tail.get("ssd0")
+    print(f"  sweep: {len(rows)} rows ({n_pct} percentile triples checked) "
+          f"cold {t_cold:.2f}s warm {t_warm:.2f}s pallas {t_pal:.2f}s")
+    print(f"  tails on direct2+ssd dynamic row (p99/p50): "
+          + ", ".join(f"{k}={v}" for k, v in sorted(tail.items())))
+    print(f"  mshr(cxl=4) slowdown: max {max(mshr_slowdowns):.3f}x")
+    report = {
+        "curves": curves,
+        "idle_floor_ns": idle_floor,
+        "ssd_idle_read_ns": ssd_rd,
+        "ssd_idle_write_ns": ssd_wr,
+        "distribution": dist.label,
+        "cold_s": round(t_cold, 4),
+        "warm_s": round(t_warm, 4),
+        "pallas_s": round(t_pal, 4),
+        "pallas_rows_bitwise_equal": pallas_equal,
+        "off_rows_bitwise_equal_legacy": legacy_equal,
+        "percentile_triples_checked": n_pct,
+        "tail_p99_over_p50": tail,
+        "mshr_cxl_cap": 4,
+        "mshr_max_slowdown": round(max(mshr_slowdowns), 4),
+        "rows": [{k: v for k, v in r.items() if k != "stats"}
+                 for r in rows],
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_fidelity.json"
+    out.write_text(json.dumps(report, indent=1) + "\n")
+    print(f"  p50<=p95<=p99 on all {n_pct} triples; off rows bitwise-"
+          f"legacy; pallas parity -> {out.name}")
+    emit("fidelity", t_warm * 1e6,
+         f"tail_ssd={ssd_tail};pct_triples={n_pct};"
+         f"mshr_slowdown={max(mshr_slowdowns):.3f}")
+
+
 def roofline_summary() -> None:
     """Digest of the dry-run-derived roofline (experiments/roofline)."""
     print("\n== roofline_summary (from multi-pod dry-run) ==")
@@ -1055,6 +1217,7 @@ BENCHES: Dict[str, Callable[[], None]] = {
     "distribute": distribute,
     "sampling": sampling,
     "resilience": resilience,
+    "fidelity": fidelity,
     "roofline_summary": roofline_summary,
 }
 

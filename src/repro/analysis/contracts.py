@@ -187,6 +187,33 @@ def _tiny_dyn_scalars():
     )
 
 
+def _tiny_dyn_ssd_scalars():
+    """Three-tier variant of the tiny dynamic row: a non-zero ``ssd_tid``
+    plus a finite ``cxl_cap`` turn on the Stage-B promote/demote path —
+    the device program behind the CXL-SSD tier and the
+    distribution-timing rows (percentiles are host-side NumPy over these
+    integer stats, so this jaxpr IS the distribution entry point)."""
+    sc = _tiny_dyn_scalars()
+    sc.update(
+        ssd_tid=np.asarray([1], np.int32),
+        cxl_cap=np.asarray([1], np.int32),
+    )
+    return sc
+
+
+def _trace_run_dynamic_ssd():
+    from repro.core import tiering_dyn
+
+    p = _tiny_params()
+    addr, is_write, core, tier = _tiny_trace(n=8)
+    scalars = _tiny_dyn_ssd_scalars()
+
+    def entry(a, w, c, t):
+        return tiering_dyn.run_dynamic(p, a, w, c, t, slot_len=4, k_max=1, **scalars)
+
+    return trace_entry(entry, addr[None], is_write[None], core[None], tier[None])
+
+
 def _workload_entries() -> List[Tuple[str, Callable, bool]]:
     from repro import workloads
 
@@ -217,6 +244,7 @@ def entry_points() -> List[Tuple[str, Callable, bool]]:
         ("run_dynamic[sampling]", _trace_run_dynamic_sampling, False),
         ("run_batch_segment[pallas]", _trace_run_segment_pallas, False),
         ("run_dynamic[pallas]", _trace_run_dynamic_pallas, False),
+        ("run_dynamic[ssd]", _trace_run_dynamic_ssd, False),
     ]
     return static + _workload_entries()
 
@@ -423,6 +451,47 @@ def check_stat_layout() -> List[Finding]:
                 f"pallas epoch-carry kernel disagrees with the "
                 f"reference dynamic scan on the tiny trace"
             )
+    # Three-tier (CXL-SSD) twin of the same triangulation: the Stage-B
+    # supply/demotion path must stay bitwise across backends too.
+    s_ref = tiering_dyn.run_dynamic(p, *dyn_args, slot_len=4, k_max=1,
+                                    **_tiny_dyn_ssd_scalars())
+    s_pal = tiering_dyn.run_dynamic(p, *dyn_args, slot_len=4, k_max=1,
+                                    backend="pallas",
+                                    **_tiny_dyn_ssd_scalars())
+    for f in s_ref._fields:
+        if not np.array_equal(np.asarray(getattr(s_ref, f)),
+                              np.asarray(getattr(s_pal, f))):
+            fail(
+                f"three-tier dynamic triangulation failed on `{f}`: the "
+                f"pallas Stage-B (SSD) path disagrees with the reference "
+                f"dynamic scan on the tiny trace"
+            )
+    # Distribution timing is host-side NumPy over these integer stats;
+    # its seeding contract rides RA404: counter-seeded strata must be
+    # deterministic across instances, sorted (so p50 <= p95 <= p99 by
+    # construction), and zero queueing excess must collapse every
+    # percentile to the deterministic fixed point — the legacy number.
+    from repro.core.timing import LatencyDistribution
+    dist = LatencyDistribution(n_samples=64, seed=5)
+    for tid in range(3):
+        x1 = dist.exp_strata(tid)
+        x2 = LatencyDistribution(n_samples=64, seed=5).exp_strata(tid)
+        if not np.array_equal(x1, x2):
+            fail(
+                f"distribution strata for target {tid} are not "
+                f"deterministic across LatencyDistribution instances"
+            )
+        if not np.all(np.diff(x1) >= 0):
+            fail(
+                f"distribution strata for target {tid} are not sorted: "
+                f"percentile monotonicity no longer holds by construction"
+            )
+    flat = dist.latency_percentiles(100.0, 100.0, 0)
+    if not np.all(np.asarray(flat) == 100.0):
+        fail(
+            "zero queueing excess does not collapse the latency "
+            "distribution to the deterministic fixed point"
+        )
     if not jnp.issubdtype(np.asarray(ref).dtype, np.integer):
         fail(f"simulate_trace stats dtype {np.asarray(ref).dtype} is not integer")
     return findings

@@ -475,6 +475,10 @@ class ShardedExecutor:
                                 b_pad, 1),
             "dram_cap": _pad_rows(jnp.asarray(tb.dram_cap, jnp.int32),
                                   b_pad, engine._UNBOUNDED_PAGES),
+            "ssd_tid": _pad_rows(jnp.asarray(tb.ssd_tid, jnp.int32),
+                                 b_pad, 0),
+            "cxl_cap": _pad_rows(jnp.asarray(tb.cxl_cap, jnp.int32),
+                                 b_pad, engine._UNBOUNDED_PAGES),
             "page_target_lines": _pad_rows(
                 jnp.asarray(tb.page_target_lines, jnp.int32), b_pad, 0),
             # sampling window scalars: zero fill = measure-every-slot
@@ -796,6 +800,10 @@ class ResilientExecutor:
                                  b_pad, 1),
                 dram_cap=_pad_rows(jnp.asarray(tb.dram_cap, jnp.int32),
                                    b_pad, engine._UNBOUNDED_PAGES),
+                ssd_tid=_pad_rows(jnp.asarray(tb.ssd_tid, jnp.int32),
+                                  b_pad, 0),
+                cxl_cap=_pad_rows(jnp.asarray(tb.cxl_cap, jnp.int32),
+                                  b_pad, engine._UNBOUNDED_PAGES),
                 page_target_lines=_pad_rows(
                     jnp.asarray(tb.page_target_lines, jnp.int32),
                     b_pad, 0),

@@ -60,7 +60,7 @@ from repro.core import route as route_mod
 from repro.core import sampling as sampling_mod
 from repro.core import tiering_dyn
 from repro.core.machine import CPUModel, RunResult, time_batch
-from repro.core.timing import TimingConfig
+from repro.core.timing import LatencyDistribution, TimingConfig
 
 if TYPE_CHECKING:  # deferred at runtime: workloads builds on core
     from repro.workloads.base import Workload
@@ -128,6 +128,16 @@ class SweepSpec:
         estimates with CLT confidence intervals (``*_ci95`` /
         ``sampled_frac`` row columns).  Mixed exact/sampled axes still
         run as ONE vmapped device program.  Empty = exact only.
+    distributions : tuple of Optional[timing.LatencyDistribution]
+        Scenario axis #5: load-dependent latency *distributions*
+        (:class:`repro.core.timing.LatencyDistribution`).  The axis only
+        varies the analytic timing layer — like `cpus`, the device
+        program runs ONCE and each entry re-closes the Picard fixed
+        point, ``None`` entries bitwise-identical to the legacy
+        deterministic rows (test-enforced) and distribution entries
+        adding per-target ``lat_<t>_p50/p95/p99_ns`` row columns from
+        counter-seeded stratified sampling (bitwise-reproducible across
+        backends and runs).  Empty = deterministic point timing only.
     """
     footprint_factors: Tuple[int, ...] = (2, 4, 6, 8)
     policies: Tuple[numa_mod.Policy, ...] = (numa_mod.ZNuma(1.0),)
@@ -138,6 +148,7 @@ class SweepSpec:
     workloads: Tuple["Workload", ...] = ()
     tiering: Tuple[Optional[tiering_dyn.DynamicTiering], ...] = ()
     sampling: Tuple[Optional[sampling_mod.SamplingSpec], ...] = ()
+    distributions: Tuple[Optional[LatencyDistribution], ...] = ()
 
     @property
     def workload_axis(self) -> Tuple["Workload", ...]:
@@ -170,6 +181,12 @@ class SweepSpec:
             Optional[sampling_mod.SamplingSpec], ...]:
         """The sampling loop: `(None,)` = exact simulation only."""
         return self.sampling if self.sampling else (None,)
+
+    @property
+    def distributions_axis(self) -> Tuple[
+            Optional[LatencyDistribution], ...]:
+        """The latency-distribution loop: `(None,)` = point timing."""
+        return self.distributions if self.distributions else (None,)
 
 
 # ---------------------------------------------------------------------------
@@ -636,6 +653,7 @@ class LocalExecutor:
             n_pages=tb.n_pages, budget=tb.budget, threshold=tb.threshold,
             period=tb.period, dram_cap=tb.dram_cap,
             page_target_lines=tb.page_target_lines,
+            ssd_tid=tb.ssd_tid, cxl_cap=tb.cxl_cap,
             s_warm=tb.s_warm, s_meas=tb.s_meas, s_per=tb.s_per,
             backend=backend)
 
@@ -717,25 +735,31 @@ def run_sweep(spec: SweepSpec, cache: cache_mod.CacheParams,
                             fault_plan=fault_plan, report=report)
     rows: List[Dict] = []
     i = 0
-    for sp in spec.sampling_axis:
-        for tr in spec.tiering_axis:
-            for topo in spec.topology_axis:
-                for wl, k, pol in spec.sim_cells:
-                    for _cpu in spec.cpus:
-                        r = results[i]
-                        row = {"workload": wl.name, "footprint_x_l2": k,
-                               "policy": numa_mod.describe(pol),
-                               "cpu": r.cpu, **r.row(), "stats": r.stats}
-                        if isinstance(wl, Stream):  # STREAM only
-                            row["kernel"] = wl.kernel
-                        if topo is not None:
-                            row["topology"] = topo.name
-                        if spec.tiering:
-                            row["tiering"] = tiering_dyn.describe(tr)
-                        if spec.sampling:
-                            row["sampling"] = sampling_mod.describe(sp)
-                        rows.append(row)
-                        i += 1
+    for dist in spec.distributions_axis:
+        for sp in spec.sampling_axis:
+            for tr in spec.tiering_axis:
+                for topo in spec.topology_axis:
+                    for wl, k, pol in spec.sim_cells:
+                        for _cpu in spec.cpus:
+                            r = results[i]
+                            row = {"workload": wl.name,
+                                   "footprint_x_l2": k,
+                                   "policy": numa_mod.describe(pol),
+                                   "cpu": r.cpu, **r.row(),
+                                   "stats": r.stats}
+                            if isinstance(wl, Stream):  # STREAM only
+                                row["kernel"] = wl.kernel
+                            if topo is not None:
+                                row["topology"] = topo.name
+                            if spec.tiering:
+                                row["tiering"] = tiering_dyn.describe(tr)
+                            if spec.sampling:
+                                row["sampling"] = sampling_mod.describe(sp)
+                            if spec.distributions:
+                                row["distribution"] = (
+                                    "off" if dist is None else dist.label)
+                            rows.append(row)
+                            i += 1
     return rows
 
 
@@ -787,26 +811,38 @@ def sweep_results(spec: SweepSpec, cache: cache_mod.CacheParams,
     n_cells = len(cells)
     rows_cpus = [wl.cpu_for(cpu) for wl, _k, _pol in cells
                  for cpu in spec.cpus]
-    results: List[RunResult] = []
-    for ti, route in enumerate(routes):
-        # gather this topology's cells (policy-duplicate cells share rows)
-        block = stats[cell_rows[ti * n_cells:(ti + 1) * n_cells]]
-        t_route = 2 if route is None else route.n_targets
-        block = _narrow_stats(block, t_max, t_route)
-        rows_stats = np.repeat(block, len(spec.cpus), axis=0)
-        results.extend(time_batch(timing, rows_cpus, rows_stats,
-                                  route=route))
-    # explicit all-None tiering/sampling axes repeat the static block
-    # per entry — independent copies, so no rows share mutable state
-    out = list(results)
-    n_copies = len(spec.sampling_axis) * len(spec.tiering_axis)
-    for _ in range(n_copies - 1):
-        out.extend(dataclasses.replace(
-            r, stats=dict(r.stats), miss_rates=dict(r.miss_rates),
-            achieved_gbps=dict(r.achieved_gbps),
-            loaded_latency_ns=dict(r.loaded_latency_ns))
-            for r in results)
+    out: List[RunResult] = []
+    # the distributions axis only re-closes the timing fixed point — the
+    # device program above ran once for every entry
+    for dist in spec.distributions_axis:
+        results: List[RunResult] = []
+        for ti, route in enumerate(routes):
+            # gather this topology's cells (policy-duplicate cells
+            # share rows)
+            block = stats[cell_rows[ti * n_cells:(ti + 1) * n_cells]]
+            t_route = 2 if route is None else route.n_targets
+            block = _narrow_stats(block, t_max, t_route)
+            rows_stats = np.repeat(block, len(spec.cpus), axis=0)
+            results.extend(time_batch(timing, rows_cpus, rows_stats,
+                                      route=route, dist=dist))
+        # explicit all-None tiering/sampling axes repeat the static
+        # block per entry — independent copies, so no rows share
+        # mutable state
+        out.extend(results)
+        n_copies = len(spec.sampling_axis) * len(spec.tiering_axis)
+        for _ in range(n_copies - 1):
+            out.extend(_copy_result(r) for r in results)
     return out
+
+
+def _copy_result(r: RunResult) -> RunResult:
+    """Independent copy of a RunResult (no shared mutable containers)."""
+    return dataclasses.replace(
+        r, stats=dict(r.stats), miss_rates=dict(r.miss_rates),
+        achieved_gbps=dict(r.achieved_gbps),
+        loaded_latency_ns=dict(r.loaded_latency_ns),
+        lat_percentiles=(None if r.lat_percentiles is None else
+                         {k: dict(v) for k, v in r.lat_percentiles.items()}))
 
 
 # ---------------------------------------------------------------------------
@@ -822,12 +858,14 @@ class TieringBatch:
     """
     batch: TraceBatch
     dyn_flag: np.ndarray            # (B,)  1 = page map routes, 0 = static
-    page_map0: Array                # (B, P) initial page -> {0, 1}
+    page_map0: Array                # (B, P) initial page -> {0, 1[, 2]}
     n_pages: np.ndarray             # (B,)
     budget: np.ndarray              # (B,)
     threshold: np.ndarray           # (B,)
     period: np.ndarray              # (B,) slots per epoch
     dram_cap: np.ndarray            # (B,)
+    ssd_tid: np.ndarray             # (B,) SSD target id; 0 = two-tier row
+    cxl_cap: np.ndarray             # (B,) level-1 capacity (pages)
     page_target_lines: Array        # (B, P, T)
     s_warm: np.ndarray              # (B,) sampling warm slots (scan units)
     s_meas: np.ndarray              # (B,) sampling measure slots
@@ -916,8 +954,14 @@ def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
                             cap = (tr.dram_capacity_pages
                                    if tr.dram_capacity_pages is not None
                                    else _UNBOUNDED_PAGES)
+                            ssd_t = (0 if route is None
+                                     else route.ssd_tid)
+                            l1cap = (tr.cxl_capacity_pages
+                                     if tr.cxl_capacity_pages is not None
+                                     else _UNBOUNDED_PAGES)
                             sc = (1, wt.n_pages, tr.budget, tr.threshold,
-                                  tr.epoch_len // slot, cap, 0)
+                                  tr.epoch_len // slot, cap, ssd_t,
+                                  l1cap)
                         else:
                             # static rows: precomputed final targets,
                             # exactly the legacy build_sweep_batch math
@@ -933,7 +977,7 @@ def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
                                     pol, wt.addr, wt.n_pages)
                             pmap0 = jnp.ones((wt.n_pages,), jnp.int32)
                             sc = (0, wt.n_pages, 0, 1, 1,
-                                  _UNBOUNDED_PAGES, 0)
+                                  _UNBOUNDED_PAGES, 0, _UNBOUNDED_PAGES)
                         if wt.n_pages < p_max:  # pad: CXL, never eligible
                             pmap0 = jnp.concatenate([
                                 jnp.asarray(pmap0, jnp.int32),
@@ -949,9 +993,10 @@ def build_tiering_batch(spec: SweepSpec, cache: cache_mod.CacheParams,
     return TieringBatch(
         batch=batch, dyn_flag=sc[:, 0], page_map0=jnp.stack(pmap0s),
         n_pages=sc[:, 1], budget=sc[:, 2], threshold=sc[:, 3],
-        period=sc[:, 4], dram_cap=sc[:, 5],
-        page_target_lines=jnp.stack([ptl_of[ti] for ti in sc[:, 10]]),
-        s_warm=sc[:, 7], s_meas=sc[:, 8], s_per=sc[:, 9],
+        period=sc[:, 4], dram_cap=sc[:, 5], ssd_tid=sc[:, 6],
+        cxl_cap=sc[:, 7],
+        page_target_lines=jnp.stack([ptl_of[ti] for ti in sc[:, 11]]),
+        s_warm=sc[:, 8], s_meas=sc[:, 9], s_per=sc[:, 10],
         cell_rows=cell_rows)
 
 
@@ -1021,42 +1066,49 @@ def _sweep_results_dynamic(spec: SweepSpec, cache: cache_mod.CacheParams,
         return est_of[br]
 
     results: List[RunResult] = []
-    for si, sp in enumerate(spec.sampling_axis):
-        for tri, tr in enumerate(spec.tiering_axis):
-            for ti, route in enumerate(routes):
-                base = ((si * n_tier + tri) * len(routes) + ti) * n_cells
-                block_rows = tb.cell_rows[base:base + n_cells]
-                t_route = 2 if route is None else route.n_targets
-                if sp is None:
-                    block = stats[block_rows]
-                    ests = None
-                else:
-                    ests = [_est(br, sp) for br in block_rows]
-                    block = np.stack([e.stats for e in ests])
-                block = _narrow_stats(block, t_max, t_route)
-                mig_block = mig[block_rows][:, :, :t_route]
-                rows_stats = np.repeat(block, n_cpus, axis=0)
-                rows_mig = np.repeat(mig_block, n_cpus, axis=0)
-                res = time_batch(timing, rows_cpus, rows_stats,
-                                 route=route, mig_lines=rows_mig)
-                if tr is not None:
-                    period = tr.epoch_len // slot
-                    for j, r in enumerate(res):
-                        br = block_rows[j // n_cpus]
-                        r.migrated_pages = int(slots[br, :, 2].sum()
-                                               + slots[br, :, 3].sum())
-                        r.epoch_dram_frac = tiering_dyn.epoch_fractions(
-                            slots[br], period)
-                if ests is not None:
-                    nidx = _narrow_idx(t_max, t_route)
-                    names = cache_mod.stat_names(t_route)
-                    for j, r in enumerate(res):
-                        e = ests[j // n_cpus]
-                        r.sampled_frac = e.sampled_frac
-                        r.sample_windows = e.n_windows
-                        r.stats_ci95 = {
-                            nm: float(e.ci[ci]) for nm, ci
-                            in zip(names, nidx)}
-                        r.l2_miss_rate_ci95 = e.l2_miss_rate_ci()[1]
-                results.extend(res)
+    # the distributions axis only re-closes the timing fixed point —
+    # the epoch-structured device program above ran once
+    for dist in spec.distributions_axis:
+        for si, sp in enumerate(spec.sampling_axis):
+            for tri, tr in enumerate(spec.tiering_axis):
+                for ti, route in enumerate(routes):
+                    base = (((si * n_tier + tri) * len(routes) + ti)
+                            * n_cells)
+                    block_rows = tb.cell_rows[base:base + n_cells]
+                    t_route = 2 if route is None else route.n_targets
+                    if sp is None:
+                        block = stats[block_rows]
+                        ests = None
+                    else:
+                        ests = [_est(br, sp) for br in block_rows]
+                        block = np.stack([e.stats for e in ests])
+                    block = _narrow_stats(block, t_max, t_route)
+                    mig_block = mig[block_rows][:, :, :t_route]
+                    rows_stats = np.repeat(block, n_cpus, axis=0)
+                    rows_mig = np.repeat(mig_block, n_cpus, axis=0)
+                    res = time_batch(timing, rows_cpus, rows_stats,
+                                     route=route, mig_lines=rows_mig,
+                                     dist=dist)
+                    if tr is not None:
+                        period = tr.epoch_len // slot
+                        for j, r in enumerate(res):
+                            br = block_rows[j // n_cpus]
+                            r.migrated_pages = int(
+                                slots[br, :, 2].sum()
+                                + slots[br, :, 3].sum())
+                            r.epoch_dram_frac = \
+                                tiering_dyn.epoch_fractions(
+                                    slots[br], period)
+                    if ests is not None:
+                        nidx = _narrow_idx(t_max, t_route)
+                        names = cache_mod.stat_names(t_route)
+                        for j, r in enumerate(res):
+                            e = ests[j // n_cpus]
+                            r.sampled_frac = e.sampled_frac
+                            r.sample_windows = e.n_windows
+                            r.stats_ci95 = {
+                                nm: float(e.ci[ci]) for nm, ci
+                                in zip(names, nidx)}
+                            r.l2_miss_rate_ci95 = e.l2_miss_rate_ci()[1]
+                    results.extend(res)
     return results

@@ -27,7 +27,7 @@ from repro.core import cache as cache_sim
 from repro.core import numa as numa_mod
 from repro.core.spec import CACHELINE_BYTES
 from repro.core.switch import shared_usp_latency_ns
-from repro.core.timing import TimingConfig
+from repro.core.timing import LatencyDistribution, TimingConfig
 
 if TYPE_CHECKING:  # import cycle: route builds on timing, machine on route
     from repro.core.route import RouteMap
@@ -109,6 +109,12 @@ class RunResult:
         Number of (non-empty) measurement windows the estimate used.
     l2_miss_rate_ci95 : float, optional
         CI half-width of the L2 miss rate (sampled rows only).
+    lat_percentiles : dict, optional
+        Per-target latency percentiles (``{label: {"p50": ..., "p95":
+        ..., "p99": ...}}``) sampled from the queueing-derived latency
+        distribution (:class:`repro.core.timing.LatencyDistribution`).
+        ``None`` on deterministic rows — `row()` then omits every
+        ``lat_*_p*_ns`` column, keeping the legacy schema bit-identical.
     """
     stats: Dict[str, int]
     miss_rates: Dict[str, float]
@@ -123,11 +129,13 @@ class RunResult:
     sampled_frac: Optional[float] = None
     sample_windows: Optional[int] = None
     l2_miss_rate_ci95: Optional[float] = None
+    lat_percentiles: Optional[Dict[str, Dict[str, float]]] = None
 
     def per_target_keys(self) -> List[str]:
-        """Ordered per-target CXL labels ('cxl0', 'cxl1', ...) if routed."""
+        """Ordered per-target labels ('cxl0', ..., 'ssd0', ...) if routed."""
         per = [k for k in self.achieved_gbps
-               if k.startswith("cxl") and k != "cxl"]
+               if (k.startswith("cxl") and k != "cxl")
+               or (k.startswith("ssd") and k != "ssd")]
         return sorted(per, key=lambda s: (len(s), s))
 
     def row(self) -> Dict[str, float]:
@@ -142,6 +150,10 @@ class RunResult:
             "lat_dram_ns": self.loaded_latency_ns["dram"],
             "lat_cxl_ns": self.loaded_latency_ns["cxl"],
         }
+        # ssd aggregate (only when the route has a flash-backed tier)
+        if "ssd" in self.achieved_gbps:
+            out["bw_ssd_gbps"] = self.achieved_gbps["ssd"]
+            out["lat_ssd_ns"] = self.loaded_latency_ns["ssd"]
         # per-target columns (multi-expander routes: cxl0, cxl1, ...)
         for k in self.per_target_keys():
             out[f"bw_{k}_gbps"] = self.achieved_gbps[k]
@@ -159,6 +171,12 @@ class RunResult:
             out["sampled_frac"] = self.sampled_frac
             out["sample_windows"] = self.sample_windows
             out["l2_miss_rate_ci95"] = self.l2_miss_rate_ci95
+        # latency-distribution columns (only on distribution-enabled
+        # rows; deterministic rows keep the exact schema of today)
+        if self.lat_percentiles is not None:
+            for k, qs in self.lat_percentiles.items():
+                for pname, v in qs.items():
+                    out[f"lat_{k}_{pname}_ns"] = v
         return out
 
 
@@ -258,7 +276,9 @@ def per_target_bw_columns(row: Dict) -> List[str]:
 def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
                stats: np.ndarray,
                route: "Optional[RouteMap]" = None,
-               mig_lines: Optional[np.ndarray] = None) -> List[RunResult]:
+               mig_lines: Optional[np.ndarray] = None,
+               dist: Optional[LatencyDistribution] = None
+               ) -> List[RunResult]:
     """Close the Picard timing fixed point for a whole batch at once.
 
     The loaded-latency curve is monotone, so a handful of Picard iterations
@@ -307,6 +327,21 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
         groups and bandwidth floors as the workload's own misses —
         first-class bandwidth contention, reported per row as
         ``RunResult.migration_gbps``.
+    dist : LatencyDistribution, optional
+        Widen each target's converged latency point into a
+        queueing-derived distribution and attach per-target
+        ``lat_percentiles`` to every row (counter-seeded SplitMix64
+        jitter: pure host-side numpy over the converged fixed point, so
+        distribution rows inherit the integer stats' bitwise
+        backend/segment invariance).  ``None`` (default) keeps the
+        legacy deterministic result, bitwise.
+
+    Backpressure: a target timing with ``mshr`` set caps its
+    sustainable bandwidth at ``mshr * CACHELINE_BYTES / latency``
+    (Little's law on the outstanding-request window) *inside* the
+    Picard iteration — latency growth under load feeds back into the
+    bandwidth floor.  ``mshr=None`` (default) is the legacy unlimited
+    window.
 
     Returns
     -------
@@ -385,7 +420,7 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
                 # shared USP: the queue sees the whole group's load
                 loaded = shared_usp_latency_ns(
                     timings[k], gpay[groups[k]], goff[groups[k]])
-            elif kinds[k] == "cxl":
+            elif kinds[k] in ("cxl", "ssd"):
                 loaded = np.asarray(
                     timings[k].loaded_latency_ns(offered[k], rf), np.float64)
             else:
@@ -394,17 +429,31 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
             lat[k] = np.where(done | ~has, lat[k], loaded)
             # MLP-overlapped stalls, floored by the bandwidth bound
             t_lat = lines[k] * lat[k] / mlp
+            mshr = getattr(timings[k], "mshr", None)
             if groups[k] >= 0:
                 glat[groups[k]] = glat[groups[k]] + np.where(has, t_lat, 0.0)
                 # this endpoint's own link/media ceiling (devices drain in
                 # parallel, so the group keeps the max member floor)
-                t_bw = bytes_[k] / device_payload[k]
+                if mshr is None:
+                    t_bw = bytes_[k] / device_payload[k]
+                else:
+                    eff = np.minimum(
+                        device_payload[k],
+                        mshr * CACHELINE_BYTES / np.maximum(lat[k], 1.0))
+                    t_bw = bytes_[k] / np.maximum(eff, 1e-9)
                 gbw[groups[k]] = np.maximum(gbw[groups[k]],
                                             np.where(has, t_bw, 0.0))
             else:
                 peak = (timings[k].peak_gbps if kinds[k] == "dram"
                         else timings[k].payload_gbps(rf))
-                t_bw = bytes_[k] / peak
+                if mshr is None:
+                    t_bw = bytes_[k] / peak
+                else:
+                    # Little's law: at most `mshr` lines in flight, each
+                    # resident for the current loaded latency
+                    eff = np.minimum(
+                        peak, mshr * CACHELINE_BYTES / np.maximum(lat[k], 1.0))
+                    t_bw = bytes_[k] / np.maximum(eff, 1e-9)
                 stall += np.where(has, np.maximum(t_lat, t_bw), 0.0)
         for g in gids:
             # group bandwidth floor: aggregate bytes over the USP payload,
@@ -421,8 +470,19 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
 
     t_rep = np.where(n_acc > 0, t, 0.0)
     ach = [bytes_[k] / np.maximum(t, 1.0) for k in range(n_t)]
-    labels = (["dram", "cxl"] if n_t == 2
-              else ["dram"] + [f"cxl{k}" for k in range(n_t - 1)])
+    has_ssd = any(kind == "ssd" for kind in kinds)
+    if n_t == 2 and not has_ssd:
+        labels = ["dram", "cxl"]
+    else:
+        labels, counters = ["dram"], {"cxl": 0, "ssd": 0}
+        for kind in kinds[1:]:
+            key = "ssd" if kind == "ssd" else "cxl"
+            labels.append(f"{key}{counters[key]}")
+            counters[key] += 1
+    if dist is not None:
+        pnames = [f"p{round(p * 100)}" for p in dist.percentiles]
+        qfac = [dist.quantile_factors(k) for k in range(n_t)]
+        idle = [timings[k].idle_ns for k in range(n_t)]
     names = cache_sim.stat_names(n_t)
     results: List[RunResult] = []
     for i in range(b):
@@ -434,20 +494,33 @@ def time_batch(timing: TimingConfig, cpus: Sequence[CPUModel],
               "llc_mpki": 1000.0 * s["l2_miss"] / na}
         a = {labels[k]: float(ach[k][i]) for k in range(n_t)}
         latd = {labels[k]: float(lat[k][i]) for k in range(n_t)}
-        if n_t != 2:
-            # aggregates over all CXL targets: total bw, line-weighted lat
-            a["cxl"] = float(sum(ach[k][i] for k in range(1, n_t)))
-            cxl_lines = float(sum(lines[k][i] for k in range(1, n_t)))
-            cxl_lats = [lat[k][i] for k in range(1, n_t)]
-            if cxl_lines > 0:
-                latd["cxl"] = float(sum(lines[k][i] * lat[k][i]
-                                        for k in range(1, n_t))) / cxl_lines
-            else:
-                latd["cxl"] = float(np.mean(cxl_lats)) if cxl_lats else 0.0
-        a["total"] = a["dram"] + a["cxl"]
+        if n_t != 2 or has_ssd:
+            # aggregates per kind: total bw, line-weighted latency
+            for agg, member in (("cxl", lambda k: kinds[k] != "ssd"),
+                                ("ssd", lambda k: kinds[k] == "ssd")):
+                if agg == "ssd" and not has_ssd:
+                    continue
+                ks = [k for k in range(1, n_t) if member(k)]
+                a[agg] = float(sum(ach[k][i] for k in ks))
+                agg_lines = float(sum(lines[k][i] for k in ks))
+                agg_lats = [lat[k][i] for k in ks]
+                if agg_lines > 0:
+                    latd[agg] = float(sum(lines[k][i] * lat[k][i]
+                                          for k in ks)) / agg_lines
+                else:
+                    latd[agg] = float(np.mean(agg_lats)) if agg_lats else 0.0
+        a["total"] = a["dram"] + a["cxl"] + a.get("ssd", 0.0)
+        lp = None
+        if dist is not None:
+            lp = {labels[k]: {pn: float(idle[k]
+                                        + max(lat[k][i] - idle[k], 0.0)
+                                        * qfac[k][j])
+                              for j, pn in enumerate(pnames)}
+                  for k in range(n_t)}
         results.append(RunResult(
             stats=s, miss_rates=mr, time_ns=float(t_rep[i]),
             achieved_gbps=a, loaded_latency_ns=latd,
             cpu=cpus[i].kind,
-            migration_gbps=float(mig_bytes[i] / max(t[i], 1.0))))
+            migration_gbps=float(mig_bytes[i] / max(t[i], 1.0)),
+            lat_percentiles=lp))
     return results

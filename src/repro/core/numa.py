@@ -114,7 +114,8 @@ def first_touch_page_map(tier: Array, line_addr: Array, n_pages: int,
     Parameters
     ----------
     tier : (N,) int array
-        Per-access tier intent (0 = DRAM, nonzero = CXL).
+        Per-access tier intent (0 = DRAM, 1 = CXL, 2 = CXL-SSD; higher
+        levels clamp to 2).
     line_addr : (N,) int array
         Line-granular trace; sentinel entries (< 0) are ignored.
     n_pages : int
@@ -126,10 +127,11 @@ def first_touch_page_map(tier: Array, line_addr: Array, n_pages: int,
     Returns
     -------
     (n_pages,) int32 array
-        Binary page map, 0 = DRAM, 1 = CXL.
+        Page map, 0 = DRAM, 1 = CXL, 2 = CXL-SSD (binary on two-tier
+        tier streams — bitwise-unchanged from the historical map).
     """
     line = xp.asarray(line_addr, xp.int32)
-    tier = (xp.asarray(tier, xp.int32) != 0).astype(xp.int32)
+    tier = xp.clip(xp.asarray(tier, xp.int32), 0, 2)
     n = line.shape[0]
     page = xp.clip(line // LINES_PER_PAGE, 0, n_pages - 1)
     order = xp.arange(n, dtype=xp.int32)

@@ -37,7 +37,7 @@ from repro.core import numa as numa_mod
 from repro.core import topology as topo
 from repro.core.hdm import InterleaveProgram
 from repro.core.switch import SwitchConfig, fanout_timing, usp_payload_gbps
-from repro.core.timing import CXLTiming, DramTiming, TimingConfig
+from repro.core.timing import CXLTiming, DramTiming, SSDTiming, TimingConfig
 
 Array = jax.Array
 
@@ -53,18 +53,25 @@ class TopologySpec:
     K-way interleaved region (the firmware CFMWS covers their combined
     capacity).  `switch` places every endpoint behind a single CXL 2.0
     switch: +2 hop latency and a shared-USP bandwidth group.
+
+    ``ssd_gib > 0`` additionally attaches one CXL-SSD (flash media,
+    :class:`~repro.core.timing.SSDTiming`) on its **own** host bridge —
+    its own CFMWS window / region, never interleaved with the DRAM
+    expanders — as the third tier the dynamic tierer can demote cold
+    pages into.
     """
     name: str
     expander_gib: Tuple[int, ...] = (16,)
     switch: Optional[SwitchConfig] = None
     dram_gib: int = 16
+    ssd_gib: int = 0
 
     @property
     def n_expanders(self) -> int:
         return len(self.expander_gib)
 
 
-def direct(n: int = 1, gib: int = 16) -> TopologySpec:
+def direct(n: int = 1, gib: int = 16, ssd_gib: int = 0) -> TopologySpec:
     """`n` direct-attach expanders, n-way interleaved under one bridge.
 
     Parameters
@@ -73,13 +80,19 @@ def direct(n: int = 1, gib: int = 16) -> TopologySpec:
         Expander count (HDM interleave ways).
     gib : int
         Capacity per expander, GiB.
+    ssd_gib : int
+        Capacity of an optional CXL-SSD third tier on its own host
+        bridge (0 = none, the legacy two-tier topology).
 
     Returns
     -------
     TopologySpec
-        Named ``direct{n}``, sweepable via `SweepSpec.topologies`.
+        Named ``direct{n}`` (``direct{n}+ssd`` with an SSD tier),
+        sweepable via `SweepSpec.topologies`.
     """
-    return TopologySpec(name=f"direct{n}", expander_gib=(gib,) * n)
+    suffix = "+ssd" if ssd_gib else ""
+    return TopologySpec(name=f"direct{n}{suffix}",
+                        expander_gib=(gib,) * n, ssd_gib=ssd_gib)
 
 
 def switched(n: int = 4, gib: int = 16,
@@ -122,8 +135,8 @@ class Target:
     """
     tid: int
     name: str
-    kind: str                                  # 'dram' | 'cxl'
-    timing: Union[DramTiming, CXLTiming]
+    kind: str                                  # 'dram' | 'cxl' | 'ssd'
+    timing: Union[DramTiming, CXLTiming, SSDTiming]
     group: int = -1
     group_payload_gbps: float = 0.0
     device_payload_gbps: float = 0.0
@@ -135,10 +148,19 @@ class RouteMap:
 
     `programs[i].targets` hold *global* target ids (not region-local way
     indices), so decode output indexes `targets` directly.
+
+    ``ssd_tid`` is the global target id of the (at most one) CXL-SSD
+    target, or 0 when the route has none — target 0 is always local
+    DRAM, so 0 doubles as "no SSD tier".  The SSD's region program is
+    *excluded* from ``programs``: the HDM decode of CXL-intent lines
+    never lands there; only a tier value >= 2 (the dynamic tierer's
+    demotion level, or a workload's own 3-level residency map) routes
+    to it.
     """
     name: str
     targets: Tuple[Target, ...]
     programs: Tuple[InterleaveProgram, ...]
+    ssd_tid: int = 0
 
     @property
     def n_targets(self) -> int:
@@ -189,7 +211,9 @@ class RouteMap:
         Parameters
         ----------
         tier : (N,) int32 array
-            Per-access intent: 0 = local DRAM, nonzero = the CXL window.
+            Per-access intent: 0 = local DRAM, nonzero = the CXL window
+            — except on a route with an SSD tier (``ssd_tid > 0``),
+            where >= 2 routes to the flash-backed target instead.
         line_addr : (N,) int32 array
             Window-relative cacheline indices.
 
@@ -199,10 +223,16 @@ class RouteMap:
             Global target ids: 0 = DRAM, 1..K = expander endpoints.
         """
         tier = jnp.asarray(tier, jnp.int32)
-        if not self.programs:              # no CXL capacity: all DRAM
+        if not self.programs:              # no CXL-DRAM capacity
+            if self.ssd_tid:
+                return jnp.where(tier >= 2, self.ssd_tid, 0
+                                 ).astype(jnp.int32)
             return jnp.zeros_like(tier)
         cxl_t = self.cxl_targets_of_lines(line_addr)
-        return jnp.where(tier == 0, 0, cxl_t).astype(jnp.int32)
+        routed = jnp.where(tier == 0, 0, cxl_t)
+        if self.ssd_tid:
+            routed = jnp.where(tier >= 2, self.ssd_tid, routed)
+        return routed.astype(jnp.int32)
 
     def cxl_targets_of_lines(self, line_addr: Array) -> Array:
         """The endpoint each line hits *if* it is CXL-resident.
@@ -329,10 +359,29 @@ def build_route_from_system(sysmap: topo.SystemMap, timing: TimingConfig,
     """
     targets: List[Target] = [Target(0, "dram", "dram", timing.dram)]
     programs: List[InterleaveProgram] = []
+    ssd_tid = 0
     if switch is not None:
         eff = fanout_timing(timing.cxl, switch)
         usp = usp_payload_gbps(switch)
     for region in sysmap.regions:
+        medias = {dev.media for dev in region.devices}
+        if medias == {"flash"}:
+            # the CXL-SSD tier: its own region, never HDM-interleaved
+            # with the DRAM expanders and never a policy decode target —
+            # only explicit tier >= 2 intent (demotion / offload) routes
+            # here, so its program is left out of `programs`.
+            if len(region.devices) != 1 or ssd_tid:
+                raise ValueError("at most one CXL-SSD target per route")
+            if switch is not None:
+                raise ValueError("a CXL-SSD cannot share the switch "
+                                 "group with DRAM expanders")
+            ssd_tid = len(targets)
+            targets.append(Target(ssd_tid, region.devices[0].name, "ssd",
+                                  timing.ssd))
+            continue
+        if "flash" in medias:
+            raise ValueError("flash and dram media cannot interleave in "
+                             "one region; give the SSD its own bridge")
         tids = []
         for dev in region.devices:
             tid = len(targets)
@@ -348,7 +397,7 @@ def build_route_from_system(sysmap: topo.SystemMap, timing: TimingConfig,
         programs.append(dataclasses.replace(region.program,
                                             targets=tuple(tids)))
     return RouteMap(name=name, targets=tuple(targets),
-                    programs=tuple(programs))
+                    programs=tuple(programs), ssd_tid=ssd_tid)
 
 
 def build_route(spec: TopologySpec, timing: TimingConfig) -> RouteMap:
@@ -374,6 +423,11 @@ def build_route(spec: TopologySpec, timing: TimingConfig) -> RouteMap:
     for i, gib in enumerate(spec.expander_gib):
         sys_.add_expander(f"{spec.name}.mem{i}", gib * topo.GiB,
                           bridge_uid=0)
+    if spec.ssd_gib:
+        # the SSD gets its own host bridge => its own CFMWS window and
+        # region, enumerated after the DRAM expanders
+        sys_.add_expander(f"{spec.name}.ssd", spec.ssd_gib * topo.GiB,
+                          bridge_uid=1, media="flash")
     sysmap = topo.enumerate_system(sys_)
     return build_route_from_system(sysmap, timing, switch=spec.switch,
                                    name=spec.name)

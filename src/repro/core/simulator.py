@@ -117,6 +117,7 @@ class CXLRAMSim:
               workloads: Optional[Sequence] = None,
               tiering: Optional[Sequence] = None,
               sampling: Optional[Sequence] = None,
+              distributions: Optional[Sequence] = None,
               mesh=None,
               stream_chunk: Optional[int] = None,
               resume=None,
@@ -140,7 +141,12 @@ class CXLRAMSim:
         exact, bitwise-equal to today's rows) to run SMARTS-style
         sampled simulation — detailed measurement windows scaled to
         whole-trace estimates with ``*_ci95`` confidence columns — see
-        ``docs/sampling.md``.
+        ``docs/sampling.md``.  Pass
+        :class:`repro.core.timing.LatencyDistribution` entries (``None``
+        = deterministic point timing, bitwise-equal to today's rows) to
+        sweep queueing-derived latency *distributions* — rows gain
+        per-target ``lat_<t>_p50/p95/p99_ns`` percentile columns — see
+        ``docs/fidelity.md``.
 
         `mesh` shards the grid's batch rows across devices (a
         :class:`repro.core.distribute.Mesh` or an int shard count) and
@@ -172,7 +178,8 @@ class CXLRAMSim:
             topologies=tuple(topologies) if topologies else (),
             workloads=tuple(workloads) if workloads else (),
             tiering=tuple(tiering) if tiering else (),
-            sampling=tuple(sampling) if sampling else ())
+            sampling=tuple(sampling) if sampling else (),
+            distributions=tuple(distributions) if distributions else ())
         if (mesh is None and stream_chunk is None and resume is None
                 and fault_plan is None and report is None):
             return engine_mod.run_sweep(spec, self.config.cache,

@@ -212,6 +212,17 @@ HOST_DRAM_GBPS = 307.2               # 8-channel DDR5 host
 CXL_X16_GBPS = 63.0                  # raw gen5 x16 per direction
 CXL_X8_GBPS = 31.5
 
+# CXL-SSD expander (flash-backed .mem device with an internal DRAM
+# cache; cf. the CXL-SSD full-system simulation line of work).  Media
+# latencies are flash-article values, asymmetric read/write; the cache
+# hit path is DRAM-speed behind the same CXL pipeline.
+SSD_READ_LATENCY_NS = 3_000.0        # flash page read (media miss)
+SSD_WRITE_LATENCY_NS = 20_000.0      # flash program
+SSD_CACHE_HIT_LATENCY_NS = 350.0     # internal DRAM cache hit (incl. link)
+SSD_CACHE_HIT_FRAC = 0.6             # default internal cache hit rate
+SSD_READ_GBPS = 6.0                  # sustained media read bandwidth
+SSD_WRITE_GBPS = 2.0                 # sustained media program bandwidth
+
 # TPU v5e roofline constants (used by roofline/ and memory/tiering)
 TPU_V5E_BF16_FLOPS = 197e12
 TPU_V5E_HBM_GBPS = 819e9

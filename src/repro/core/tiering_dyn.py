@@ -44,6 +44,21 @@ precomputed per-access targets flagged as an override) never migrates
 and its stats are bitwise-equal to the legacy static path — which is
 how ``SweepSpec.tiering`` mixes ``None`` and dynamic entries in ONE
 vmapped device program (test-enforced).
+
+Three tiers (DRAM → CXL-DRAM → CXL-SSD)
+---------------------------------------
+On a route with a flash-backed target (``RouteMap.ssd_tid > 0``) the
+page map becomes three-level — ``{0 DRAM, 1 CXL-DRAM, 2 CXL-SSD}`` —
+and each epoch boundary runs a second migration stage after the
+classic DRAM↔CXL one: hot level-2 pages (count >= ``threshold``)
+promote SSD→CXL (budget-bounded), then any level-1 population beyond
+``cxl_capacity_pages`` demotes its coldest pages CXL→SSD.  SSD→CXL
+promotion reads the page from the SSD target and writes its CXL
+endpoints; CXL→SSD demotion reads the endpoints and writes the SSD —
+all charged into the timing fixed point like every other migration.
+Rows without an SSD target (``ssd_tid == 0``) take the identical code
+path with the stage gated off, so legacy two-tier programs stay
+bitwise-unchanged (test-enforced).
 """
 from __future__ import annotations
 
@@ -65,7 +80,12 @@ SENTINEL = cache_mod.SENTINEL
 
 #: Column order of the per-slot counters returned by :func:`run_dynamic`
 #: (``slots[..., i]``) and :func:`host_simulate` (``HostResult.slots``).
+#: On three-tier rows, SSD-stage migrations fold into ``promoted`` /
+#: ``demoted`` (SSD→CXL counts as a promotion, CXL→SSD as a demotion).
 SLOT_FIELDS = ("acc_total", "acc_dram", "promoted", "demoted")
+
+#: "No capacity bound" sentinel for page-count scalars (fits int32).
+UNBOUNDED_PAGES = 1 << 30
 
 
 # ---------------------------------------------------------------------------
@@ -96,11 +116,17 @@ class DynamicTiering:
         ``None`` = unbounded (DRAM dwarfs the footprint).  Derive it
         from the shared :class:`repro.memory.tiering.TierSpec` via
         :func:`repro.memory.tiering.dynamic_tiering`.
+    cxl_capacity_pages : int, optional
+        CXL-DRAM (level-1) pages available before cold pages spill to
+        the CXL-SSD tier — only meaningful on a route with an SSD
+        target (``RouteMap.ssd_tid > 0``), ignored otherwise.  ``None``
+        = unbounded (nothing ever demotes to flash).
     """
     epoch_len: int = 4096
     budget: int = 8
     threshold: int = 1
     dram_capacity_pages: Optional[int] = None
+    cxl_capacity_pages: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.epoch_len < 1:
@@ -115,8 +141,10 @@ class DynamicTiering:
     def label(self) -> str:
         cap = ("" if self.dram_capacity_pages is None
                else f",cap={self.dram_capacity_pages}")
+        l1 = ("" if self.cxl_capacity_pages is None
+              else f",l1cap={self.cxl_capacity_pages}")
         return (f"tpp(e={self.epoch_len},k={self.budget},"
-                f"t={self.threshold}{cap})")
+                f"t={self.threshold}{cap}{l1})")
 
 
 def describe(tiering: Optional[DynamicTiering]) -> str:
@@ -174,7 +202,7 @@ def decode_hot_key(key, n_pages: int, xp=jnp):
 class DynOutputs(NamedTuple):
     """Per-row outputs of :func:`run_dynamic` (leading batch axis B)."""
     stats: Array      # (B, nstats(T)) final cache/tier counters
-    page_map: Array   # (B, P) final page -> {0 DRAM, 1 CXL} intent
+    page_map: Array   # (B, P) final page -> {0 DRAM, 1 CXL[, 2 SSD]} intent
     mig_read: Array   # (B, T) migration lines read per target
     mig_write: Array  # (B, T) migration lines written per target
     slots: Array      # (B, E, 4) per-slot counters, see SLOT_FIELDS
@@ -189,8 +217,13 @@ def _migration_step(pmap, counts, ptl, page_ids, pvalid, rank,
 
     Returns ``(new_pmap, pro_lines, dem_lines, n_pro, n_dem)`` — all
     already gated by ``do_mig`` (no-ops otherwise).
+
+    Only level-1 (CXL-DRAM) pages are promotion candidates — on a
+    two-tier map ``pmap == 1`` and the historical ``pmap != 0`` select
+    the same set, and level-2 (SSD) pages have their own stage
+    (:func:`_ssd_stage`).
     """
-    is_cxl = (pmap != 0) & pvalid
+    is_cxl = (pmap == 1) & pvalid
     is_dram = (pmap == 0) & pvalid
     hot = is_cxl & (counts >= threshold)
     pkey = jnp.where(hot, encode_hot_key(counts, page_ids, n_pages_key),
@@ -220,6 +253,46 @@ def _migration_step(pmap, counts, ptl, page_ids, pvalid, rank,
     return new_pmap, pro_lines, dem_lines, n_pro, n_dem
 
 
+def _ssd_stage(pmap, counts, ptl, page_ids, pvalid, rank,
+               budget, threshold, cxl_cap, do_ssd, cmax,
+               n_pages_key: int, k_max: int):
+    """The three-tier second stage: SSD↔CXL-DRAM traffic at a boundary.
+
+    Runs after :func:`_migration_step` on its rewritten map.  Hot
+    level-2 pages (count >= ``threshold``) promote SSD→CXL, bounded by
+    ``budget``; then any level-1 population beyond ``cxl_cap`` demotes
+    its coldest pages CXL→SSD (also budget-bounded).  ``do_ssd`` gates
+    the whole stage — rows without an SSD target run the identical
+    arithmetic with every mask false, leaving the map and the migration
+    totals bitwise-untouched.
+
+    Returns ``(new_pmap, sup_lines, over_lines, n_sup, n_over)`` with
+    ``sup_lines``/``over_lines`` the CXL-endpoint line attribution of
+    the promoted/demoted pages (the SSD side is ``n * LINES_PER_PAGE``
+    at the SSD target, charged by the caller).
+    """
+    hot2 = (pmap == 2) & pvalid & (counts >= threshold)
+    skey = jnp.where(hot2, encode_hot_key(counts, page_ids, n_pages_key),
+                     jnp.int32(-1))
+    svals, sidx = jax.lax.top_k(skey, k_max)
+    smask = (svals >= 0) & (rank < budget) & do_ssd
+    n_sup = smask.sum().astype(jnp.int32)
+    new_pmap = pmap.at[sidx].set(jnp.where(smask, 1, pmap[sidx]))
+
+    is_l1 = (new_pmap == 1) & pvalid
+    over = jnp.clip(is_l1.sum().astype(jnp.int32) - cxl_cap, 0, budget)
+    okey = jnp.where(is_l1,
+                     encode_hot_key(cmax - counts, page_ids, n_pages_key),
+                     jnp.int32(-1))
+    ovals, oidx = jax.lax.top_k(okey, k_max)
+    omask = (ovals >= 0) & (rank < over) & do_ssd
+    n_over = omask.sum().astype(jnp.int32)
+    new_pmap = new_pmap.at[oidx].set(jnp.where(omask, 2, new_pmap[oidx]))
+    sup_lines = (ptl[sidx] * smask[:, None]).sum(axis=0)   # (T,) to CXL
+    over_lines = (ptl[oidx] * omask[:, None]).sum(axis=0)  # (T,) from CXL
+    return new_pmap, sup_lines, over_lines, n_sup, n_over
+
+
 def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
                consts, carry, xs):
     """One epoch slot for one row: the shared scan body.
@@ -230,7 +303,7 @@ def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
     arithmetic through the carry — segmented and resident epoch programs
     are bitwise-equal (test-enforced).
     """
-    (flag, npg, bud, thr, per, cap, s_w, s_m, s_p,
+    (flag, npg, bud, thr, per, cap, ssd_t, l1cap, s_w, s_m, s_p,
      ptl, page_ids, pvalid, rank) = consts
     lpp = jnp.int32(LINES_PER_PAGE)
     l1p, l2p, stats, t, pmap, counts, mig_rd, mig_wr, eidx = carry
@@ -238,9 +311,11 @@ def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
     page = jnp.clip(a_s // lpp, 0, n_p - 1)
     intent = pmap[page]
     # dynamic rows: page map decides DRAM vs the precomputed CXL
-    # target; static rows use the precomputed target verbatim
+    # target (level-2 pages hit the SSD target instead); static rows
+    # use the precomputed target verbatim
     tgt = jnp.where(flag != 0,
-                    jnp.where(intent == 0, 0, tr_s), tr_s)
+                    jnp.where(intent == 0, 0,
+                              jnp.where(intent >= 2, ssd_t, tr_s)), tr_s)
     acc_t = v_s.sum().astype(jnp.int32)
     acc_d = (v_s & (jnp.where(flag != 0, intent, tgt) == 0)) \
         .sum().astype(jnp.int32)
@@ -268,8 +343,16 @@ def _slot_step(p: cache_mod.CacheParams, k_max: int, cmax, n_p: int,
     # to DRAM; demotions read DRAM + write the CXL endpoints
     mig_rd = mig_rd + pro_tl.at[0].add(n_dem * lpp)
     mig_wr = mig_wr + dem_tl.at[0].add(n_pro * lpp)
+    # three-tier rows: SSD→CXL promotion reads the SSD target and
+    # writes the page's CXL endpoints; CXL→SSD demotion the reverse
+    do_ssd = do_mig & (ssd_t > 0)
+    new_pmap, sup_tl, over_tl, n_sup, n_over = _ssd_stage(
+        new_pmap, counts, ptl, page_ids, pvalid, rank,
+        bud, thr, l1cap, do_ssd, cmax, n_p, k_max)
+    mig_rd = mig_rd + over_tl.at[ssd_t].add(n_sup * lpp)
+    mig_wr = mig_wr + sup_tl.at[ssd_t].add(n_over * lpp)
     counts = jnp.where(boundary, 0, counts)
-    ys = jnp.stack([acc_t, acc_d, n_pro, n_dem])
+    ys = jnp.stack([acc_t, acc_d, n_pro + n_sup, n_dem + n_over])
     carry = (l1p, l2p, stats, t, new_pmap, counts,
              mig_rd, mig_wr, eidx)
     return carry, (ys, stats, meas)
@@ -307,6 +390,7 @@ def _run_dynamic_segment_impl(p: cache_mod.CacheParams, k_max: int,
                               dyn_flag: Array, n_pages: Array,
                               budget: Array, threshold: Array,
                               period: Array, dram_cap: Array,
+                              ssd_tid: Array, cxl_cap: Array,
                               page_target_lines: Array,
                               s_warm: Array, s_meas: Array,
                               s_per: Array):
@@ -320,21 +404,21 @@ def _run_dynamic_segment_impl(p: cache_mod.CacheParams, k_max: int,
     cmax = jnp.int32(count_bound)
     valid = addr != SENTINEL
 
-    def one(c, a, w, cr, tr, v, flag, npg, bud, thr, per, cap, ptl,
-            sw, sm, sp):
+    def one(c, a, w, cr, tr, v, flag, npg, bud, thr, per, cap, ssd_t,
+            l1cap, ptl, sw, sm, sp):
         page_ids = jnp.arange(n_p, dtype=jnp.int32)
         pvalid = page_ids < npg
         rank = jnp.arange(k_max, dtype=jnp.int32)
-        consts = (flag, npg, bud, thr, per, cap, sw, sm, sp, ptl,
-                  page_ids, pvalid, rank)
+        consts = (flag, npg, bud, thr, per, cap, ssd_t, l1cap, sw, sm,
+                  sp, ptl, page_ids, pvalid, rank)
         body = functools.partial(_slot_step, p, k_max, cmax, n_p, consts)
         c, (slots, snaps, meas) = jax.lax.scan(body, c, (a, w, cr, tr, v))
         return c, slots, snaps, meas
 
     return jax.vmap(one)(carry, addr, is_write, core, tier, valid,
                          dyn_flag, n_pages, budget, threshold, period,
-                         dram_cap, page_target_lines, s_warm, s_meas,
-                         s_per)
+                         dram_cap, ssd_tid, cxl_cap, page_target_lines,
+                         s_warm, s_meas, s_per)
 
 
 @functools.lru_cache(maxsize=None)
@@ -347,7 +431,8 @@ def _dyn_segment_stepper(donate: bool):
 def run_dynamic_segment(p: cache_mod.CacheParams, k_max: int,
                         count_bound: int, carry, addr, is_write, core,
                         tier, dyn_flag, n_pages, budget, threshold,
-                        period, dram_cap, page_target_lines,
+                        period, dram_cap, ssd_tid, cxl_cap,
+                        page_target_lines,
                         s_warm=None, s_meas=None, s_per=None,
                         *, donate: bool = False,
                         backend: str = "reference"):
@@ -365,13 +450,16 @@ def run_dynamic_segment(p: cache_mod.CacheParams, k_max: int,
     s_warm = z if s_warm is None else jnp.asarray(s_warm, jnp.int32)
     s_meas = z if s_meas is None else jnp.asarray(s_meas, jnp.int32)
     s_per = z if s_per is None else jnp.asarray(s_per, jnp.int32)
+    ssd_tid = z if ssd_tid is None else jnp.asarray(ssd_tid, jnp.int32)
+    cxl_cap = (jnp.full((b,), UNBOUNDED_PAGES, jnp.int32)
+               if cxl_cap is None else jnp.asarray(cxl_cap, jnp.int32))
     if backend == "pallas":
         from repro.kernels import ops
         return ops.mesi_dyn_segment(
             carry, addr, is_write, core, tier, dyn_flag, n_pages, budget,
-            threshold, period, dram_cap, page_target_lines, s_warm,
-            s_meas, s_per, params=p, k_max=int(k_max),
-            count_bound=int(count_bound))
+            threshold, period, dram_cap, ssd_tid, cxl_cap,
+            page_target_lines, s_warm, s_meas, s_per, params=p,
+            k_max=int(k_max), count_bound=int(count_bound))
     if backend != "reference":
         raise ValueError(f"unknown backend {backend!r}; "
                          "pick from ('reference', 'pallas')")
@@ -379,7 +467,7 @@ def run_dynamic_segment(p: cache_mod.CacheParams, k_max: int,
     return _dyn_segment_stepper(donate)(
         p, k_max, count_bound, carry, addr, is_write, core, tier,
         dyn_flag, n_pages, budget, threshold, period, dram_cap,
-        page_target_lines, s_warm, s_meas, s_per)
+        ssd_tid, cxl_cap, page_target_lines, s_warm, s_meas, s_per)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
@@ -387,7 +475,8 @@ def _run_dynamic(p: cache_mod.CacheParams, k_max: int, count_bound: int,
                  addr: Array, is_write: Array, core: Array, tier: Array,
                  dyn_flag: Array, page_map0: Array, n_pages: Array,
                  budget: Array, threshold: Array, period: Array,
-                 dram_cap: Array, page_target_lines: Array,
+                 dram_cap: Array, ssd_tid: Array, cxl_cap: Array,
+                 page_target_lines: Array,
                  s_warm: Array, s_meas: Array, s_per: Array
                  ) -> DynOutputs:
     """The epoch-structured batch program (see :func:`run_dynamic`).
@@ -399,7 +488,7 @@ def _run_dynamic(p: cache_mod.CacheParams, k_max: int, count_bound: int,
     carry, slots, snaps, meas = _run_dynamic_segment_impl(
         p, k_max, count_bound, carry, addr, is_write, core, tier,
         dyn_flag, n_pages, budget, threshold, period, dram_cap,
-        page_target_lines, s_warm, s_meas, s_per)
+        ssd_tid, cxl_cap, page_target_lines, s_warm, s_meas, s_per)
     _, _, stats, _, pmap_f, _, mig_rd, mig_wr, _ = carry
     return DynOutputs(stats, pmap_f, mig_rd, mig_wr, slots, snaps, meas)
 
@@ -407,6 +496,7 @@ def _run_dynamic(p: cache_mod.CacheParams, k_max: int, count_bound: int,
 def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
                         k_max: int, dyn_flag, page_map0, n_pages, budget,
                         threshold, period, dram_cap, page_target_lines,
+                        ssd_tid=None, cxl_cap=None,
                         s_warm=None, s_meas=None, s_per=None):
     """Validate + reshape :func:`run_dynamic` inputs to slot-major form.
 
@@ -423,10 +513,15 @@ def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
     scan_scalars`); ``None`` (or all-zero) rows measure every slot —
     the exact path.
 
+    ``ssd_tid`` / ``cxl_cap`` are the three-tier per-row scalars
+    (:class:`DynamicTiering.cxl_capacity_pages` and the route's SSD
+    target id); ``None`` rows are two-tier — ``ssd_tid`` 0 and
+    ``cxl_cap`` :data:`UNBOUNDED_PAGES` gate the SSD stage off.
+
     Returns ``(a3, w3, c3, t3, page_map0, scalars, k_max,
     count_bound)`` where ``scalars = (dyn_flag, n_pages, budget,
-    threshold, period, dram_cap, page_target_lines, s_warm, s_meas,
-    s_per)``.
+    threshold, period, dram_cap, ssd_tid, cxl_cap, page_target_lines,
+    s_warm, s_meas, s_per)``.
     """
     addr = jnp.asarray(addr, jnp.int32)
     if addr.ndim != 2:
@@ -464,6 +559,9 @@ def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
                jnp.asarray(threshold, jnp.int32),
                jnp.asarray(period, jnp.int32),
                jnp.asarray(dram_cap, jnp.int32),
+               zb if ssd_tid is None else jnp.asarray(ssd_tid, jnp.int32),
+               (jnp.full((b,), UNBOUNDED_PAGES, jnp.int32)
+                if cxl_cap is None else jnp.asarray(cxl_cap, jnp.int32)),
                jnp.asarray(page_target_lines, jnp.int32),
                zb if s_warm is None else jnp.asarray(s_warm, jnp.int32),
                zb if s_meas is None else jnp.asarray(s_meas, jnp.int32),
@@ -475,7 +573,8 @@ def prep_dynamic_inputs(addr, is_write, core, tier, *, slot_len: int,
 def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
                 *, slot_len: int, k_max: int, dyn_flag, page_map0,
                 n_pages, budget, threshold, period, dram_cap,
-                page_target_lines, s_warm=None, s_meas=None, s_per=None,
+                page_target_lines, ssd_tid=None, cxl_cap=None,
+                s_warm=None, s_meas=None, s_per=None,
                 segment_slots: Optional[int] = None,
                 backend: str = "reference") -> DynOutputs:
     """Run a `(B, N)` batch under epoch-based dynamic tiering.
@@ -512,6 +611,12 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
         Lines of each page per CXL endpoint under the row's committed
         HDM decode (:meth:`RouteMap.page_target_lines`) — the migration
         traffic attribution table.
+    ssd_tid, cxl_cap : (B,) int32, optional
+        Three-tier scalars: the row's SSD target id (0 = no SSD tier)
+        and the CXL-DRAM (level-1) capacity in pages before cold pages
+        spill to flash.  ``None`` = every row two-tier (``ssd_tid`` 0,
+        ``cxl_cap`` :data:`UNBOUNDED_PAGES`) — bitwise-equal to the
+        historical two-tier program (test-enforced).
     segment_slots : int, optional
         Stream the epoch program in segments of this many slots: one
         device call per segment with the full tierer carry (cache state,
@@ -537,6 +642,7 @@ def run_dynamic(p: cache_mod.CacheParams, addr, is_write, core, tier,
             dyn_flag=dyn_flag, page_map0=page_map0, n_pages=n_pages,
             budget=budget, threshold=threshold, period=period,
             dram_cap=dram_cap, page_target_lines=page_target_lines,
+            ssd_tid=ssd_tid, cxl_cap=cxl_cap,
             s_warm=s_warm, s_meas=s_meas, s_per=s_per)
     e = a3.shape[1]
     if segment_slots is None and backend == "reference":
@@ -588,7 +694,9 @@ class HostResult:
 def host_simulate(tiering: Optional[DynamicTiering], addr, cxl_target,
                   page_map0, n_pages: int, page_target_lines,
                   slot_len: int, *, valid=None,
-                  dram_capacity_pages: Optional[int] = None) -> HostResult:
+                  dram_capacity_pages: Optional[int] = None,
+                  ssd_tid: int = 0,
+                  cxl_capacity_pages: Optional[int] = None) -> HostResult:
     """Replay the device epoch loop in NumPy (single row).
 
     The migration decisions depend only on the trace and the map
@@ -618,6 +726,11 @@ def host_simulate(tiering: Optional[DynamicTiering], addr, cxl_target,
         Defaults to ``addr != SENTINEL``.
     dram_capacity_pages : int, optional
         Overrides ``tiering.dram_capacity_pages``.
+    ssd_tid : int
+        SSD target id of the route (0 = no SSD tier; the SSD stage
+        never fires and level-2 intents are impossible).
+    cxl_capacity_pages : int, optional
+        Overrides ``tiering.cxl_capacity_pages``.
 
     Returns
     -------
@@ -643,7 +756,12 @@ def host_simulate(tiering: Optional[DynamicTiering], addr, cxl_target,
     cap = dram_capacity_pages
     if cap is None:
         cap = (tiering.dram_capacity_pages if tiering is not None else None)
-    cap = (1 << 30) if cap is None else int(cap)
+    cap = UNBOUNDED_PAGES if cap is None else int(cap)
+    l1cap = cxl_capacity_pages
+    if l1cap is None:
+        l1cap = (tiering.cxl_capacity_pages if tiering is not None else None)
+    l1cap = UNBOUNDED_PAGES if l1cap is None else int(l1cap)
+    ssd_tid = int(ssd_tid)
 
     e = n // slot_len
     cmax = period * slot_len + 1
@@ -658,7 +776,8 @@ def host_simulate(tiering: Optional[DynamicTiering], addr, cxl_target,
         sl = slice(ei * slot_len, (ei + 1) * slot_len)
         page = np.clip(addr[sl] // LINES_PER_PAGE, 0, n_p - 1)
         intent = pmap[page]
-        tgt = np.where(intent == 0, 0, cxl_target[sl])
+        tgt = np.where(intent == 0, 0,
+                       np.where(intent >= 2, ssd_tid, cxl_target[sl]))
         target[sl] = tgt
         v = valid[sl]
         slots[ei, 0] = v.sum()
@@ -666,7 +785,7 @@ def host_simulate(tiering: Optional[DynamicTiering], addr, cxl_target,
         np.add.at(counts, page, v.astype(np.int64))
         if (ei + 1) % period == 0:
             if budget > 0:
-                hot = (pmap != 0) & pvalid & (counts >= threshold)
+                hot = (pmap == 1) & pvalid & (counts >= threshold)
                 n_want = min(budget, int(hot.sum()))
                 free = max(cap - int(((pmap == 0) & pvalid).sum()), 0)
                 n_dem_needed = min(max(n_want - free, 0), budget)
@@ -690,6 +809,32 @@ def host_simulate(tiering: Optional[DynamicTiering], addr, cxl_target,
                 mig_wr[0] += n_pro * LINES_PER_PAGE
                 slots[ei, 2] = n_pro
                 slots[ei, 3] = n_dem
+                if ssd_tid > 0:
+                    # SSD stage (mirrors _ssd_stage): hot level-2 pages
+                    # promote to CXL, then level-1 overflow spills back
+                    hot2 = (pmap == 2) & pvalid & (counts >= threshold)
+                    skey = np.where(
+                        hot2, encode_hot_key(counts, page_ids, n_p, np), -1)
+                    sorder = np.argsort(-skey, kind="stable")
+                    n_sup = min(budget, int(hot2.sum()))
+                    sup = sorder[:n_sup]
+                    pmap[sup] = 1
+                    is_l1 = (pmap == 1) & pvalid
+                    over = min(max(int(is_l1.sum()) - l1cap, 0), budget)
+                    okey = np.where(
+                        is_l1,
+                        encode_hot_key(cmax - counts, page_ids, n_p, np),
+                        -1)
+                    oorder = np.argsort(-okey, kind="stable")
+                    n_over = min(over, int(is_l1.sum()))
+                    down = oorder[:n_over]
+                    pmap[down] = 2
+                    mig_rd += ptl[down].sum(axis=0)
+                    mig_rd[ssd_tid] += n_sup * LINES_PER_PAGE
+                    mig_wr += ptl[sup].sum(axis=0)
+                    mig_wr[ssd_tid] += n_over * LINES_PER_PAGE
+                    slots[ei, 2] += n_sup
+                    slots[ei, 3] += n_over
             counts[:] = 0
     return HostResult(target=target, page_map=pmap.astype(np.int32),
                       mig_read=mig_rd, mig_write=mig_wr, slots=slots)

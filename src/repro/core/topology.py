@@ -38,17 +38,27 @@ class TopologyError(RuntimeError):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class CXLMemDevice:
-    """A Type-3 CXL memory expander endpoint (SLD; MLD hooks via ld_count)."""
+    """A Type-3 CXL memory expander endpoint (SLD; MLD hooks via ld_count).
+
+    ``media`` distinguishes the backing store behind the .mem interface:
+    ``"dram"`` (the paper's expander cards) or ``"flash"`` — a CXL-SSD
+    whose asymmetric media latency and internal DRAM cache are priced by
+    :class:`repro.core.timing.SSDTiming` (the third tier the dynamic
+    tierer demotes cold pages into; see docs/fidelity.md).
+    """
     name: str
     capacity: int                      # bytes
     serial: int = 0
     ld_count: int = 1                  # 1 => SLD
+    media: str = "dram"                # 'dram' | 'flash'
     registers: regs.EndpointRegisters = dataclasses.field(
         default_factory=regs.EndpointRegisters)
 
     def __post_init__(self) -> None:
         if self.capacity % ALIGN:
             raise TopologyError("device capacity must be 256MiB-aligned")
+        if self.media not in ("dram", "flash"):
+            raise TopologyError(f"unknown media {self.media!r}")
         self.registers.mailbox.device = self
 
     # Mailbox command handler — the device side of the doorbell protocol.
@@ -162,13 +172,18 @@ class System:
 
     def add_expander(self, name: str, capacity: int,
                      bridge_uid: Optional[int] = None,
-                     ld_count: int = 1) -> CXLMemDevice:
+                     ld_count: int = 1,
+                     media: str = "dram") -> CXLMemDevice:
         """Attach an expander card below (a possibly new) host bridge.
 
         ld_count > 1 attaches a **Multi-Logical-Device** (beyond the paper's
         v1.0 SLD scope): capacity splits into `ld_count` equal partitions,
         each enumerated as its own region / zNUMA node, with the LD id
         carried in the CXL.mem packet headers (spec DVSEC ID 9).
+
+        ``media="flash"`` attaches a CXL-SSD (flash-backed expander with
+        an internal DRAM cache); give it its own ``bridge_uid`` so it
+        enumerates as its own CFMWS window / region.
         """
         if bridge_uid is None:
             bridge_uid = len(self.root_complex.host_bridges)
@@ -184,7 +199,7 @@ class System:
                 raise TopologyError("an MLD must own its host bridge")
         dev = CXLMemDevice(name=name, capacity=capacity,
                            serial=len(hb.root_ports) + 1000 * bridge_uid,
-                           ld_count=ld_count)
+                           ld_count=ld_count, media=media)
         if ld_count > 1:   # one decoder per logical device, both levels
             dev.registers.component = regs.HostBridgeRegisters(
                 n_decoders=max(2, ld_count))

@@ -610,7 +610,8 @@ def mesi_segment(carry, addr: Array, is_write: Array, core: Array,
 #: :func:`repro.core.tiering_dyn.run_dynamic_segment` followed by the two
 #: scalar carry components (logical clock, epoch-slot index).
 DYN_SCALARS = ("dyn_flag", "n_pages", "budget", "threshold", "period",
-               "dram_cap", "s_warm", "s_meas", "s_per", "t0", "eidx0")
+               "dram_cap", "ssd_tid", "cxl_cap", "s_warm", "s_meas",
+               "s_per", "t0", "eidx0")
 
 
 def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
@@ -666,11 +667,13 @@ def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
     thr = sc_ref[0, 3]
     per = sc_ref[0, 4]
     cap = sc_ref[0, 5]
-    s_w = sc_ref[0, 6]
-    s_m = sc_ref[0, 7]
-    s_p = sc_ref[0, 8]
-    t0 = sc_ref[0, 9]
-    eidx0 = sc_ref[0, 10]
+    ssd_t = sc_ref[0, 6]
+    l1cap = sc_ref[0, 7]
+    s_w = sc_ref[0, 8]
+    s_m = sc_ref[0, 9]
+    s_p = sc_ref[0, 10]
+    t0 = sc_ref[0, 11]
+    eidx0 = sc_ref[0, 12]
     lpp = jnp.int32(LINES_PER_PAGE)
     base_t = t0 + j * slot_len
     eidx = eidx0 + j                      # slot index entering this slot
@@ -688,9 +691,12 @@ def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
         intent = pmap_s[page]
         tr_s = tier_ref[0, 0, i]
         # dynamic rows: page map decides DRAM vs the precomputed CXL
-        # target; static rows use the precomputed target verbatim
+        # target (level-2 pages hit the SSD target instead); static
+        # rows use the precomputed target verbatim
         tgt = jnp.where(flag != 0,
-                        jnp.where(intent == 0, 0, tr_s), tr_s)
+                        jnp.where(intent == 0, 0,
+                                  jnp.where(intent >= 2, ssd_t, tr_s)),
+                        tr_s)
         _mesi_access(l1t, l1u, l1s, l2t, l2u, l2s, l2tier, l2sh, stats,
                      a_raw, w_ref[0, 0, i], core_ref[0, 0, i], tgt,
                      base_t + i, meas, cores=cores, l1_sets=l1_sets,
@@ -711,7 +717,7 @@ def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
     pvalid = page_ids < npg
     pmap = pmap_s[...]
     counts = counts_s[...]
-    is_cxl = (pmap != 0) & pvalid
+    is_cxl = (pmap == 1) & pvalid
     is_dram = (pmap == 0) & pvalid
     hot = is_cxl & (counts >= thr)
     n_hot = hot.sum().astype(jnp.int32)
@@ -754,10 +760,55 @@ def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
     # DRAM; demotions read DRAM + write the CXL endpoints
     migr_s[...] = migr_s[...] + pro_l.at[0].add(n_dem * lpp)
     migw_s[...] = migw_s[...] + dem_l.at[0].add(n_pro * lpp)
+
+    # ---- three-tier SSD stage (tiering_dyn._ssd_stage twin) ----
+    ssd_i = (do_mig & (ssd_t > 0)).astype(jnp.int32)
+    pmap2 = pmap_s[...]
+    hot2 = (pmap2 == 2) & pvalid & (counts >= thr)
+    n_sup = jnp.minimum(jnp.minimum(hot2.sum().astype(jnp.int32), bud),
+                        km) * ssd_i
+    skey = jnp.where(hot2, encode_hot_key(counts, page_ids, n_p), neg)
+
+    def sup_body(r, sel):
+        sk, sup_l = sel
+        ri = jnp.int32(r)
+        si = jnp.argmax(sk).astype(jnp.int32)
+        take_s = (ri < n_sup).astype(jnp.int32)
+        pmap_s[si] = jnp.where(ri < n_sup, 1, pmap_s[si])
+        sup_l = sup_l + ptl_ref[0, si, :] * take_s
+        sk = sk.at[si].set(neg)
+        return sk, sup_l
+
+    _, sup_l = jax.lax.fori_loop(0, k_max, sup_body, (skey, zt))
+    pmap3 = pmap_s[...]
+    is_l1 = (pmap3 == 1) & pvalid
+    n_l1 = is_l1.sum().astype(jnp.int32)
+    over = jnp.clip(n_l1 - l1cap, 0, bud)
+    n_over = jnp.minimum(jnp.minimum(over, n_l1), km) * ssd_i
+    okey = jnp.where(is_l1,
+                     encode_hot_key(jnp.int32(count_bound) - counts,
+                                    page_ids, n_p), neg)
+
+    def over_body(r, sel):
+        ok, over_l = sel
+        ri = jnp.int32(r)
+        oi = jnp.argmax(ok).astype(jnp.int32)
+        take_o = (ri < n_over).astype(jnp.int32)
+        pmap_s[oi] = jnp.where(ri < n_over, 2, pmap_s[oi])
+        over_l = over_l + ptl_ref[0, oi, :] * take_o
+        ok = ok.at[oi].set(neg)
+        return ok, over_l
+
+    _, over_l = jax.lax.fori_loop(0, k_max, over_body, (okey, zt))
+    # SSD promotion reads the SSD target + writes the CXL endpoints;
+    # SSD demotion the reverse
+    migr_s[...] = migr_s[...] + over_l.at[ssd_t].add(n_sup * lpp)
+    migw_s[...] = migw_s[...] + sup_l.at[ssd_t].add(n_over * lpp)
     counts_s[...] = jnp.where(boundary, 0, counts_s[...])
 
     # per-slot outputs (every slot publishes its own block)
-    slots_ref[0, 0, :] = jnp.stack([acc_t, acc_d, n_pro, n_dem])
+    slots_ref[0, 0, :] = jnp.stack([acc_t, acc_d, n_pro + n_sup,
+                                    n_dem + n_over])
     snaps_ref[0, 0, :] = stats[...]
     meas_ref[0, 0] = meas
 
@@ -783,7 +834,8 @@ def _mesi_dyn_kernel(addr_ref, w_ref, core_ref, tier_ref, sc_ref, ptl_ref,
                                              "count_bound", "interpret"))
 def mesi_dyn_segment(carry, addr: Array, is_write: Array, core: Array,
                      tier: Array, dyn_flag, n_pages, budget, threshold,
-                     period, dram_cap, page_target_lines, s_warm, s_meas,
+                     period, dram_cap, ssd_tid, cxl_cap,
+                     page_target_lines, s_warm, s_meas,
                      s_per, *, params: CacheParams, k_max: int,
                      count_bound: int, interpret: bool = True):
     """Advance the batched epoch carry over a (B, E, slot_len) segment.
@@ -819,6 +871,7 @@ def mesi_dyn_segment(carry, addr: Array, is_write: Array, core: Array,
 
     sc = jnp.stack([i32(dyn_flag), i32(n_pages), i32(budget),
                     i32(threshold), i32(period), i32(dram_cap),
+                    i32(ssd_tid), i32(cxl_cap),
                     i32(s_warm), i32(s_meas), i32(s_per),
                     i32(t), i32(eidx)], axis=1)
 

@@ -1,17 +1,28 @@
-"""Optimizer-state offload schedule over the CXL tier, overlap-aware.
+"""Offload paths over the CXL tiers: optimizer state and cold KV pages.
 
-Turns a :class:`repro.memory.tiering.MemoryPlan` into a per-step timeline:
-spilled moment shards stream back layer-by-layer during the backward pass
-(prefetch k layers ahead), are updated, and stream out during the next
-forward — so transfer overlaps compute and only the non-overlapped residue
-lengthens the step.  The timeline arithmetic is exactly a two-resource
-(compute pipe / CXL link) interval schedule; this is where the paper's
-bandwidth calibration (§V) becomes a training-throughput statement.
+Two consumers share this module:
+
+* :func:`schedule` turns a :class:`repro.memory.tiering.MemoryPlan` into a
+  per-step timeline: spilled moment shards stream back layer-by-layer
+  during the backward pass (prefetch k layers ahead), are updated, and
+  stream out during the next forward — so transfer overlaps compute and
+  only the non-overlapped residue lengthens the step.  The timeline
+  arithmetic is exactly a two-resource (compute pipe / CXL link) interval
+  schedule; this is where the paper's bandwidth calibration (§V) becomes a
+  training-throughput statement.
+* :func:`kv_offload_tiers` deepens the paged KV cache's two-level
+  residency (:meth:`repro.memory.kvcache.PagedKVCache.tier_snapshot`)
+  into the simulator's three-level map: CXL-resident pages beyond a
+  budget — coldest first by last use — are demoted to the CXL-SSD tier
+  (level 2), which :meth:`repro.core.route.RouteMap.targets_of_tiered_lines`
+  routes to the flash expander.  See ``docs/fidelity.md``.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.timing import TimingConfig
 from repro.memory.tiering import MemoryPlan
@@ -76,3 +87,45 @@ def schedule(plan: MemoryPlan, *, n_layers: int, step_compute_s: float,
                    transfer_s) if transfer_s > 0 else 1.0
     return OffloadSchedule(events, step_compute_s, transfer_s, step_total,
                            round(min(1.0, overlap_eff), 4))
+
+
+def kv_offload_tiers(tier_snapshot: np.ndarray, last_use: np.ndarray, *,
+                     cxl_page_budget: int) -> np.ndarray:
+    """Three-level page map from the KV cache's two-level residency.
+
+    Pages the cache reports HBM-resident stay at level 0; CXL-resident
+    pages stay at level 1 up to ``cxl_page_budget``, and the *coldest*
+    CXL pages beyond the budget (smallest ``last_use``, page index as a
+    deterministic tiebreak) are demoted to level 2 (CXL-SSD).  A
+    non-positive budget sends every CXL page to the SSD tier.
+
+    Parameters
+    ----------
+    tier_snapshot : (n_pages,) int array
+        Per-page residency from
+        :meth:`repro.memory.kvcache.PagedKVCache.tier_snapshot`
+        (0 = HBM, 1 = CXL).
+    last_use : (n_pages,) int array
+        The cache's LRU clock (:attr:`PagedKVCache.last_use`); larger =
+        hotter.
+    cxl_page_budget : int
+        CXL-DRAM pages retained at level 1.
+
+    Returns
+    -------
+    (n_pages,) int32 array
+        Per-page tier intent in {0, 1, 2}, ready for a workload tier
+        stream or :class:`repro.core.numa.ExplicitPageMap`-style seeding.
+    """
+    tiers = np.asarray(tier_snapshot, np.int32).copy()
+    last = np.asarray(last_use, np.int64)
+    if tiers.shape != last.shape:
+        raise ValueError(f"tier snapshot covers {tiers.shape[0]} pages, "
+                         f"last_use covers {last.shape[0]}")
+    cxl_pages = np.flatnonzero(tiers == 1)
+    n_over = cxl_pages.shape[0] - max(int(cxl_page_budget), 0)
+    if n_over > 0:
+        # coldest first: ascending last_use, then page index (stable)
+        order = cxl_pages[np.argsort(last[cxl_pages], kind="stable")]
+        tiers[order[:n_over]] = 2
+    return tiers

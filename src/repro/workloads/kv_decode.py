@@ -35,6 +35,7 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.core.spec import CACHELINE_BYTES
 from repro.memory.kvcache import CXL, PagedKVCache
+from repro.memory.offload import kv_offload_tiers
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.workloads.base import Workload, WorkloadTrace, pages_for_lines
 
@@ -65,6 +66,14 @@ class KVDecode(Workload):
         working set lives on (or is demoted to) the CXL tier.
     max_pool_pages : int
         Pool-size cap, bounding trace length at large sweep footprints.
+    ssd_cold_offload : int
+        When positive, the CXL-DRAM page budget: CXL-resident pages
+        beyond it — coldest first by the cache's LRU clock — are
+        offloaded to the CXL-SSD tier and emit tier-2 intent, which
+        :meth:`repro.core.route.RouteMap.targets_of_tiered_lines` routes
+        to the flash expander (:func:`repro.memory.offload.
+        kv_offload_tiers`).  0 (default) keeps the two-level HBM/CXL
+        stream bitwise-unchanged.
     """
     arch: str = "granite-3-8b"
     seed: int = 3
@@ -73,6 +82,7 @@ class KVDecode(Workload):
     page_size: int = 8
     hbm_fraction: float = 0.25
     max_pool_pages: int = 96
+    ssd_cold_offload: int = 0
 
     name = "kv_decode"
 
@@ -159,14 +169,21 @@ def _kv_scenario(wl: KVDecode, footprint_bytes: int
         kv.append_tokens(req.rid, 0, zeros(req.prompt_len),
                          zeros(req.prompt_len))
 
+    def tier3(snapshot):
+        # cold-CXL -> SSD demotion from the cache's own LRU clock
+        return kv_offload_tiers(snapshot, kv.last_use,
+                                cxl_page_budget=wl.ssd_cold_offload)
+
     def decode_fn(seq_ids):
         tier_now = kv.tier_snapshot()          # residency at access time
+        tmap = tier3(tier_now) if wl.ssd_cold_offload > 0 else None
         rp: List[int] = []
         rt: List[int] = []
         for sid in seq_ids:                    # context gather, page-major
             table = kv.block_tables[sid]
             rp.extend(table)
-            rt.extend(int(tier_now[p] == CXL) for p in table)
+            rt.extend((int(tier_now[p] == CXL) if tmap is None
+                       else int(tmap[p])) for p in table)
         kv.gather_args(seq_ids)                # charge fetches, promote hot
         wp, wo, wt, out = [], [], [], {}
         for sid in seq_ids:                    # append this step's token
@@ -177,7 +194,8 @@ def _kv_scenario(wl: KVDecode, footprint_bytes: int
                       lines_per_page - 1)
             wp.append(page)
             wo.append(off)
-            wt.append(int(kv.tier[page] == CXL))
+            wt.append(int(kv.tier[page] == CXL) if wl.ssd_cold_offload <= 0
+                      else int(tier3(kv.tier_snapshot())[page]))
             out[sid] = 0
         steps.append((np.asarray(rp, np.int32), np.asarray(rt, np.int32),
                       np.asarray(wp, np.int32), np.asarray(wo, np.int32),

@@ -19,7 +19,7 @@ from repro.core.machine import CPUModel
 from repro.core.resilience import (Fault, FaultPlan, RunKilled, RunReport)
 from repro.core.sampling import SamplingSpec
 from repro.core.tiering_dyn import DynamicTiering
-from repro.core.timing import TimingConfig
+from repro.core.timing import LatencyDistribution, TimingConfig
 
 RNG = np.random.default_rng(9)
 
@@ -131,6 +131,46 @@ def test_sampled_sweep_parity():
     rows = engine.run_sweep(
         spec("pallas", tiering=DYN_AXIS, sampling=sampling), CACHE,
         TIMING)
+    assert rows == legacy
+
+
+# ---------------------------------------------------------------------------
+# latency distributions + the CXL-SSD third tier (ISSUE 10)
+# ---------------------------------------------------------------------------
+SSD_TIERS = (None, DynamicTiering(epoch_len=512, budget=4, threshold=2,
+                                  cxl_capacity_pages=4))
+SSD_TOPO = (route_mod.direct(1, ssd_gib=16),)
+DIST_AXIS = (None, LatencyDistribution(n_samples=128, seed=7))
+
+
+def test_distribution_ssd_sweep_parity():
+    # distribution timing and the SSD tier in one grid: every row —
+    # percentile columns, SSD-target counters, off rows — bitwise-equal
+    # across backends (the percentiles are host-side NumPy over integer
+    # device stats, so parity of the stats implies parity of the tails)
+    kw = dict(topologies=SSD_TOPO, tiering=SSD_TIERS,
+              distributions=DIST_AXIS)
+    legacy = engine.run_sweep(spec(**kw), CACHE, TIMING)
+    rows = engine.run_sweep(spec("pallas", **kw), CACHE, TIMING)
+    assert rows == legacy
+
+
+def test_three_tier_checkpoint_cross_backend_resume(tmp_path):
+    # a reference-run checkpoint of a three-tier (SSD-demoting) sweep
+    # restores under pallas: the 9-tuple epoch carry is shared unchanged
+    kw = dict(topologies=SSD_TOPO, tiering=SSD_TIERS)
+    legacy = engine.run_sweep(spec(**kw), CACHE, TIMING)
+    pol = distribute.resilience.CheckpointPolicy(tmp_path / "ckpt",
+                                                 every_segments=1,
+                                                 blocking=True)
+    plan = FaultPlan((Fault("crash", shard=0, segment=1),))
+    with pytest.raises(RunKilled):
+        distribute.run_sweep(spec(**kw), CACHE, TIMING,
+                             stream_chunk=1024, resume=pol,
+                             fault_plan=plan)
+    rows = distribute.run_sweep(spec("pallas", **kw), CACHE, TIMING,
+                                stream_chunk=1024, resume=pol,
+                                report=RunReport())
     assert rows == legacy
 
 

@@ -110,6 +110,27 @@ def _sampling_rows() -> list:
     return rows
 
 
+def _fidelity_rows() -> list:
+    """The fidelity family: hot/cold on a direct1+ssd topology with a
+    three-tier dynamic tierer, distributions axis (off, dist(n=128)) in
+    ONE program — pinning the SSD-target counters and the
+    ``lat_*_p50/p95/p99_ns`` percentile columns bitwise (the off row
+    doubles as a mixed-program legacy-equality fixture)."""
+    from repro.core.tiering_dyn import DynamicTiering
+    from repro.core.timing import LatencyDistribution
+    from repro.workloads import HotCold
+    spec = engine.SweepSpec(
+        footprint_factors=(8,), policies=(numa.ZNuma(1.0),), cpus=_CPU,
+        workloads=(HotCold(hot_page_frac=0.25),),
+        topologies=(route_mod.direct(1, ssd_gib=16),),
+        tiering=(DynamicTiering(epoch_len=2048, budget=16, threshold=8,
+                                cxl_capacity_pages=8),),
+        distributions=(None, LatencyDistribution(n_samples=128, seed=0)))
+    rows = engine.run_sweep(spec, _CACHE, _TIMING)
+    assert len(rows) == 2
+    return rows
+
+
 GOLDEN_CASES = {
     "engine": _engine_row,
     "topology": _topology_row,
@@ -117,6 +138,7 @@ GOLDEN_CASES = {
     "distribute": _distribute_rows,
     "resilience": _resilience_rows,
     "sampling": _sampling_rows,
+    "fidelity": _fidelity_rows,
 }
 
 

@@ -61,6 +61,16 @@ def summarize(name: str, d: dict) -> str:
                 f"counters within ci95="
                 f"{d.get('all_counters_within_ci95')}; worst rel error "
                 f"{w.get('counter')}={w.get('rel_error')}")
+    if name == "fidelity":
+        tail = d.get("tail_p99_over_p50", {})
+        ssd = tail.get("ssd0", "?")
+        return (f"p99/p50 tail ratio ssd={ssd} "
+                f"({d.get('percentile_triples_checked')} triples "
+                f"p50<=p95<=p99); off-rows bitwise-legacy="
+                f"{d.get('off_rows_bitwise_equal_legacy')}; mshr cap "
+                f"{d.get('mshr_cxl_cap')} slows "
+                f"{d.get('mshr_max_slowdown')}x; pallas parity="
+                f"{d.get('pallas_rows_bitwise_equal')}")
     if name == "tiering":
         return (f"hot_cold dynamic-vs-static effective-bw win "
                 f"{d.get('hot_cold_effective_bw_win')}x at "
